@@ -1,0 +1,73 @@
+"""Paper Figs. 14–15 (§6.1 case study): budget relaxation vs system
+complexity. Sweep budgets ×1/×2/×4 and report block counts, memory size,
+NoC frequency, and heterogeneity (coefficient of variation) of the converged
+designs — FARSI must spend relaxed budgets on *simpler* systems."""
+from __future__ import annotations
+
+import statistics
+from typing import List
+
+from repro.core import Explorer, ExplorerConfig, HardwareDatabase, ar_complex, calibrated_budget
+from repro.core.blocks import BlockKind
+
+from .common import Row
+
+SEEDS = (1, 2)
+SCALES = (1.0, 2.0, 4.0)
+
+
+def run() -> List[Row]:
+    db = HardwareDatabase()
+    g = ar_complex()
+    base = calibrated_budget(db)
+    rows: List[Row] = []
+    for scale in SCALES:
+        pes, nocs, mems, mem_bytes, noc_freqs = [], [], [], [], []
+        cv_links, cv_mem, cv_freq, alps, traffic = [], [], [], [], []
+        for seed in SEEDS:
+            res = Explorer(
+                g, db, base.scaled(scale), ExplorerConfig(max_iterations=500, seed=seed)
+            ).run()
+            d = res.best_design
+            c = d.block_counts()
+            pes.append(c["pe"])
+            nocs.append(c["noc"])
+            mems.append(c["mem"])
+            mem_bytes.append(sum(res.best_result.mem_capacity_bytes.values()))
+            noc_freqs.append(
+                statistics.mean(d.blocks[n].freq_mhz for n in d.nocs())
+            )
+            cv_links.append(d.heterogeneity_cv(BlockKind.NOC, "n_links"))
+            cv_mem.append(d.heterogeneity_cv(BlockKind.MEM, "width_bytes"))
+            cv_freq.append(d.heterogeneity_cv(BlockKind.NOC, "freq_mhz"))
+            alps.append(res.best_result.avg_accel_parallelism)
+            traffic.append(res.best_result.total_traffic_bytes)
+        rows.append(
+            (
+                f"fig14.budget_{scale:g}x",
+                0.0,
+                f"pe={statistics.mean(pes):.1f} noc={statistics.mean(nocs):.1f} "
+                f"mem={statistics.mean(mems):.1f} mem_bytes={statistics.mean(mem_bytes):.2e} "
+                f"noc_freq={statistics.mean(noc_freqs):.0f}MHz",
+            )
+        )
+        rows.append(
+            (
+                f"fig15.heterogeneity_{scale:g}x",
+                0.0,
+                f"cv_noc_links={statistics.mean(cv_links):.2f} "
+                f"cv_mem_width={statistics.mean(cv_mem):.2f} "
+                f"cv_noc_freq={statistics.mean(cv_freq):.2f}",
+            )
+        )
+        # Fig 16: system dynamics — tighter budgets need more accelerator-
+        # level parallelism and move more traffic
+        rows.append(
+            (
+                f"fig16.dynamics_{scale:g}x",
+                0.0,
+                f"alp={statistics.mean(alps):.2f} "
+                f"traffic_bytes={statistics.mean(traffic):.2e}",
+            )
+        )
+    return rows

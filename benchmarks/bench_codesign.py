@@ -1,0 +1,54 @@
+"""Paper Fig. 10: co-design deployment rates per vector (10b) and their
+convergence contribution (10c); plus the co-design ON/OFF ablation (§5.3:
+'embedding the same co-design capabilities in regular SA does not necessarily
+translate to design improvements')."""
+from __future__ import annotations
+
+import statistics
+from typing import List
+
+from repro.core import Explorer, ExplorerConfig, HardwareDatabase, ar_complex, calibrated_budget
+from repro.core.codesign import VECTORS
+
+from .common import Row
+
+SEEDS = (1, 2, 3)
+
+
+def run() -> List[Row]:
+    db = HardwareDatabase()
+    g = ar_complex()
+    bud = calibrated_budget(db)
+    rows: List[Row] = []
+
+    summaries = []
+    for seed in SEEDS:
+        res = Explorer(g, db, bud, ExplorerConfig(max_iterations=500, seed=seed)).run()
+        summaries.append(res.ledger.summary())
+    for v in VECTORS:
+        sw = statistics.mean(s[v]["switch_rate"] for s in summaries)
+        cc = statistics.mean(s[v]["convergence_contribution"] for s in summaries)
+        rows.append((f"fig10.{v}", 0.0, f"switch_rate={sw:.2f} convergence_contrib={cc*100:.1f}%"))
+
+    # ON/OFF ablation at fixed iteration budget
+    for label, codesign, awareness in (
+        ("farsi_codesign_on", True, "farsi"),
+        ("farsi_codesign_off", False, "farsi"),
+        ("sa_codesign_on", True, "sa"),
+    ):
+        iters, dists = [], []
+        for seed in SEEDS:
+            res = Explorer(
+                g, db, bud,
+                ExplorerConfig(awareness=awareness, codesign=codesign, max_iterations=400, seed=seed),
+            ).run()
+            iters.append(res.iterations if res.converged else 400)
+            dists.append(res.best_distance.city_block())
+        rows.append(
+            (
+                f"fig10c.{label}",
+                0.0,
+                f"iters_avg={statistics.mean(iters):.0f} dist_avg={statistics.mean(dists):.3f}",
+            )
+        )
+    return rows

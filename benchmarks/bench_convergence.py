@@ -1,0 +1,87 @@
+"""Paper Fig. 9: convergence of the DSE.
+
+9a — simulator agility's impact: the same heuristic with the phase-driven
+simulator vs the event-driven reference as its inner loop (the paper
+extrapolates PA; we actually run both and extrapolate per-sim cost).
+9b — architecture awareness: SA / Task-aware / Task&Block-aware / FARSI
+distance-vs-iteration, averaged over seeds.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import List
+
+from repro.core import (
+    AWARENESS_LEVELS,
+    Explorer,
+    ExplorerConfig,
+    HardwareDatabase,
+    ar_complex,
+    calibrated_budget,
+    simulate_events,
+)
+
+from .common import Row
+
+SEEDS = (1, 2, 3)
+MAX_ITERS = 600
+
+
+def run() -> List[Row]:
+    db = HardwareDatabase()
+    g = ar_complex()
+    bud = calibrated_budget(db)
+    rows: List[Row] = []
+
+    # --- 9b: awareness ladder -------------------------------------------
+    per_level = {}
+    for level in AWARENESS_LEVELS:
+        iters, dists, walls, blocks, conv = [], [], [], [], 0
+        for seed in SEEDS:
+            ex = Explorer(g, db, bud, ExplorerConfig(awareness=level, max_iterations=MAX_ITERS, seed=seed))
+            res = ex.run()
+            iters.append(res.iterations if res.converged else MAX_ITERS)
+            dists.append(res.best_distance.city_block())
+            walls.append(res.wall_s)
+            blocks.append(sum(res.best_design.block_counts().values()))
+            conv += res.converged
+        per_level[level] = statistics.mean(iters)
+        rows.append(
+            (
+                f"fig9b.{level}",
+                statistics.mean(walls) * 1e6,
+                f"iters_avg={statistics.mean(iters):.0f} dist_avg={statistics.mean(dists):.3f} "
+                f"converged={conv}/{len(SEEDS)} blocks_avg={statistics.mean(blocks):.1f}",
+            )
+        )
+    if per_level["farsi"] > 0:
+        rows.append(
+            (
+                "fig9b.speedup_vs_sa",
+                0.0,
+                f"sa/farsi={per_level['sa']/per_level['farsi']:.1f}x "
+                f"task/farsi={per_level['task']/per_level['farsi']:.1f}x "
+                f"task_block/farsi={per_level['task_block']/per_level['farsi']:.1f}x",
+            )
+        )
+
+    # --- 9a: simulator agility -------------------------------------------
+    ex = Explorer(g, db, bud, ExplorerConfig(max_iterations=MAX_ITERS, seed=1))
+    res = ex.run()
+    phase_wall = res.wall_s
+    n_sims = res.n_sims
+    # measured per-sim cost of the reference simulator on the final design
+    t0 = time.perf_counter()
+    simulate_events(res.best_design, g, db, max_chunks=128)
+    event_per_sim = time.perf_counter() - t0
+    est_event_wall = event_per_sim * n_sims
+    rows.append(
+        (
+            "fig9a.convergence_time",
+            phase_wall * 1e6,
+            f"farsi_sim={phase_wall:.1f}s est_with_event_sim={est_event_wall:.0f}s "
+            f"ratio={est_event_wall/max(phase_wall,1e-9):.0f}x sims={n_sims}",
+        )
+    )
+    return rows

@@ -1,0 +1,67 @@
+"""Paper Fig. 17 (§6.2): divide-and-conquer suboptimality.
+
+Myopic budgeting: split the system budget across workloads a priori
+(power-proportional, as the paper does from isolated estimates), optimize
+each workload in isolation, and compose. Full-fledged FARSI: one exploration
+over the merged TDG with the system budget. Report the power/area degradation
+of the composed design vs holistic FARSI."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import (
+    Budget,
+    Explorer,
+    ExplorerConfig,
+    HardwareDatabase,
+    all_workloads,
+    ar_complex,
+    calibrated_budget,
+)
+
+from .common import Row
+
+# isolated power estimates → a-priori budget split (paper problem 1)
+MYOPIC_SHARE = {"audio": 0.15, "cava": 0.6, "ed": 0.25}
+
+
+def run() -> List[Row]:
+    db = HardwareDatabase()
+    sys_budget = calibrated_budget(db)
+    rows: List[Row] = []
+
+    # --- holistic ---------------------------------------------------------
+    res_h = Explorer(ar_complex(), db, sys_budget, ExplorerConfig(max_iterations=600, seed=4)).run()
+    p_h, a_h = res_h.best_result.power_w, res_h.best_result.area_mm2
+
+    # --- myopic: optimize each workload against its slice ------------------
+    p_m = a_m = 0.0
+    met = []
+    for name, g in all_workloads().items():
+        bud = Budget(
+            latency_s={name: sys_budget.latency_s[name]},
+            power_w=sys_budget.power_w * MYOPIC_SHARE[name],
+            area_mm2=sys_budget.area_mm2 * MYOPIC_SHARE[name],
+        )
+        res = Explorer(g, db, bud, ExplorerConfig(max_iterations=400, seed=4)).run()
+        p_m += res.best_result.power_w
+        a_m += res.best_result.area_mm2
+        met.append(f"{name}:dist={res.best_distance.city_block():.2f}")
+
+    rows.append(
+        (
+            "fig17.holistic",
+            0.0,
+            f"power={p_h*1e3:.1f}mW area={a_h:.2f}mm2 converged={res_h.converged}",
+        )
+    )
+    rows.append(
+        (
+            "fig17.myopic_budgeting",
+            0.0,
+            f"power={p_m*1e3:.1f}mW area={a_m:.2f}mm2 "
+            f"degradation_power={100*(p_m-p_h)/p_h:.0f}% "
+            f"degradation_area={100*(a_m-a_h)/a_h:.0f}% [{' '.join(met)}]",
+        )
+    )
+    return rows

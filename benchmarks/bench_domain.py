@@ -1,0 +1,52 @@
+"""Paper Figs. 12–13: domain awareness. Per-workload comp/comm boundedness
+encountered during exploration (12), and FARSI's response — where it spends
+its moves (13): TaLP exploitation (fork/migrate) vs LLP exploitation
+(customization swaps), comp vs comm focus."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import (
+    Explorer,
+    ExplorerConfig,
+    HardwareDatabase,
+    all_workloads,
+    calibrated_budget,
+)
+
+from .common import Row
+
+
+def run() -> List[Row]:
+    db = HardwareDatabase()
+    rows: List[Row] = []
+    bud_all = calibrated_budget(db)
+    for name, g in all_workloads().items():
+        from repro.core.budgets import Budget
+
+        bud = Budget(
+            latency_s={name: bud_all.latency_s[name]},
+            power_w=bud_all.power_w,
+            area_mm2=bud_all.area_mm2,
+        )
+        res = Explorer(g, db, bud, ExplorerConfig(max_iterations=400, seed=2)).run()
+        # Fig 12: boundedness seen by the simulator on the final design
+        b = res.best_result.bottleneck_s
+        tot = sum(b.values()) or 1.0
+        comp = b["pe"] / tot
+        comm = (b["mem"] + b["noc"]) / tot
+        # Fig 13: move mix = parallelism (fork/migrate) vs customization (swap)
+        hist = res.ledger.move_histogram()
+        talp_moves = hist.get("fork", 0) + hist.get("migrate", 0)
+        llp_moves = hist.get("swap", 0) + hist.get("fork_swap", 0)
+        comm_focus = sum(1 for r in res.ledger.records if r.comm_comp == "comm")
+        rows.append(
+            (
+                f"fig12_13.{name}",
+                0.0,
+                f"comp_bound={comp:.2f} comm_bound={comm:.2f} "
+                f"talp_moves={talp_moves} llp_moves={llp_moves} "
+                f"comm_focus_iters={comm_focus} converged={res.converged}",
+            )
+        )
+    return rows

@@ -1,0 +1,58 @@
+"""Paper Fig. 8: DSE time breakdown. The paper profiles design duplication at
+79.9% of generation time (naive deepcopy); we measure our structured clone vs
+the deepcopy reference, and the end-to-end split between simulation and
+generation — the motivation for the vmap'd batched evaluator
+(core/phase_sim_jax.py)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import Design, Explorer, ExplorerConfig, HardwareDatabase, ar_complex, calibrated_budget, simulate
+
+from .common import Row, timeit
+
+
+def run() -> List[Row]:
+    db = HardwareDatabase()
+    g = ar_complex()
+    # a moderately complex design from a short exploration
+    res = Explorer(g, db, calibrated_budget(db), ExplorerConfig(max_iterations=150, seed=6)).run()
+    d = res.best_design
+
+    t_clone = timeit(d.clone, n=20)
+    t_deep = timeit(d.deep_clone_reference, n=20)
+    t_sim = timeit(lambda: simulate(d, g, db), n=10)
+
+    rows = [
+        ("fig8.design_clone", t_clone, f"structured_clone; deepcopy={t_deep:.0f}us speedup={t_deep/max(t_clone,1e-9):.1f}x"),
+        ("fig8.simulate", t_sim, f"blocks={sum(d.block_counts().values())} phases={simulate(d, g, db).n_phases}"),
+        (
+            "fig8.clone_share",
+            0.0,
+            f"clone_share_ours={t_clone/(t_clone+t_sim)*100:.0f}% "
+            f"clone_share_deepcopy={t_deep/(t_deep+t_sim)*100:.0f}% (paper: 79.9%)",
+        ),
+    ]
+
+    # beyond-paper: vmap'd batched neighbour evaluation (single-NoC regime)
+    import jax
+
+    from repro.core.phase_sim_jax import EncodedWorkload, encode_batch, simulate_batch
+    from tests.test_phase_sim_jax import _random_single_noc_designs
+
+    enc = EncodedWorkload.of(g)
+    designs = _random_single_noc_designs(g, 64, seed=5)
+    batch = encode_batch(designs, g, db, enc)
+    fn = jax.jit(lambda *a: simulate_batch(enc, *a))
+    jax.block_until_ready(fn(*batch)["latency_s"])  # compile once
+    t_batch = timeit(lambda: jax.block_until_ready(fn(*batch)["latency_s"]), n=5)
+    t_python = timeit(lambda: [simulate(dd, g, db) for dd in designs], n=3)
+    rows.append(
+        (
+            "fig8.vmap_batch64",
+            t_batch,
+            f"python_loop={t_python:.0f}us speedup={t_python/max(t_batch,1e-9):.1f}x "
+            f"per_design={t_batch/64:.1f}us (batched SA neighbour evaluation)",
+        )
+    )
+    return rows

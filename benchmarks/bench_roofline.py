@@ -1,0 +1,67 @@
+"""§Roofline table: all (arch × shape) baseline cells on the single-pod mesh.
+
+Per cell: the three terms (compute / HBM / ICI seconds), dominant bottleneck,
+MODEL_FLOPS, MODEL_FLOPS / executed-FLOPs ratio, the FARSI phase-sim step
+estimate, and — when the dry-run JSON records exist (experiments/dryrun) —
+the compiled memory analysis and whole-graph collective parse for
+cross-reference."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import arch_names, get_config
+from repro.core.tpu_design import simulate_step
+from repro.roofline.analytic import MeshShape, model_flops
+from repro.sharding.rules import DistConfig
+
+from .common import Row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def baseline_dist(cfg) -> DistConfig:
+    rules = {
+        "qkv": ("model",), "kv_qkv": ("model",), "mlp": ("model",),
+        "ssm_inner": ("model",), "ssm_conv": ("model",), "expert_mlp": ("model",),
+        "seq_res": ("model",), "embed": ("data",),
+    }
+    micro = 8 if cfg.param_counts()["total"] >= 50e9 else 4
+    return DistConfig(rules=rules, microbatches=micro)
+
+
+def run() -> List[Row]:
+    mesh = MeshShape(16, 16)
+    rows: List[Row] = []
+    for arch in arch_names():
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            if not shape_applicable(cfg, shape):
+                rows.append((f"roofline.{arch}.{shape_name}", 0.0, "SKIP=needs-subquadratic-attn"))
+                continue
+            dist = baseline_dist(cfg)
+            t = simulate_step(cfg, shape, mesh, dist)
+            mf = model_flops(cfg, shape)
+            ratio = mf / (t["flops"] * mesh.chips)
+            frac = mf / mesh.chips / 197e12 / t["t_phase_sim_s"] if t["t_phase_sim_s"] else 0
+            derived = (
+                f"t_comp={t['t_compute_s']:.3e} t_hbm={t['t_memory_s']:.3e} "
+                f"t_ici={t['t_collective_s']:.3e} dom={t['dominant']} "
+                f"sim={t['t_phase_sim_s']:.3e} model_flops={mf:.3e} "
+                f"useful_ratio={ratio:.2f} roofline_frac={frac*100:.1f}%"
+            )
+            tag = f"{arch}_{shape_name}_16x16.json"
+            path = os.path.join(DRYRUN_DIR, tag)
+            if os.path.exists(path):
+                rec = json.load(open(path))
+                mem = rec.get("memory", {})
+                coll = rec.get("collectives", {})
+                derived += (
+                    f" | dryrun: temp={mem.get('temp_bytes', 0)/1e9:.1f}GB "
+                    f"args={mem.get('argument_bytes', 0)/1e9:.1f}GB "
+                    f"hlo_coll={coll.get('total', 0)/1e9:.2f}GB(1-visit)"
+                )
+            rows.append((f"roofline.{arch}.{shape_name}", t["t_phase_sim_s"] * 1e6, derived))
+    return rows

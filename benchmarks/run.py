@@ -1,0 +1,60 @@
+"""Benchmark harness — one bench per paper table/figure plus the §Roofline
+table. Prints ``name,us_per_call,derived`` CSV per row.
+
+  table4b   simulator accuracy + speedup vs the event-driven reference
+  fig8      DSE time breakdown (design duplication hot-spot)
+  fig9      convergence: simulator agility (9a) + awareness ladder (9b)
+  fig10     co-design rates, contributions, ON/OFF ablation
+  fig12/13  domain awareness (boundedness + parallelism exploitation)
+  fig14/15  budget relaxation vs system complexity/heterogeneity
+  fig17     divide-and-conquer suboptimality
+  roofline  all (arch × shape) baseline roofline terms
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (
+    bench_budget_sweep,
+    bench_codesign,
+    bench_convergence,
+    bench_divide_conquer,
+    bench_domain,
+    bench_generation,
+    bench_roofline,
+    bench_sim_validation,
+)
+from .common import emit
+
+BENCHES = {
+    "table4b": bench_sim_validation,
+    "fig8": bench_generation,
+    "fig9": bench_convergence,
+    "fig10": bench_codesign,
+    "fig12_13": bench_domain,
+    "fig14_15": bench_budget_sweep,
+    "fig17": bench_divide_conquer,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=sorted(BENCHES), default=None)
+    args = ap.parse_args()
+    names = args.only or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            rows = BENCHES[name].run()
+        except Exception as e:  # keep the harness running; report the failure
+            print(f"{name}.ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+            continue
+        emit(rows)
+        print(f"{name}.wall,{(time.perf_counter()-t0)*1e6:.0f},bench wall time", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,265 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: hypothesis → change → measure → validate cycles on
+the three selected cells (see EXPERIMENTS.md §Perf for the selection
+rationale):
+
+  1. qwen3-moe-235b-a22b × train_4k   — worst roofline fraction, most
+     collective-bound (EP all-to-all dominated)
+  2. qwen3-1.7b × train_4k            — worst MODEL/executed-FLOPs ratio;
+     the "small model over-TP'd on a big mesh" pathology
+  3. gemma-7b × decode_32k            — memory-bound serving cell whose
+     baseline cache did not fit HBM (19.6 GB temps vs 16 GB)
+
+Each iteration records: hypothesis (napkin math), the knob changed, the
+analytic/phase-sim terms before/after, and a verdict. Moves that change the
+*lowered program* (sharding rules, remat, kv-quant) are additionally
+compile-validated: the cell is re-lowered on the production mesh and the
+compiled memory analysis + HLO collective parse are recorded next to the
+baseline dry-run record.
+
+  PYTHONPATH=src python experiments/hillclimb.py
+"""
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.configs.registry import get_config  # noqa: E402
+from repro.launch.autotune import apply_move, estimate  # noqa: E402
+from repro.launch.dryrun import run_cell  # noqa: E402
+from repro.roofline.analytic import MeshShape, model_flops  # noqa: E402
+from repro.sharding.rules import DistConfig  # noqa: E402
+
+MESH = MeshShape(16, 16)
+OUT_DIR = os.path.join(os.path.dirname(__file__), "perf")
+os.makedirs(OUT_DIR, exist_ok=True)
+
+
+def tp_rules():
+    return {
+        "qkv": ("model",), "kv_qkv": ("model",), "mlp": ("model",),
+        "ssm_inner": ("model",), "ssm_conv": ("model",), "expert_mlp": ("model",),
+        "seq_res": ("model",), "embed": ("data",),
+    }
+
+
+def dp_rules():
+    """TP-off lowering rules: the model axis becomes extra data parallelism."""
+    return {
+        "qkv": None, "kv_qkv": None, "mlp": None, "ssm_inner": None,
+        "ssm_conv": None, "expert_mlp": None, "seq_res": None,
+        "act_heads": None, "act_kv_heads": None,
+        "batch": ("pod", "data", "model"), "exp_capacity": ("pod", "data", "model"),
+        "embed": ("data",),
+    }
+
+
+CELLS = {
+    "qwen3-moe-235b-a22b_train_4k": {
+        "arch": "qwen3-moe-235b-a22b",
+        "shape": "train_4k",
+        "micro": 8,
+        "moves": [
+            ("a2a_int8", "EP all-to-all dominates t_ici (~75%): int8 dispatch payload halves it"),
+            ("remat_none", "collective replay: full remat re-runs every fwd collective (mult 4→3) "
+                           "→ −25% ici; hypothesis: SP keeps the larger stack affordable. "
+                           "COMPILE-REFUTED: real lowering shows 214.6 GB/device temps "
+                           "(remat-off saves ALL intermediates — dispatch buffers + expert "
+                           "activations, not just the residual stack the napkin math counted). "
+                           "Reverted; see EXPERIMENTS.md §Perf."),
+            ("cf_down", "capacity factor 1.25→1.0: dispatch volume ×0.8 on both a2a bytes "
+                        "and expert FLOPs (dropped-token rate rises ~3%→8% on balanced load)"),
+            ("grad_int8", "remaining grad_sync is fp32 reduce-scatter: EF-int8 quarters it"),
+        ],
+        "compile_refuted": {"remat_none"},
+        "real_dist": lambda: DistConfig(
+            rules=tp_rules(), microbatches=8, capacity_factor=1.0, moe_impl="shard_map"
+        ),
+        "real_note": "compile-validated: shard_map MoE dispatch + capacity_factor=1.0 — "
+                     "temps 18.1→16.0 GB, HLO collectives 10.2→3.5 GB/visit (the dense "
+                     "dispatch at cf=1.0 regressed to 97.9 GB: SPMD's scatter heuristics "
+                     "flip at the power-of-two capacity — one more reason the explicit "
+                     "all-to-all path is the production one). a2a_int8/grad_int8 are "
+                     "payload-dtype changes modeled analytically (EF-int8 implemented in "
+                     "optim/compress.py); remat=none was compile-refuted (214 GB temps)",
+    },
+    "qwen3-1.7b_train_4k": {
+        "arch": "qwen3-1.7b",
+        "shape": "train_4k",
+        "micro": 4,
+        "moves": [
+            ("tp_off", "1.7B over 256 chips at TP=16 is boundary-collective bound "
+                       "(t_ici 10× t_comp) AND re-computes kv ×16 (kv 1024-dim < 16 heads): "
+                       "replicate weights, use the model axis as extra DP"),
+            ("kernel_attn", "with collectives gone, compute dominates; the Pallas kernel "
+                            "skips fully-masked causal blocks: attention core FLOPs ÷2"),
+            ("grad_int8", "grad all-reduce is now the only collective: EF-int8 ÷4"),
+        ],
+        "real_dist": lambda: DistConfig(rules=dp_rules(), microbatches=4),
+        "real_note": "compile-validated: TP-off rules (kernel runs on TPU only; "
+                     "its flop counts are exercised in tests/test_kernels.py)",
+    },
+    "mistral-large-123b_train_4k": {
+        "arch": "mistral-large-123b",
+        "shape": "train_4k",
+        "micro": 8,
+        "moves": [
+            ("tp_off", "kill TP boundary collectives like cell (b)? Napkin math says NO "
+                       "before trying: 123B fp32+opt replicated over the model axis = "
+                       "92 GB/device state — the state model rejects it (infeasible), "
+                       "the knob must not fire"),
+            ("ring_bidir", "TP is mandatory here, so attack the collective *schedule*: "
+                           "bidirectional ring uses both torus directions → boundary "
+                           "collective time ÷2"),
+            ("kernel_attn", "with ici halved, compute is near-binding: causal block-skip "
+                            "cuts the 88-layer attention core ÷2"),
+            ("grad_int8", "FSDP grad reduce-scatter in fp32 → EF-int8 ÷4"),
+        ],
+        "real_dist": lambda: DistConfig(rules=tp_rules(), microbatches=8),
+        "real_note": "compile-validated baseline only (ring schedule and payload dtypes "
+                     "are XLA/collective-config choices, modeled analytically; the "
+                     "tp_off rejection is the state-model guardrail working)",
+    },
+    "jamba-v0.1-52b_prefill_32k": {
+        "arch": "jamba-v0.1-52b",
+        "shape": "prefill_32k",
+        "micro": 8,
+        "moves": [],  # this cell's iterations are compile-measured (memory term)
+        "real_dist": lambda: DistConfig(rules=tp_rules(), moe_impl="shard_map"),
+        "real_note": (
+            "memory-capacity hillclimb, compile-measured: "
+            "(1) hypothesis 'SSD decay tensor (∝ chunk) dominates the 75.6 GB "
+            "temps' → ssd_chunk 64→32→16 measured 75.6/77.0/79.6 GB — REFUTED; "
+            "(2) buffer dump showed fp32[2.1M, 4096] MoE dispatch tensors "
+            "all-gathered by SPMD's unpartitionable scatter → shard_map "
+            "local-dispatch MoE (per-shard capacity + expert all-to-all) — "
+            "CONFIRMED: 75.6 → 14.4 GB/device (5.3×), compile 45 s → 10 s; "
+            "dense-path equivalence tested (tests/test_moe_shard_map.py)"
+        ),
+    },
+    "gemma-7b_decode_32k": {
+        "arch": "gemma-7b",
+        "shape": "decode_32k",
+        "micro": 1,
+        "moves": [
+            ("kv_int8", "decode = KV-cache-read roofline (cache 7.5 GB/dev of 10.5 ms "
+                        "t_hbm): int8+scale cache ÷1.9 bytes — also fixes the >16 GB "
+                        "HBM overflow of the baseline"),
+        ],
+        "real_dist": lambda: DistConfig(rules=tp_rules(), kv_quant="int8"),
+        "real_note": "compile-validated: int8 cache halves compiled argument+temp bytes "
+                     "(accuracy: ≤1.3% logit error, tests/test_train_serve-adjacent check)",
+    },
+}
+
+
+def run_one(tag: str, spec: dict) -> dict:
+    cfg = get_config(spec["arch"])
+    shape = SHAPES[spec["shape"]]
+    dist = DistConfig(rules=tp_rules(), microbatches=spec["micro"])
+    base = estimate(cfg, shape, MESH, dist)
+    mf = model_flops(cfg, shape)
+    frac0 = mf / MESH.chips / 197e12 / base["t_phase_sim_s"] * 100
+
+    record = {
+        "cell": tag,
+        "baseline": {k: base[k] for k in (
+            "t_compute_s", "t_memory_s", "t_collective_s", "t_phase_sim_s",
+            "hbm_state_bytes", "dominant")},
+        "baseline_roofline_frac_pct": frac0,
+        "iterations": [],
+    }
+    print(f"\n=== {tag} ===")
+    print(f"baseline: comp={base['t_compute_s']:.3e} hbm={base['t_memory_s']:.3e} "
+          f"ici={base['t_collective_s']:.3e} sim={base['t_phase_sim_s']:.3e} "
+          f"dom={base['dominant']} frac={frac0:.1f}%")
+
+    cur, cur_t = dist, base
+    refuted = spec.get("compile_refuted", set())
+    for knob, hypothesis in spec["moves"]:
+        applied = apply_move(cur, knob)
+        if applied is None:
+            print(f"  [skip] {knob} inapplicable")
+            continue
+        cand, auto_hyp = applied
+        cand_t = estimate(cfg, shape, MESH, cand)
+        improved = cand_t["t_phase_sim_s"] < cur_t["t_phase_sim_s"] * 0.999
+        verdict = "confirmed" if improved else "refuted"
+        if cand_t["hbm_state_bytes"] > 16e9 and cand_t["hbm_state_bytes"] > cur_t["hbm_state_bytes"] * 1.5:
+            verdict = (
+                f"rejected (HBM wall: {cand_t['hbm_state_bytes']/1e9:.0f} GB/device state)"
+            )
+            improved = False
+        if knob in refuted:
+            verdict = "compile-refuted"  # analytic win overturned by real lowering
+            improved = False
+        frac = mf / MESH.chips / 197e12 / cand_t["t_phase_sim_s"] * 100
+        it = {
+            "knob": knob,
+            "hypothesis": hypothesis,
+            "before": {k: cur_t[k] for k in ("t_compute_s", "t_memory_s", "t_collective_s", "t_phase_sim_s")},
+            "after": {k: cand_t[k] for k in ("t_compute_s", "t_memory_s", "t_collective_s", "t_phase_sim_s")},
+            "dominant_after": cand_t["dominant"],
+            "roofline_frac_pct": frac,
+            "verdict": verdict,
+        }
+        record["iterations"].append(it)
+        print(f"  {knob:12s} sim {cur_t['t_phase_sim_s']:.3e} -> {cand_t['t_phase_sim_s']:.3e} "
+              f"({cur_t['t_phase_sim_s']/cand_t['t_phase_sim_s']:.2f}x) "
+              f"dom->{cand_t['dominant']} frac={frac:.1f}%  [{verdict}]")
+        if improved:
+            cur, cur_t = cand, cand_t
+
+    record["tuned"] = {k: cur_t[k] for k in (
+        "t_compute_s", "t_memory_s", "t_collective_s", "t_phase_sim_s",
+        "hbm_state_bytes", "dominant")}
+    record["speedup_estimate"] = base["t_phase_sim_s"] / cur_t["t_phase_sim_s"]
+    record["tuned_roofline_frac_pct"] = mf / MESH.chips / 197e12 / cur_t["t_phase_sim_s"] * 100
+
+    # ---- real compile validation ----------------------------------------
+    print(f"  [compile-validate] {spec['real_note']}")
+    real = run_cell(spec["arch"], spec["shape"], multi_pod=False,
+                    dist=spec["real_dist"](), verbose=False)
+    record["real_tuned_dryrun"] = {
+        "ok": real["ok"],
+        "memory": real.get("memory"),
+        "collectives": real.get("collectives"),
+        "error": real.get("error"),
+    }
+    base_path = os.path.join(
+        os.path.dirname(__file__), "dryrun", f"{spec['arch']}_{spec['shape']}_16x16.json"
+    )
+    if os.path.exists(base_path):
+        b = json.load(open(base_path))
+        record["real_baseline_dryrun"] = {
+            "memory": b.get("memory"), "collectives": b.get("collectives")
+        }
+        bm, tm = b.get("memory", {}), real.get("memory", {})
+        bc, tc = b.get("collectives", {}), real.get("collectives", {})
+        if real["ok"]:
+            print(f"    temp {bm.get('temp_bytes',0)/1e9:.1f} -> {tm.get('temp_bytes',0)/1e9:.1f} GB | "
+                  f"args {bm.get('argument_bytes',0)/1e9:.1f} -> {tm.get('argument_bytes',0)/1e9:.1f} GB | "
+                  f"hlo collectives(1-visit) {bc.get('total',0)/1e9:.2f} -> {tc.get('total',0)/1e9:.2f} GB")
+        else:
+            print(f"    REAL VALIDATION FAILED: {real.get('error')}")
+    return record
+
+
+def main() -> None:
+    out = {}
+    for tag, spec in CELLS.items():
+        out[tag] = run_one(tag, spec)
+    with open(os.path.join(OUT_DIR, "hillclimb.json"), "w") as f:
+        json.dump(out, f, indent=2, default=str)
+    print(f"\nwrote {os.path.join(OUT_DIR, 'hillclimb.json')}")
+    for tag, r in out.items():
+        print(f"{tag}: {r['speedup_estimate']:.2f}x est, "
+              f"frac {r['baseline_roofline_frac_pct']:.1f}% -> {r['tuned_roofline_frac_pct']:.1f}%, "
+              f"real_ok={r['real_tuned_dryrun']['ok']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Fault-tolerant checkpointing.
+
+Layout:  <dir>/step_00000420/
+            meta.json            — step, treedef, shapes/dtypes, data state
+            arr_<flatkey>.npy    — one file per leaf
+
+Guarantees:
+  * atomic commit — writes land in ``.tmp-step_N`` and are os.rename()'d into
+    place, so a crash mid-save can never yield a half checkpoint that
+    ``latest_step`` would pick up;
+  * keep-N retention (oldest complete checkpoints pruned after commit);
+  * async mode — leaves are device_get'd synchronously (cheap) and written by
+    a background thread, overlapping serialization with the next train steps;
+  * elastic restore — leaves are re-placed with *target* shardings, so a
+    checkpoint written on one mesh restores onto any other mesh/topology
+    (runtime/elastic.py wires this to recovery-time mesh shrinking).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+def _flatten(tree) -> List[tuple]:
+    return jax.tree_util.tree_flatten_with_path(tree)[0]
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None) -> None:
+        """Snapshot ``state`` at ``step``. Device transfer happens here
+        (synchronously — the arrays are consistent); file IO may be async."""
+        self.wait()  # one outstanding async save at a time
+        leaves = _flatten(state)
+        host_leaves = [(p, np.asarray(jax.device_get(v))) for p, v in leaves]
+        meta = {
+            "step": step,
+            "extra": extra or {},
+            "leaves": [
+                {"key": _key_str(p), "shape": list(v.shape), "dtype": str(v.dtype)}
+                for p, v in host_leaves
+            ],
+        }
+
+        def write():
+            tmp = os.path.join(self.dir, f".tmp-step_{step:08d}")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            for p, v in host_leaves:
+                np.save(os.path.join(tmp, f"arr_{_key_str(p)}.npy"), v)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)  # atomic commit
+            self._prune()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep_n]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(
+        self,
+        target: Any,
+        step: Optional[int] = None,
+        shardings: Any = None,
+    ) -> tuple:
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs). If ``shardings`` (matching pytree of Shardings) is
+        given, leaves are placed with them — this is the elastic-resharding
+        path: the checkpoint is topology-free numpy, placement is the
+        caller's current mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(target)
+        shard_leaves = (
+            jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(leaves)
+        )
+        out = []
+        for (path, tgt), shd in zip(leaves, shard_leaves):
+            arr = np.load(os.path.join(d, f"arr_{_key_str(path)}.npy"))
+            assert tuple(arr.shape) == tuple(tgt.shape), (path, arr.shape, tgt.shape)
+            if shd is not None:
+                out.append(jax.device_put(arr.astype(tgt.dtype), shd))
+            else:
+                out.append(jax.numpy.asarray(arr, dtype=tgt.dtype))
+        state = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(target), out
+        )
+        return state, meta

@@ -1,0 +1,62 @@
+"""FARSI core: the paper's contribution (hybrid simulator + aware explorer).
+
+Public API re-exports. See DESIGN.md §2 for the paper→TPU mapping.
+"""
+from .blocks import Block, BlockKind, make_accelerator, make_gpp, make_mem, make_noc
+from .budgets import Budget, Distance, distance
+from .codesign import CodesignLedger, FocusRecord
+from .database import HardwareDatabase, TPUDatabase
+from .design import Design
+from .event_sim import simulate_events
+from .explorer import AWARENESS_LEVELS, ExplorationResult, Explorer, ExplorerConfig
+from .gables import TaskRates, bottleneck_of, completion_time, phase_rates
+from .phase_sim import SimResult, simulate
+from .tdg import Task, TaskGraph, merge_graphs, workload_of
+from .workloads import (
+    all_workloads,
+    ar_complex,
+    audio,
+    calibrated_budget,
+    cava,
+    edge_detection,
+    paper_budget,
+)
+
+__all__ = [
+    "Block",
+    "BlockKind",
+    "Budget",
+    "CodesignLedger",
+    "Design",
+    "Distance",
+    "ExplorationResult",
+    "Explorer",
+    "ExplorerConfig",
+    "FocusRecord",
+    "HardwareDatabase",
+    "SimResult",
+    "TPUDatabase",
+    "Task",
+    "TaskGraph",
+    "TaskRates",
+    "AWARENESS_LEVELS",
+    "all_workloads",
+    "ar_complex",
+    "audio",
+    "bottleneck_of",
+    "calibrated_budget",
+    "cava",
+    "completion_time",
+    "distance",
+    "edge_detection",
+    "make_accelerator",
+    "make_gpp",
+    "make_mem",
+    "make_noc",
+    "merge_graphs",
+    "paper_budget",
+    "phase_rates",
+    "simulate",
+    "simulate_events",
+    "workload_of",
+]

@@ -1,0 +1,148 @@
+"""A *design* = hardware blocks + topology + software→hardware mapping.
+
+Topology model (paper §3.2 "many NoC" systems): NoCs form a chain (a bus
+hierarchy); every PE and every MEM attaches to exactly one NoC. The route of a
+(task, buffer) pair is the NoC sub-chain between the task's PE and the buffer's
+MEM; every NoC on the route carries the traffic (multi-hop congestion, spatial
+locality = short routes).
+
+FARSI starts from the simplest base design — one GPP, one NoC, one DRAM
+(paper §3.3 "Development-cost Awareness") — and grows it incrementally via
+moves.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, List, Optional
+
+from .blocks import Block, BlockKind, make_gpp, make_mem, make_noc
+from .tdg import TaskGraph
+
+
+class Design:
+    def __init__(self) -> None:
+        self.blocks: Dict[str, Block] = {}
+        self.noc_chain: List[str] = []  # ordered NoC names
+        self.attached_noc: Dict[str, str] = {}  # PE/MEM name -> NoC name
+        self.task_pe: Dict[str, str] = {}  # task -> PE name
+        self.task_mem: Dict[str, str] = {}  # task buffer -> MEM name
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def base(tdg: TaskGraph) -> "Design":
+        """One GPP + one NoC + one DRAM; all tasks on the GPP, all buffers in
+        DRAM (paper: 'FARSI starts with a very simple base design')."""
+        d = Design()
+        noc = d.add_block(make_noc())
+        pe = d.add_block(make_gpp(), attach_to=noc.name)
+        mem = d.add_block(make_mem("dram"), attach_to=noc.name)
+        for t in tdg.tasks:
+            d.task_pe[t] = pe.name
+            d.task_mem[t] = mem.name
+        return d
+
+    # ---- block/topology editing ---------------------------------------
+    def add_block(self, block: Block, attach_to: Optional[str] = None,
+                  after_noc: Optional[str] = None) -> Block:
+        self.blocks[block.name] = block
+        if block.kind == BlockKind.NOC:
+            if after_noc is None:
+                self.noc_chain.append(block.name)
+            else:
+                self.noc_chain.insert(self.noc_chain.index(after_noc) + 1, block.name)
+        else:
+            assert attach_to is not None and self.blocks[attach_to].kind == BlockKind.NOC
+            self.attached_noc[block.name] = attach_to
+        return block
+
+    def remove_block(self, name: str) -> None:
+        blk = self.blocks.pop(name)
+        if blk.kind == BlockKind.NOC:
+            self.noc_chain.remove(name)
+        else:
+            self.attached_noc.pop(name)
+
+    def pes(self) -> List[str]:
+        return [n for n, b in self.blocks.items() if b.kind == BlockKind.PE]
+
+    def mems(self) -> List[str]:
+        return [n for n, b in self.blocks.items() if b.kind == BlockKind.MEM]
+
+    def nocs(self) -> List[str]:
+        return list(self.noc_chain)
+
+    def attached(self, noc_name: str) -> List[str]:
+        return [n for n, c in self.attached_noc.items() if c == noc_name]
+
+    # ---- routing -------------------------------------------------------
+    def route(self, task: str) -> List[str]:
+        """NoC names on the PE→MEM path of ``task`` (inclusive)."""
+        pe_noc = self.attached_noc[self.task_pe[task]]
+        mem_noc = self.attached_noc[self.task_mem[task]]
+        i, j = self.noc_chain.index(pe_noc), self.noc_chain.index(mem_noc)
+        lo, hi = min(i, j), max(i, j)
+        return self.noc_chain[lo:hi + 1]
+
+    def hops(self, task: str) -> int:
+        return len(self.route(task))
+
+    # ---- bookkeeping ----------------------------------------------------
+    def tasks_on_pe(self, pe: str) -> List[str]:
+        return [t for t, p in self.task_pe.items() if p == pe]
+
+    def buffers_on_mem(self, mem: str) -> List[str]:
+        return [t for t, m in self.task_mem.items() if m == mem]
+
+    def tasks_via_noc(self, noc: str) -> List[str]:
+        return [t for t in self.task_pe if noc in self.route(t)]
+
+    def clone(self) -> "Design":
+        """Design duplication — the paper's own profiled hot-spot (Fig. 8b:
+        79.9% of generation time). We keep it cheap: blocks are shallow-copied
+        via their own ``clone`` and mappings are dict copies (no generic
+        deepcopy). ``core/phase_sim_jax.py`` removes the need entirely by
+        evaluating flat-array encodings of neighbours under ``vmap``."""
+        d = Design.__new__(Design)
+        d.blocks = {}
+        rename: Dict[str, str] = {}
+        for name, b in self.blocks.items():
+            nb = b.clone()
+            rename[name] = nb.name
+            d.blocks[nb.name] = nb
+        d.noc_chain = [rename[n] for n in self.noc_chain]
+        d.attached_noc = {rename[k]: rename[v] for k, v in self.attached_noc.items()}
+        d.task_pe = {t: rename[p] for t, p in self.task_pe.items()}
+        d.task_mem = {t: rename[m] for t, m in self.task_mem.items()}
+        return d
+
+    def deep_clone_reference(self) -> "Design":
+        """Naive ``copy.deepcopy`` clone, kept as the reference the paper
+        profiles against (benchmarks/bench_generation.py measures both)."""
+        return copy.deepcopy(self)
+
+    # ---- complexity metrics (paper §6.1) --------------------------------
+    def block_counts(self) -> Dict[str, int]:
+        return {
+            "pe": len(self.pes()),
+            "mem": len(self.mems()),
+            "noc": len(self.nocs()),
+        }
+
+    def heterogeneity_cv(self, kind: BlockKind, knob: str) -> float:
+        """Coefficient of variation of a knob across blocks of one kind —
+        the paper's system-heterogeneity metric (Fig. 15)."""
+        vals = [getattr(b, knob) for b in self.blocks.values() if b.kind == kind]
+        if len(vals) < 2:
+            return 0.0
+        mean = sum(vals) / len(vals)
+        if mean == 0:
+            return 0.0
+        var = sum((v - mean) ** 2 for v in vals) / len(vals)
+        return (var ** 0.5) / mean
+
+    def signature(self) -> tuple:
+        return (
+            tuple(sorted(b.signature() for b in self.blocks.values())),
+            tuple(sorted(self.task_pe.items())),
+            tuple(sorted(self.task_mem.items())),
+        )

@@ -1,0 +1,342 @@
+"""Exploration heuristic (paper §3.3–3.4, Algorithm 1).
+
+Simulated annealing is the base search; FARSI augments its neighbour
+generation with architectural reasoning. A neighbour is produced by choosing
+the 5-tuple (Metric, Direction, Task, Block, Move):
+
+  metric    — the one farthest from budget (co-design: changes per iteration)
+  direction — +1 buy performance / −1 return it
+  task      — highest distance contribution (critical-path duration for
+              latency, dynamic energy for power)
+  block     — the task's bottleneck block (Eq. 5 attribution)
+  move      — Algorithm 1 reasoning + development-cost precedence
+              (join > migrate > fork > swap > fork_swap), sampled
+              probabilistically by precedence weight
+
+Awareness ladder (paper Fig. 9b): ``sa`` picks all five at random;
+``task`` adds bottleneck-driven task selection; ``task_block`` adds block
+selection; ``farsi`` adds Algorithm-1 move selection + precedence.
+
+If no neighbour improves, the failed (task, block) target goes on a short
+taboo list so the next iteration targets "the task/block with the next
+highest distance" (§3.4), and classic SA temperature occasionally accepts a
+worse design.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+import time
+from typing import Dict, List, Optional, Tuple
+
+from .blocks import BlockKind
+from .budgets import Budget, Distance, distance
+from .codesign import CodesignLedger, FocusRecord
+from .database import HardwareDatabase
+from .design import Design
+from .moves import MOVE_KINDS, MOVE_PRECEDENCE, apply_move
+from .phase_sim import SimResult, simulate
+from .tdg import TaskGraph, workload_of
+
+AWARENESS_LEVELS = ("sa", "task", "task_block", "farsi")
+
+
+@dataclasses.dataclass
+class ExplorerConfig:
+    awareness: str = "farsi"
+    neighbors_per_iter: int = 4
+    max_iterations: int = 1500
+    seed: int = 0
+    temperature0: float = 0.05
+    temp_decay: float = 0.997
+    alpha_met: float = 0.05
+    dev_cost_aware: bool = True
+    codesign: bool = True  # False => fixate focus until the focused metric is met
+    taboo_ttl: int = 5
+
+
+@dataclasses.dataclass
+class ExplorationResult:
+    best_design: Design
+    best_result: SimResult
+    best_distance: Distance
+    converged: bool
+    iterations: int
+    n_sims: int
+    wall_s: float
+    history: List[dict]
+    ledger: CodesignLedger
+
+
+def _task_duration(result: SimResult, tdg: TaskGraph, t: str) -> float:
+    start = max((result.task_finish_s[p] for p in tdg.parents[t]), default=0.0)
+    return result.task_finish_s[t] - start
+
+
+def _block_has_parallel_tasks(design: Design, tdg: TaskGraph, block: str) -> bool:
+    kind = design.blocks[block].kind
+    if kind == BlockKind.PE:
+        hosted = design.tasks_on_pe(block)
+    elif kind == BlockKind.MEM:
+        hosted = design.buffers_on_mem(block)
+    else:
+        hosted = design.tasks_via_noc(block)
+    for i, a in enumerate(hosted):
+        par = set(tdg.parallel_tasks_of(a))
+        if par & set(hosted[i + 1:]):
+            return True
+    return False
+
+
+def _task_parallel_other_blocks(design: Design, tdg: TaskGraph, t: str) -> bool:
+    mine = design.task_pe[t]
+    return any(design.task_pe[p] != mine for p in tdg.parallel_tasks_of(t))
+
+
+class Explorer:
+    def __init__(
+        self,
+        tdg: TaskGraph,
+        db: HardwareDatabase,
+        budget: Budget,
+        config: ExplorerConfig = ExplorerConfig(),
+    ) -> None:
+        self.tdg = tdg
+        self.db = db
+        self.budget = budget
+        self.cfg = config
+        assert config.awareness in AWARENESS_LEVELS
+        self.rng = random.Random(config.seed)
+        self.n_sims = 0
+        self._taboo: Dict[Tuple[str, str], int] = {}
+        self._sticky_focus: Optional[str] = None  # codesign-off fixation
+
+    # ------------------------------------------------------------------
+    def _simulate(self, design: Design) -> SimResult:
+        self.n_sims += 1
+        return simulate(design, self.tdg, self.db)
+
+    # ---- 5-tuple selection ----------------------------------------------
+    def _select_metric(self, dist: Distance) -> str:
+        if self.cfg.awareness == "sa":
+            return self.rng.choice(("latency", "power", "area"))
+        if not self.cfg.codesign:
+            # fixation ablation: stick to one metric until it meets budget
+            if self._sticky_focus and dist.per_metric[self._sticky_focus] > 0:
+                return self._sticky_focus
+            unmet = [m for m, d in dist.per_metric.items() if d > 0]
+            self._sticky_focus = unmet[0] if unmet else "latency"
+            return self._sticky_focus
+        return dist.farthest_metric()
+
+    def _select_task(self, metric: str, dist: Distance, result: SimResult) -> str:
+        tasks = list(self.tdg.tasks)
+        if self.cfg.awareness == "sa":
+            return self.rng.choice(tasks)
+        # domain/architecture awareness: rank by contribution to the metric
+        if metric == "latency":
+            wl = max(
+                dist.per_workload_latency,
+                key=lambda w: dist.per_workload_latency[w],
+            )
+            pool = [t for t in tasks if workload_of(t) == wl] or tasks
+            ranked = sorted(
+                pool, key=lambda t: _task_duration(result, self.tdg, t), reverse=True
+            )
+        elif metric == "power":
+            ranked = sorted(
+                tasks, key=lambda t: result.task_energy_j.get(t, 0.0), reverse=True
+            )
+        else:  # area: tasks whose buffers sit on the largest memories first
+            ranked = sorted(
+                tasks,
+                key=lambda t: result.mem_capacity_bytes.get(
+                    # design of current result — capacity proxy via write bytes
+                    t, self.tdg.tasks[t].write_bytes,
+                ),
+                reverse=True,
+            )
+        for t in ranked:
+            if all((t, b) not in self._taboo for b in ("*",)):
+                pass
+            if not any(k[0] == t for k in self._taboo):
+                return t
+        return ranked[0]
+
+    def _select_block(self, design: Design, metric: str, task: str, result: SimResult) -> str:
+        if self.cfg.awareness in ("sa", "task"):
+            return self.rng.choice(list(design.blocks))
+        if metric in ("power", "area"):
+            # dead hardware first: an idle block is pure leakage/area, and
+            # join removes it for free (the cheapest possible move)
+            for n, b in design.blocks.items():
+                if b.kind == BlockKind.PE and not design.tasks_on_pe(n):
+                    return n
+                if b.kind == BlockKind.MEM and not design.buffers_on_mem(n):
+                    return n
+        if metric == "area":
+            return max(design.blocks, key=lambda b: self.db.block_area_mm2(design.blocks[b]))
+        blk = result.task_bottleneck_block.get(task)
+        if blk in design.blocks:
+            return blk
+        return design.task_pe[task]
+
+    def _select_moves(self, design: Design, metric: str, task: str, block: str) -> List[str]:
+        """Algorithm 1, steps I + II."""
+        if self.cfg.awareness != "farsi":
+            moves = list(MOVE_KINDS)
+            self.rng.shuffle(moves)
+            return moves
+        if metric == "latency":
+            if _block_has_parallel_tasks(design, self.tdg, block):
+                allowed = ["migrate", "fork"]
+            else:
+                allowed = ["swap", "fork_swap"]
+        elif metric == "power":
+            if _task_parallel_other_blocks(design, self.tdg, task):
+                if not _block_has_parallel_tasks(design, self.tdg, block):
+                    allowed = ["migrate"]
+                else:
+                    allowed = ["join"]
+            else:
+                allowed = ["swap", "fork_swap"]
+        else:  # area
+            if design.blocks[block].kind == BlockKind.PE:
+                allowed = ["join", "swap"]
+            else:
+                allowed = ["migrate", "join", "swap"]
+        # step II/III: precedence-weighted probabilistic ordering
+        if self.cfg.dev_cost_aware:
+            weights = [MOVE_PRECEDENCE[m] for m in allowed]
+        else:
+            weights = [1.0] * len(allowed)
+        ordered: List[str] = []
+        pool, w = list(allowed), list(weights)
+        while pool:
+            pick = self.rng.choices(range(len(pool)), weights=w)[0]
+            ordered.append(pool.pop(pick))
+            w.pop(pick)
+        # graceful fallback to the rest of the move set
+        ordered += [m for m in MOVE_KINDS if m not in ordered]
+        return ordered
+
+    # ---- neighbour generation --------------------------------------------
+    def _make_neighbors(
+        self, design: Design, metric: str, task: str, block: str, moves: List[str],
+        bottleneck: str, n: int,
+    ) -> List[Tuple[Design, str]]:
+        """Up to ``n`` *distinct* neighbours: one per move of the precedence-
+        ordered list (candidate generation in SA, §3.4)."""
+        direction = +1 if metric == "latency" else -1
+        out: List[Tuple[Design, str]] = []
+        for move in moves:
+            if len(out) >= n:
+                break
+            cand = design.clone()
+            # clone() renames blocks; recompute the target in the clone
+            block_c = self._reresolve(design, cand, block)
+            if block_c is None:
+                continue
+            ok = apply_move(
+                cand, self.tdg, move, block_c, task, direction, bottleneck,
+                metric, self.rng,
+            )
+            if ok:
+                out.append((cand, move))
+        return out
+
+    @staticmethod
+    def _reresolve(old: Design, new: Design, block_name: str) -> Optional[str]:
+        """Map a block of ``old`` to its counterpart in ``new`` (clones rename
+        blocks; order is preserved per kind)."""
+        kind = old.blocks[block_name].kind
+        olds = [n for n, b in old.blocks.items() if b.kind == kind]
+        news = [n for n, b in new.blocks.items() if b.kind == kind]
+        try:
+            return news[olds.index(block_name)]
+        except (ValueError, IndexError):
+            return news[0] if news else None
+
+    # ---- main loop ---------------------------------------------------------
+    def run(self, initial: Optional[Design] = None) -> ExplorationResult:
+        t0 = time.perf_counter()
+        cur = initial or Design.base(self.tdg)
+        cur_res = self._simulate(cur)
+        cur_dist = distance(cur_res, self.budget)
+        best = (cur, cur_res, cur_dist)
+        history: List[dict] = []
+        ledger = CodesignLedger()
+
+        for it in range(self.cfg.max_iterations):
+            if cur_dist.converged():
+                break
+            self._taboo = {k: v - 1 for k, v in self._taboo.items() if v > 1}
+
+            metric = self._select_metric(cur_dist)
+            task = self._select_task(metric, cur_dist, cur_res)
+            block = self._select_block(cur, metric, task, cur_res)
+            bneck = cur_res.task_bottleneck.get(task, "pe")
+            moves = self._select_moves(cur, metric, task, block)
+
+            cands: List[Tuple[Design, str, SimResult, Distance]] = []
+            for cand, move in self._make_neighbors(
+                cur, metric, task, block, moves, bneck, self.cfg.neighbors_per_iter
+            ):
+                res = self._simulate(cand)
+                cands.append((cand, move, res, distance(res, self.budget)))
+            if not cands:
+                self._taboo[(task, block)] = self.cfg.taboo_ttl
+                continue
+
+            cands.sort(key=lambda c: c[3].fitness(self.cfg.alpha_met))
+            cand, move, res, dist_after = cands[0]
+            d_before = cur_dist.fitness(self.cfg.alpha_met)
+            d_after = dist_after.fitness(self.cfg.alpha_met)
+            temp = self.cfg.temperature0 * self.cfg.temp_decay**it
+            accept = d_after < d_before or (
+                temp > 0
+                and self.rng.random() < math.exp(-(d_after - d_before) / max(temp, 1e-9))
+            )
+            ledger.log(
+                FocusRecord(
+                    iteration=it,
+                    metric=metric,
+                    workload=workload_of(task),
+                    comm_comp="comp" if bneck == "pe" else "comm",
+                    move=move,
+                    distance_before=cur_dist.city_block(),
+                    distance_after=dist_after.city_block() if accept else cur_dist.city_block(),
+                )
+            )
+            if accept:
+                cur, cur_res, cur_dist = cand, res, dist_after
+                if cur_dist.city_block() < best[2].city_block():
+                    best = (cur, cur_res, cur_dist)
+            else:
+                self._taboo[(task, block)] = self.cfg.taboo_ttl
+
+            history.append(
+                {
+                    "iteration": it,
+                    "n_sims": self.n_sims,
+                    "distance": best[2].city_block(),
+                    "fitness": best[2].fitness(self.cfg.alpha_met),
+                    "metric": metric,
+                    "move": move,
+                    "accepted": accept,
+                    "wall_s": time.perf_counter() - t0,
+                }
+            )
+
+        return ExplorationResult(
+            best_design=best[0],
+            best_result=best[1],
+            best_distance=best[2],
+            converged=best[2].converged(),
+            iterations=len(history),
+            n_sims=self.n_sims,
+            wall_s=time.perf_counter() - t0,
+            history=history,
+            ledger=ledger,
+        )

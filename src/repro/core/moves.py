@@ -1,0 +1,294 @@
+"""Optimization moves (paper §3.3, Fig. 6, Table 3).
+
+Three primitives plus a composite, all *incremental* (one knob, one step, one
+task at a time — the development-cost policy) and *symmetric* (every move has
+an inverse, enabling backtracking):
+
+  swap      — customization: step one knob one rung, or GPP↔Acc conversion
+  fork      — allocation: duplicate a block, migrate some load over
+  join      — allocation⁻¹: merge a block into a sibling, delete it
+  migrate   — mapping: move one task (or its buffer) to another block
+  fork_swap — fork followed by swap ("introduced to accelerate navigation")
+
+Every function mutates ``design`` in place (the explorer clones first) and
+returns True on success / False when the move is inapplicable (ladder end
+stop, last block of a kind, ...). Failed moves cost nothing and let the
+explorer fall through its precedence list.
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Optional
+
+from .blocks import Block, BlockKind, make_noc
+from .design import Design
+from .tdg import TaskGraph
+
+MOVE_KINDS = ("swap", "fork", "join", "migrate", "fork_swap")
+# Development-cost precedence (paper Algorithm 1, step II):
+#   join > migrate > fork > swap > fork_swap
+MOVE_PRECEDENCE = {"join": 5, "migrate": 4, "fork": 3, "swap": 2, "fork_swap": 1}
+# software-to-hardware mapping & allocation are "high-level" optimizations,
+# knob tuning is "low-level" (paper §5.3 co-design vectors)
+HIGH_LEVEL = {"migrate", "fork", "join", "fork_swap"}
+
+
+# ---------------------------------------------------------------------------
+# swap
+# ---------------------------------------------------------------------------
+def _knob_candidates(block: Block, task, direction: int) -> List[str]:
+    """Which knobs a swap may step on this block, in preference order."""
+    if block.kind == BlockKind.PE:
+        if block.subtype == "acc":
+            # prefer unrolling while the task still has LLP headroom
+            if task is not None and direction > 0 and block.unroll < task.llp:
+                return ["unroll", "freq_mhz"]
+            return ["freq_mhz", "unroll"]
+        return ["freq_mhz"]
+    if block.kind == BlockKind.NOC:
+        return ["width_bytes", "freq_mhz", "n_links"]
+    return ["width_bytes", "freq_mhz"]  # MEM
+
+
+def apply_swap(
+    design: Design,
+    tdg: TaskGraph,
+    block_name: str,
+    direction: int,
+    task_name: Optional[str] = None,
+    rng: Optional[random.Random] = None,
+) -> bool:
+    """Step one knob one rung (incremental customization). ``direction=+1``
+    buys performance, ``-1`` returns it (power/area). GPP→Acc hardening
+    happens when the PE hosts exactly the target task (otherwise the explorer
+    reaches hardening via fork_swap); Acc→GPP is the symmetric inverse.
+    Mem swap also flips DRAM↔SRAM: SRAM saves energy/byte, DRAM saves area."""
+    rng = rng or random.Random(0)
+    block = design.blocks[block_name]
+    task = tdg.tasks.get(task_name) if task_name else None
+
+    # subtype conversions first (the "real" customization)
+    if block.kind == BlockKind.PE and direction > 0 and block.subtype == "gpp":
+        hosted = design.tasks_on_pe(block_name)
+        if task_name and hosted == [task_name]:
+            block.subtype = "acc"
+            block.hardened_for = task_name
+            return True
+    if block.kind == BlockKind.PE and direction < 0 and block.subtype == "acc":
+        # soften: cheaper to develop, slower (symmetric inverse of hardening)
+        if block.unroll > 1:
+            return block.step_knob("unroll", -1)
+        block.subtype = "gpp"
+        block.hardened_for = None
+        return True
+    if block.kind == BlockKind.MEM:
+        # energy pressure → SRAM; area pressure → DRAM (§6.1 memory study)
+        if direction < 0 and block.subtype == "dram":
+            block.subtype = "sram"
+            return True
+
+    knobs = _knob_candidates(block, task, direction)
+    for knob in knobs:
+        if block.step_knob(knob, direction):
+            return True
+    if block.kind == BlockKind.MEM and direction > 0 and block.subtype == "sram":
+        block.subtype = "dram"  # ladder exhausted: trade energy for capacity
+        return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# fork / join
+# ---------------------------------------------------------------------------
+def apply_fork(
+    design: Design,
+    tdg: TaskGraph,
+    block_name: str,
+    task_name: Optional[str] = None,
+    rng: Optional[random.Random] = None,
+) -> bool:
+    """Duplicate ``block`` and migrate load over: the target task (if given)
+    or every other task/buffer. For NoCs the new router is inserted next in
+    the chain and takes half the attached PEs/Mems (congestion relief)."""
+    rng = rng or random.Random(0)
+    block = design.blocks[block_name]
+
+    if block.kind == BlockKind.NOC:
+        attached = design.attached(block_name)
+        if len(attached) < 2:
+            return False
+        new = make_noc(block.freq_mhz, block.width_bytes, block.n_links)
+        design.add_block(new, after_noc=block_name)
+        for b in attached[1::2]:
+            design.attached_noc[b] = new.name
+        return True
+
+    hosted = (
+        design.tasks_on_pe(block_name)
+        if block.kind == BlockKind.PE
+        else design.buffers_on_mem(block_name)
+    )
+    if len(hosted) < 2:
+        return False  # duplication must *split* load, never orphan the source
+    movers = [task_name] if (task_name in hosted) else hosted[1::2]
+    movers = [m for m in movers if m != hosted[0]] or hosted[1:2]
+    clone = block.clone()
+    if clone.subtype == "acc" and task_name and task_name != block.hardened_for:
+        clone.hardened_for = task_name  # duplicated IP hardened for the mover
+    design.add_block(clone, attach_to=design.attached_noc[block_name])
+    target_map = design.task_pe if block.kind == BlockKind.PE else design.task_mem
+    for t in movers:
+        target_map[t] = clone.name
+    return True
+
+
+def apply_join(
+    design: Design,
+    tdg: TaskGraph,
+    block_name: str,
+    rng: Optional[random.Random] = None,
+) -> bool:
+    """Merge ``block`` into a sibling and delete it (the inverse of fork;
+    the highest-precedence move because it *removes* hardware)."""
+    rng = rng or random.Random(0)
+    block = design.blocks.get(block_name)
+    if block is None:
+        return False
+
+    if block.kind == BlockKind.NOC:
+        if len(design.noc_chain) < 2:
+            return False
+        idx = design.noc_chain.index(block_name)
+        target = design.noc_chain[idx - 1] if idx > 0 else design.noc_chain[1]
+        for b in design.attached(block_name):
+            design.attached_noc[b] = target
+        design.remove_block(block_name)
+        return True
+
+    siblings = [
+        n
+        for n, b in design.blocks.items()
+        if n != block_name and b.kind == block.kind
+    ]
+    if not siblings:
+        return False
+    # prefer a sibling on the same NoC (locality), then a GPP for PE joins
+    same_noc = [s for s in siblings if design.attached_noc[s] == design.attached_noc[block_name]]
+    pool = same_noc or siblings
+    if block.kind == BlockKind.PE:
+        gpps = [s for s in pool if design.blocks[s].subtype == "gpp"]
+        target = (gpps or pool)[0]
+        for t in design.tasks_on_pe(block_name):
+            design.task_pe[t] = target
+    else:
+        target = pool[0]
+        for t in design.buffers_on_mem(block_name):
+            design.task_mem[t] = target
+    design.remove_block(block_name)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# migrate
+# ---------------------------------------------------------------------------
+def apply_migrate(
+    design: Design,
+    tdg: TaskGraph,
+    task_name: str,
+    bottleneck: str = "pe",
+    rng: Optional[random.Random] = None,
+    objective: str = "latency",
+) -> bool:
+    """Move one task (compute-bound → new PE) or its buffer (comm-bound →
+    new MEM) — mapping change. Destination is chosen with architectural
+    reasoning: load balancing for latency (least-loaded candidate), spatial
+    locality (same-NoC placement, fewer hops), consolidation for power/area
+    (paper §3.3 'Using Architectural Reasoning for Move Selection')."""
+    rng = rng or random.Random(0)
+
+    if bottleneck in ("mem", "noc"):
+        cur = design.task_mem[task_name]
+        cands = [m for m in design.mems() if m != cur]
+        if not cands:
+            return False
+        pe_noc = design.attached_noc[design.task_pe[task_name]]
+        if objective == "latency":
+            # locality: fewest hops to the task's PE, then least congested
+            def key(m):
+                i = design.noc_chain.index(design.attached_noc[m])
+                j = design.noc_chain.index(pe_noc)
+                return (abs(i - j), len(design.buffers_on_mem(m)))
+        else:
+            # consolidation: the busiest memory (lets joins follow)
+            def key(m):
+                return -len(design.buffers_on_mem(m))
+        design.task_mem[task_name] = min(cands, key=key)
+        return True
+
+    cur = design.task_pe[task_name]
+    cands = [p for p in design.pes() if p != cur]
+    # an accelerator hardened for another task would run this task at a=1;
+    # still legal (paper migrates freely) but de-prioritized by the key below
+    if not cands:
+        return False
+    mem_noc = design.attached_noc[design.task_mem[task_name]]
+
+    def pe_key(p):
+        b = design.blocks[p]
+        hardened = b.subtype == "acc" and b.hardened_for == task_name
+        i = design.noc_chain.index(design.attached_noc[p])
+        j = design.noc_chain.index(mem_noc)
+        if objective == "latency":
+            return (not hardened, len(design.tasks_on_pe(p)), abs(i - j))
+        return (-len(design.tasks_on_pe(p)), not hardened)
+
+    design.task_pe[task_name] = min(cands, key=pe_key)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# composite
+# ---------------------------------------------------------------------------
+def apply_fork_swap(
+    design: Design,
+    tdg: TaskGraph,
+    block_name: str,
+    task_name: Optional[str],
+    direction: int,
+    rng: Optional[random.Random] = None,
+) -> bool:
+    """Fork then swap the forked block up — the paper's shortcut for
+    'dedicate new hardware to this task and customize it'."""
+    rng = rng or random.Random(0)
+    before = set(design.blocks)
+    if not apply_fork(design, tdg, block_name, task_name, rng):
+        return False
+    new_block = next(iter(set(design.blocks) - before), None)
+    if new_block is None:
+        return False
+    apply_swap(design, tdg, new_block, direction, task_name, rng)
+    return True
+
+
+def apply_move(
+    design: Design,
+    tdg: TaskGraph,
+    move: str,
+    block_name: Optional[str],
+    task_name: Optional[str],
+    direction: int,
+    bottleneck: str,
+    objective: str,
+    rng: random.Random,
+) -> bool:
+    if move == "swap":
+        return apply_swap(design, tdg, block_name, direction, task_name, rng)
+    if move == "fork":
+        return apply_fork(design, tdg, block_name, task_name, rng)
+    if move == "join":
+        return apply_join(design, tdg, block_name, rng)
+    if move == "migrate":
+        return apply_migrate(design, tdg, task_name, bottleneck, rng, objective)
+    if move == "fork_swap":
+        return apply_fork_swap(design, tdg, block_name, task_name, direction, rng)
+    raise KeyError(move)

@@ -1,0 +1,202 @@
+"""Vectorized phase-driven simulator: evaluate a *batch* of SA neighbours in
+one `vmap`'d XLA call.
+
+The paper profiles its DSE at 79.9% design-duplication overhead (Fig. 8) —
+a Python object-copy problem. We remove the object graph entirely: a design
+is a flat array encoding (task→PE map, task→MEM map, per-slot knobs), the
+TDG is dense matrices, and the phase loop is a `lax.fori_loop` (every phase
+retires ≥1 task, so ≤T phases). `vmap` over the design axis then evaluates
+all candidate neighbours of an explorer iteration — or entire populations —
+in one dispatch; on TPU this turns the DSE inner loop into batched vector
+ops.
+
+Scope: single-NoC designs (every PE/MEM on one bus — the regime our AR
+explorations live in; multi-NoC topologies fall back to the Python
+simulator). Equivalence against `phase_sim.simulate` is asserted in tests
+for this regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import BlockKind
+from .database import HardwareDatabase
+from .design import Design
+from .tdg import TaskGraph
+
+BIG = 1e30
+
+
+@dataclasses.dataclass
+class EncodedWorkload:
+    """Static per-workload tensors (shared across all candidate designs)."""
+
+    work_ops: jnp.ndarray  # (T,)
+    read_bytes: jnp.ndarray  # (T,)
+    write_bytes: jnp.ndarray  # (T,)
+    burst: jnp.ndarray  # (T,)
+    llp: jnp.ndarray  # (T,)
+    parent_mask: jnp.ndarray  # (T, T) bool: [i, j] = j is a parent of i
+    names: List[str]
+
+    @staticmethod
+    def of(g: TaskGraph) -> "EncodedWorkload":
+        names = list(g.tasks)
+        idx = {n: i for i, n in enumerate(names)}
+        t = len(names)
+        pm = np.zeros((t, t), bool)
+        for n in names:
+            for p in g.parents[n]:
+                pm[idx[n], idx[p]] = True
+        f = lambda attr: jnp.asarray([getattr(g.tasks[n], attr) for n in names], jnp.float32)
+        return EncodedWorkload(
+            work_ops=f("work_ops"),
+            read_bytes=jnp.asarray([g.tasks[n].read_bytes for n in names], jnp.float32),
+            write_bytes=jnp.asarray([g.tasks[n].write_bytes for n in names], jnp.float32),
+            burst=f("burst_bytes"),
+            llp=f("llp"),
+            parent_mask=jnp.asarray(pm),
+            names=names,
+        )
+
+
+@dataclasses.dataclass
+class EncodedDesign:
+    """Flat design encoding: (task maps, per-slot knobs). All (T,) / (S,)."""
+
+    task_pe: np.ndarray  # (T,) int32 PE slot per task
+    task_mem: np.ndarray  # (T,) int32 MEM slot per task
+    pe_peak: np.ndarray  # (S_pe,) ops/s at a=1 (freq × ops/cycle)
+    pe_accel: np.ndarray  # (T,) effective acceleration of the task's PE for it
+    mem_bw: np.ndarray  # (S_mem,) bytes/s
+    noc_bw: np.ndarray  # () bytes/s (single NoC, per link)
+    noc_links: int
+
+    @staticmethod
+    def of(design: Design, g: TaskGraph, db: HardwareDatabase, enc: EncodedWorkload) -> "EncodedDesign":
+        assert len(design.noc_chain) == 1, "vectorized sim: single-NoC regime"
+        pes = design.pes()
+        mems = design.mems()
+        pe_i = {n: i for i, n in enumerate(pes)}
+        mem_i = {n: i for i, n in enumerate(mems)}
+        task_pe = np.asarray([pe_i[design.task_pe[n]] for n in enc.names], np.int32)
+        task_mem = np.asarray([mem_i[design.task_mem[n]] for n in enc.names], np.int32)
+        pe_peak = np.asarray([db.pe_peak_ops(design.blocks[p]) for p in pes], np.float32)
+        accel = []
+        for n in enc.names:
+            b = design.blocks[design.task_pe[n]]
+            if b.subtype == "acc" and b.hardened_for == n:
+                accel.append(db.a_peak(n, g.tasks[n].llp, b.unroll))
+            else:
+                accel.append(1.0)
+        mem_bw = np.asarray(
+            [design.blocks[m].peak_bandwidth(db) for m in mems], np.float32
+        )
+        noc = design.blocks[design.noc_chain[0]]
+        return EncodedDesign(
+            task_pe=task_pe,
+            task_mem=task_mem,
+            pe_peak=pe_peak,
+            pe_accel=np.asarray(accel, np.float32),
+            mem_bw=mem_bw,
+            noc_bw=np.float32(noc.peak_bandwidth(db)),
+            noc_links=int(noc.n_links),
+        )
+
+
+def _segment_share(values: jnp.ndarray, seg: jnp.ndarray, n_seg: int, mask: jnp.ndarray):
+    """Per-element share = value / segment_total(value) over masked elements."""
+    v = jnp.where(mask, values, 0.0)
+    totals = jax.ops.segment_sum(v, seg, num_segments=n_seg)
+    return values / jnp.maximum(totals[seg], 1e-30)
+
+
+def simulate_batch(
+    enc: EncodedWorkload,
+    task_pe: jnp.ndarray,  # (B, T) int32
+    task_mem: jnp.ndarray,  # (B, T)
+    pe_peak: jnp.ndarray,  # (B, S_pe)
+    pe_accel: jnp.ndarray,  # (B, T)
+    mem_bw: jnp.ndarray,  # (B, S_mem)
+    noc_bw: jnp.ndarray,  # (B,)
+    noc_links: jnp.ndarray,  # (B,) int32
+) -> Dict[str, jnp.ndarray]:
+    """vmap'd phase simulation. Returns latency (B,) + task finish times (B,T)."""
+
+    t = enc.work_ops.shape[0]
+    n_pe = pe_peak.shape[-1]
+    n_mem = mem_bw.shape[-1]
+
+    def one(task_pe, task_mem, pe_peak, pe_accel, mem_bw, noc_bw, noc_links):
+        def phase(_, state):
+            remain, completed, now, finish = state
+            done_parents = jnp.all(~enc.parent_mask | completed[None, :], axis=1)
+            running = (~completed) & done_parents
+            any_run = jnp.any(running)
+
+            # Eq. 1/2: preemptive equal share per PE slot
+            load = jax.ops.segment_sum(
+                jnp.where(running, 1.0, 0.0), task_pe, num_segments=n_pe
+            )
+            compute = pe_peak[task_pe] * pe_accel / jnp.maximum(load[task_pe], 1.0)
+
+            # Eq. 4: burst-proportional memory share (read/write channels split)
+            mem_share = _segment_share(enc.burst, task_mem, n_mem, running)
+            m_bw = mem_bw[task_mem] * mem_share
+
+            # Eq. 3: round-robin link striping, burst arbitration within link
+            order = jnp.cumsum(jnp.where(running, 1, 0)) - 1  # rank among running
+            link = jnp.where(running, order % jnp.maximum(noc_links, 1), 0)
+            l_share = _segment_share(enc.burst, link, 8, running)
+            n_bw = noc_bw * l_share
+
+            rd_bw = jnp.minimum(m_bw, n_bw)
+            wr_bw = jnp.minimum(m_bw, n_bw)
+            c_t = jnp.maximum(
+                remain[:, 0] / compute,
+                jnp.maximum(remain[:, 1] / rd_bw, remain[:, 2] / wr_bw),
+            )
+            c_t = jnp.where(running, c_t, BIG)
+            phi = jnp.min(c_t)  # Eq. 6
+            phi = jnp.where(any_run, phi, 0.0)
+
+            rates = jnp.stack([compute, rd_bw, wr_bw], axis=1)
+            dec = jnp.where(running[:, None], rates * phi, 0.0)
+            new_remain = jnp.maximum(remain - dec, 0.0)
+            newly_done = running & (c_t <= phi * (1 + 1e-9))
+            new_remain = jnp.where(newly_done[:, None], 0.0, new_remain)
+            now = now + phi
+            finish = jnp.where(newly_done, now, finish)
+            return new_remain, completed | newly_done, now, finish
+
+        remain0 = jnp.stack([enc.work_ops, enc.read_bytes, enc.write_bytes], axis=1)
+        state = (remain0, jnp.zeros((t,), bool), jnp.float32(0.0), jnp.zeros((t,), jnp.float32))
+        remain, completed, now, finish = jax.lax.fori_loop(0, t, phase, state)
+        return {"latency_s": now, "finish_s": finish, "all_done": jnp.all(completed)}
+
+    return jax.vmap(one)(task_pe, task_mem, pe_peak, pe_accel, mem_bw, noc_bw, noc_links)
+
+
+def encode_batch(designs: List[Design], g: TaskGraph, db: HardwareDatabase, enc: EncodedWorkload):
+    """Pad a list of single-NoC designs to a common slot count and stack."""
+    encs = [EncodedDesign.of(d, g, db, enc) for d in designs]
+    n_pe = max(e.pe_peak.shape[0] for e in encs)
+    n_mem = max(e.mem_bw.shape[0] for e in encs)
+
+    def pad(a, n):
+        return np.pad(a, (0, n - a.shape[0]), constant_values=1.0)
+
+    return (
+        jnp.asarray(np.stack([e.task_pe for e in encs])),
+        jnp.asarray(np.stack([e.task_mem for e in encs])),
+        jnp.asarray(np.stack([pad(e.pe_peak, n_pe) for e in encs])),
+        jnp.asarray(np.stack([e.pe_accel for e in encs])),
+        jnp.asarray(np.stack([pad(e.mem_bw, n_mem) for e in encs])),
+        jnp.asarray(np.stack([e.noc_bw for e in encs])),
+        jnp.asarray(np.stack([np.int32(e.noc_links) for e in encs])),
+    )

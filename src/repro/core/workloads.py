@@ -1,0 +1,177 @@
+"""The three AR workloads (paper §2.2–2.3, Fig. 2, Table 1).
+
+TDG structures follow the paper's description: Audio has 15 tasks and the
+highest task-level parallelism; CAVA is a serial ISP pipeline (TaLP = 1);
+Edge Detection has 6 tasks, modest TaLP (4) and the highest LLP / data
+movement. Per-task Gables numbers are spread deterministically around the
+Table-1 per-task averages (the paper's appendix task tables are not in the
+text) so that every Table-1 average is matched exactly.
+
+Budgets: Table 4a gives 21/34/34 ms latencies with 8.737 mW / 17.475 mm²
+system budgets at 5 nm. Those power numbers are not reachable under *any*
+physical pJ/op constant given Table 1's own op counts (CAVA alone runs
+~170 Gops per 34 ms frame → ≥1 W at 5 nm-class 0.3 pJ/op; the paper's internal
+AccelSeeker database evidently counts "ops" differently). We therefore keep
+the paper's latency budgets and latency *ratios*, and calibrate power/area
+budgets against our own database (``calibrated_budget``) so that convergence
+experiments are demanding but feasible — see EXPERIMENTS.md §Deviations.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List
+
+from .budgets import Budget
+from .database import HardwareDatabase
+from .tdg import Task, TaskGraph, merge_graphs
+
+MOPS = 1e6
+MB = 1e6
+
+
+def _spread(center: float, names: List[str], lo: float = 0.5, hi: float = 1.5) -> Dict[str, float]:
+    """Deterministic per-task factors in [lo, hi], rescaled to preserve the
+    mean exactly (Table-1 values are per-task averages)."""
+    raw = {}
+    for n in names:
+        h = int.from_bytes(hashlib.sha256(n.encode()).digest()[:8], "big") / 2**64
+        raw[n] = lo + (hi - lo) * h
+    mean = sum(raw.values()) / len(raw)
+    return {n: center * v / mean for n, v in raw.items()}
+
+
+def audio() -> TaskGraph:
+    """Audio decoder: pose-driven soundfield rotation/zoom + speaker mapping.
+    15 tasks: source-decode → 8 parallel ambisonic channel encoders → combine
+    → 4 parallel band rotate/zoom stages → binaural mix (high TaLP)."""
+    g = TaskGraph("audio")
+    names = (
+        ["src_decode"]
+        + [f"enc_ch{i}" for i in range(8)]
+        + ["combine"]
+        + [f"rotzoom_b{i}" for i in range(4)]
+        + ["binaural_mix"]
+    )
+    f = _spread(13 * MOPS, names)
+    llp = _spread(2392.0, names)
+    for n in names:
+        g.add_task(
+            Task(n, work_ops=f[n], i_read=8.0, i_write=12.0, llp=llp[n], burst_bytes=256)
+        )
+    edge = 0.19 * MB  # Table-1 average data movement per task
+    for i in range(8):
+        g.add_edge("src_decode", f"enc_ch{i}", edge)
+        g.add_edge(f"enc_ch{i}", "combine", edge)
+    for i in range(4):
+        g.add_edge("combine", f"rotzoom_b{i}", edge)
+        g.add_edge(f"rotzoom_b{i}", "binaural_mix", edge)
+    g.validate()
+    return g
+
+
+def cava() -> TaskGraph:
+    """CAVA camera-vision ISP pipeline (Nikon-D7000-modelled kernel): a strict
+    serial chain — TaLP = 1, only loop-level parallelism (Table 1)."""
+    g = TaskGraph("cava")
+    names = ["scale", "demosaic", "denoise", "wbalance", "cspace", "gamut", "tonemap"]
+    f = _spread(24_252 * MOPS, names)
+    llp = _spread(151.0, names)
+    for n in names:
+        g.add_task(
+            Task(n, work_ops=f[n], i_read=67e3, i_write=74e3, llp=llp[n], burst_bytes=1024)
+        )
+    for a, b in zip(names, names[1:]):
+        g.add_edge(a, b, 0.33 * MB)
+    g.validate()
+    return g
+
+
+def edge_detection() -> TaskGraph:
+    """Edge detection: 6 tasks, gradient operators run in parallel (TaLP = 4),
+    massive LLP (per-pixel independence) and the highest data movement."""
+    g = TaskGraph("ed")
+    names = ["grayscale", "gauss_blur", "grad_x", "grad_y", "laplacian", "magnitude"]
+    f = _spread(1_098 * MOPS, names)
+    llp = _spread(1_365_376.0, names)
+    for n in names:
+        g.add_task(
+            Task(n, work_ops=f[n], i_read=126.0, i_write=1.23e6, llp=llp[n], burst_bytes=4096)
+        )
+    g.add_edge("grayscale", "gauss_blur", 7.01 * MB)
+    for n in ("grad_x", "grad_y", "laplacian"):
+        g.add_edge("gauss_blur", n, 7.01 * MB)
+        g.add_edge(n, "magnitude", 7.01 * MB)
+    g.validate()
+    return g
+
+
+def all_workloads() -> Dict[str, TaskGraph]:
+    return {"audio": audio(), "cava": cava(), "ed": edge_detection()}
+
+
+def ar_complex() -> TaskGraph:
+    """The §5 SoC scenario: all three workloads running together."""
+    return merge_graphs(all_workloads().values(), name="ar_complex")
+
+
+PAPER_LATENCY_S = {"audio": 21e-3, "cava": 34e-3, "ed": 34e-3}
+
+
+def paper_budget() -> Budget:
+    """Table 4a verbatim (see module docstring for why power/area are not
+    directly usable with our stand-in database)."""
+    return Budget(latency_s=dict(PAPER_LATENCY_S), power_w=8.737e-3, area_mm2=17.475)
+
+
+def ideal_latency_s(g: TaskGraph, db: HardwareDatabase) -> float:
+    """Critical-path latency with every task on its own maxed accelerator and
+    infinite bandwidth — the analytic floor used for budget calibration."""
+    best: Dict[str, float] = {}
+    for name, t in g.tasks.items():
+        p = db.gpp_ops_per_cycle * 800e6 * db.a_peak(name, t.llp, 1024)
+        best[name] = t.work_ops / p
+
+    memo: Dict[str, float] = {}
+
+    def finish(n: str) -> float:
+        if n not in memo:
+            memo[n] = best[n] + max((finish(p) for p in g.parents[n]), default=0.0)
+        return memo[n]
+
+    return max(finish(n) for n in g.tasks)
+
+
+def calibrated_budget(
+    db: HardwareDatabase,
+    latency_slack: float = 8.0,
+    power_slack: float = 1.2,
+    area_slack: float = 1.15,
+) -> Budget:
+    """Budgets derived from analytic floors × slack so they are demanding but
+    feasible under our stand-in PPA database (see module docstring):
+
+      latency — per-workload critical-path floor × slack (at least the
+                paper's Table-4a value, preserving the 21:34:34 ratio)
+      power   — best-case dynamic energy (all-accelerator, all-SRAM) spread
+                over the slowest latency budget, plus a base leakage
+      area    — one hardened IP per task + modest NoC/Mem overhead
+    """
+    lats = {}
+    for name, g in all_workloads().items():
+        floor = ideal_latency_s(g, db)
+        lats[name] = max(PAPER_LATENCY_S[name], floor * latency_slack)
+
+    e_floor = 0.0
+    n_tasks = 0
+    for g in all_workloads().values():
+        for t in g.tasks.values():
+            e_floor += t.work_ops * db.energy.acc_pj_per_op * 1e-12
+            e_floor += t.data_bytes * db.energy.sram_pj_per_byte * 1e-12
+            n_tasks += 1
+    base_leak_w = n_tasks * db.energy.acc_leak_w + 10e-3
+    power = power_slack * (e_floor / max(lats.values()) + base_leak_w)
+
+    area = area_slack * (
+        n_tasks * db.area.acc_mm2 + 2 * db.area.dram_phy_mm2 + 2.0
+    )
+    return Budget(latency_s=lats, power_w=power, area_mm2=area)

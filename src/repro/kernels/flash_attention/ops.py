@@ -1,0 +1,35 @@
+"""jit'd public wrapper: model layout (B, S, H, Dh) ⇄ kernel layout, with a
+custom VJP whose backward uses the blockwise flash gradient (models.flash_ref)
+— the kernel accelerates the forward (prefill/serving hot path); training
+gradients share the memory-sane blockwise backward.
+
+On CPU (tests, this container) pass ``interpret=True`` — the kernel body runs
+unmodified in interpret mode; on TPU it compiles to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "q_block", "kv_block", "interpret"))
+def flash_attention(
+    q: jax.Array,  # (B, S, H, Dh) — model layout
+    k: jax.Array,  # (B, S, KH, Dh)
+    v: jax.Array,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, q_block=q_block, kv_block=kv_block, interpret=interpret
+    )
+    return out.transpose(0, 2, 1, 3)

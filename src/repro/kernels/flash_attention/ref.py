@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel: plain masked-dense causal
+GQA attention in the kernel's (B, H, S, Dh) layout."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(
+    q: jax.Array,  # (B, H, Sq, Dh)
+    k: jax.Array,  # (B, KH, Skv, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    b, h, sq, dh = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, sq, dh).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32)) / math.sqrt(dh)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, dh).astype(q.dtype)

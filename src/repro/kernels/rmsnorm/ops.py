@@ -1,0 +1,19 @@
+"""jit'd wrapper: (..., d) RMSNorm via the fused Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import rmsnorm_2d
+
+
+@partial(jax.jit, static_argnames=("eps", "row_block", "interpret"))
+def rmsnorm(
+    x: jax.Array, w: jax.Array, eps: float = 1e-6, row_block: int = 256, interpret: bool = False
+) -> jax.Array:
+    shape = x.shape
+    out = rmsnorm_2d(
+        x.reshape(-1, shape[-1]), w, eps=eps, row_block=row_block, interpret=interpret
+    )
+    return out.reshape(shape)

@@ -1,0 +1,2 @@
+"""Oracle: same math as models.layers.rms_norm (re-exported for kernel tests)."""
+from ...models.layers import rms_norm as rmsnorm_reference  # noqa: F401

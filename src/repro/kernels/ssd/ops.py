@@ -1,0 +1,25 @@
+"""jit'd wrapper for the SSD chunk-scan kernel, signature-compatible with
+``ref.ssd_reference`` (so models/mamba2.py can swap implementations via
+RunFlags). Interpret mode for CPU validation; Mosaic on TPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import ssd_chunk_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    return ssd_chunk_scan(
+        x, dt, a, b_mat, c_mat, chunk=chunk, interpret=interpret
+    )

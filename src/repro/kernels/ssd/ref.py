@@ -1,0 +1,133 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) operator
+[arXiv:2405.21060, §6 "block decomposition"].
+
+Recurrence (per batch, per head; h ∈ R^{P×N}):
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · x_t ⊗ B_t
+    y_t = C_t · h_t
+Chunked form: within a chunk of length Q the output is a masked quadratic
+(attention-like) matmul against the decay kernel L_ij = exp(cum_i − cum_j);
+across chunks a small recurrence carries the (H, P, N) state. This maps the
+SSM onto MXU-shaped matmuls — the reason we use SSD rather than Mamba-1's
+elementwise scan on TPU (DESIGN.md hardware-adaptation).
+
+All decay/softplus math runs in fp32; A is negative and dt positive, so every
+exponent is ≤ 0 (no overflow by construction).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) — already softplus'd, > 0
+    a: jax.Array,  # (H,) — negative
+    b_mat: jax.Array,  # (B, S, N)  (single SSM group, broadcast over heads)
+    c_mat: jax.Array,  # (B, S, N)
+    chunk: int = 64,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B, S, H, P), h_final (B, H, P, N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc, q = s // chunk, chunk
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, q, h)
+    bf = b_mat.astype(jnp.float32).reshape(bsz, nc, q, n)
+    cf = c_mat.astype(jnp.float32).reshape(bsz, nc, q, n)
+    af = a.astype(jnp.float32)
+
+    da = dtf * af  # (B, nc, Q, H), ≤ 0
+    cum = jnp.cumsum(da, axis=2)  # inclusive
+    xdt = xf * dtf[..., None]  # (B, nc, Q, H, P)
+
+    # ---- intra-chunk (diagonal blocks): masked decay attention ----------
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B, nc, Q, Q, H)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # double-where: masked (upper-tri) diffs are positive → exp overflows and
+    # poisons the backward (∂exp at inf × 0 = NaN); zero them *before* exp
+    diff = jnp.where(mask, diff, 0.0)
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cf, bf)  # (B, nc, Q, Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, xdt)
+
+    # ---- chunk summaries -------------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B, nc, Q, H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end, bf, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B, nc, H)
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    h_init = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+
+    def step(h_prev, inp):
+        st, dec = inp  # (B, H, P, N), (B, H)
+        h_next = h_prev * dec[:, :, None, None] + st
+        return h_next, h_prev  # emit the state *entering* the chunk
+
+    states_t = states.transpose(1, 0, 2, 3, 4)  # (nc, B, H, P, N)
+    decay_t = chunk_decay.transpose(1, 0, 2)  # (nc, B, H)
+    h_final, h_befores = jax.lax.scan(step, h_init, (states_t, decay_t))
+    h_befores = h_befores.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", cf, jnp.exp(cum), h_befores)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p).astype(x.dtype)
+    return y, h_final.astype(jnp.float32)
+
+
+def ssd_decode_step(
+    h: jax.Array,  # (B, H, P, N) fp32 state
+    x: jax.Array,  # (B, H, P)
+    dt: jax.Array,  # (B, H) — softplus'd
+    a: jax.Array,  # (H,)
+    b_vec: jax.Array,  # (B, N)
+    c_vec: jax.Array,  # (B, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent update (serving path). Returns (y (B,H,P), h)."""
+    da = jnp.exp(dt.astype(jnp.float32) * a.astype(jnp.float32))  # (B, H)
+    upd = jnp.einsum(
+        "bh,bhp,bn->bhpn", dt.astype(jnp.float32), x.astype(jnp.float32), b_vec.astype(jnp.float32)
+    )
+    h_new = h * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_vec.astype(jnp.float32))
+    return y.astype(x.dtype), h_new
+
+
+def ssd_naive(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Token-by-token recurrence — the ground truth the chunked form must
+    match (property tests sweep chunk sizes against this)."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    h_state = (
+        jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+
+    def step(h_prev, inp):
+        xt, dtt, bt, ct = inp
+        y, h_next = ssd_decode_step(h_prev, xt, dtt, a, bt, ct)
+        return h_next, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        dt.transpose(1, 0, 2),
+        b_mat.transpose(1, 0, 2),
+        c_mat.transpose(1, 0, 2),
+    )
+    h_final, ys = jax.lax.scan(step, h_state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_final

@@ -1,0 +1,24 @@
+"""Production mesh definitions.
+
+Functions (not module-level constants) so importing this module never touches
+jax device state. Single pod = 16×16 = 256 chips ("data", "model"); multi-pod
+= 2×16×16 = 512 chips with the leading "pod" axis spanning the (slower)
+inter-pod links — batch shards over ("pod", "data") so cross-pod traffic is
+gradient reduction only.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host has (tests / examples): (n_devices/model, model)."""
+    n = jax.device_count()
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,72 @@
+"""Batched serving driver: prefill → decode loop with a fixed-capacity cache.
+
+``extend_cache`` pads prefill KV to the serving capacity (SSM state is
+fixed-size already); ``generate`` runs greedy decode. Used by
+examples/serve_batch.py and the decode-consistency tests; the production
+entry point jits both steps with the serving shardings.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import RunFlags
+from ..train.step import make_decode_step, make_prefill_step
+
+
+def extend_cache(cfg: ModelConfig, cache, max_len: int):
+    """Pad per-layer KV from prefill length S to serving capacity."""
+    out = []
+    for pos, kind in enumerate(cfg.block_kinds):
+        c = cache[pos]
+        if kind == "attn":
+            k, v = c["k"], c["v"]
+            # prefill emits (cycles, B, S, K, Dh)
+            pad = max_len - k.shape[2]
+            assert pad >= 0, (k.shape, max_len)
+            widths = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+            out.append({"k": jnp.pad(k, widths), "v": jnp.pad(v, widths)})
+        else:
+            out.append(c)
+    return tuple(out)
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    prompt: Dict[str, jax.Array],
+    n_tokens: int,
+    max_len: Optional[int] = None,
+    flags: RunFlags = RunFlags(),
+    greedy: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Greedy generation. prompt: {'tokens': (B, S)} (or embeds). Returns
+    (generated (B, n_tokens), all-step logits of the last position)."""
+    prefill = jax.jit(make_prefill_step(cfg, flags))
+    decode = jax.jit(make_decode_step(cfg, flags))
+
+    if cfg.input_mode == "tokens":
+        s0 = prompt["tokens"].shape[1]
+        bsz = prompt["tokens"].shape[0]
+    else:
+        s0 = prompt["embeds"].shape[1]
+        bsz = prompt["embeds"].shape[0]
+    max_len = max_len or (s0 + n_tokens)
+
+    logits, cache = prefill(params, prompt)
+    cache = extend_cache(cfg, cache, max_len)
+    outs = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,)
+    for i in range(n_tokens):
+        outs.append(tok)
+        if cfg.input_mode == "tokens":
+            batch = {"tokens": tok[:, None]}
+        else:
+            # embedding-input archs decode from the embedding of the token
+            batch = {"embeds": jnp.zeros((bsz, 1, cfg.d_model), jnp.bfloat16)}
+        logits, cache = decode(params, cache, batch, jnp.int32(s0 + i))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(outs, axis=1), logits

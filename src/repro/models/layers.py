@@ -1,0 +1,237 @@
+"""Core layers: RMSNorm, RoPE / M-RoPE, GQA attention (full, blockwise
+flash-style, and decode), SwiGLU/GeGLU MLPs.
+
+Conventions: activations (batch, seq, ...) in ``compute_dtype`` (bf16);
+normalization statistics, rotary math, attention logits/softmax and router
+logits in fp32 (mixed-precision policy). Attention tensors are
+(B, S, H, head_dim); GQA repeats are expressed via reshape-to-groups einsums
+(never materializing repeated KV).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_inv_freq(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., Dh) with cos/sin broadcastable to (..., Dh/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(
+        x.dtype
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    inv = rope_inv_freq(x.shape[-1], theta)  # (Dh/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: Tuple[int, ...],
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): the Dh/2 frequency slots are split into
+    temporal/height/width ``sections``; each section rotates by its own
+    position stream. x: (B, S, H, Dh); positions: (3, B, S) int32."""
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    inv = rope_inv_freq(dh, theta)  # (Dh/2,)
+    ang_all = positions.astype(jnp.float32)[..., None] * inv  # (3, B, S, Dh/2)
+    pieces = []
+    start = 0
+    for axis, sec in enumerate(sections):
+        pieces.append(ang_all[axis, :, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(pieces, axis=-1)  # (B, S, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Sq, K, G, Dh) grouped query; k: (B, Skv, K, Dh) →
+    scores (B, K, G, Sq, Skv), fp32."""
+    return jnp.einsum(
+        "bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    )
+
+
+def attention_full(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,
+) -> jax.Array:
+    """Reference attention (materializes S² scores — smoke tests / oracle).
+    q: (B, Sq, H, Dh); k, v: (B, Skv, K, Dh); returns (B, Sq, H, Dh)."""
+    b, sq, h, dh = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, kheads, g, dh)
+    scores = _gqa_scores(qg, k) * scale  # (B, K, G, Sq, Skv)
+    if causal:
+        skv = k.shape[1]
+        rows = jnp.arange(sq)[:, None] + q_offset
+        cols = jnp.arange(skv)[None, :]
+        scores = jnp.where(rows >= cols, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh)
+
+
+def attention_blockwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    causal: bool = True,
+) -> jax.Array:
+    """FlashAttention-style blockwise attention in pure JAX (the memory-sane
+    reference the dry-run lowers; the Pallas kernel is the TPU-optimized
+    twin). Online softmax over kv blocks, scanned over q blocks: peak live
+    score tensor is (B, K, G, q_block, kv_block).
+
+    Fully-masked kv blocks (strictly above the diagonal) still *compute* and
+    are then masked — trip counts stay static so XLA cost analysis remains
+    exact; the kernel skips them properly on TPU (see DESIGN.md §Roofline).
+    """
+    b, s, h, dh = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    assert s % q_block == 0 and s % kv_block == 0, (s, q_block, kv_block)
+    nq, nkv = s // q_block, s // kv_block
+    scale = 1.0 / math.sqrt(dh)
+
+    qs = q.reshape(b, nq, q_block, kheads, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(b, nkv, kv_block, kheads, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nkv, kv_block, kheads, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_idx):
+        qi, iq = qi_idx  # qi: (B, q_block, K, G, Dh)
+        rows = iq * q_block + jnp.arange(q_block)  # (q_block,)
+
+        def kv_step(carry, kv_idx):
+            m, l, acc = carry
+            (kj, vj, jk) = kv_idx
+            cols = jk * kv_block + jnp.arange(kv_block)
+            s_blk = (
+                jnp.einsum(
+                    "bqkgd,bskd->bkgqs",
+                    qi.astype(jnp.float32),
+                    kj.astype(jnp.float32),
+                )
+                * scale
+            )
+            if causal:
+                mask = rows[:, None] >= cols[None, :]
+                s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+            m_new = jnp.maximum(m, s_blk.max(axis=-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vj.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kheads, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kheads, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kheads, g, q_block, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (ks, vs, jnp.arange(nkv))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, K, G, q_block, Dh)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B, q_block, K, G, Dh)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    # outs: (nq, B, q_block, K, G, Dh)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
+def attention_decode(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_index: jax.Array,
+) -> jax.Array:
+    """One-token decode against a (B, S, K, Dh) KV cache; positions strictly
+    after ``cur_index`` are masked. q: (B, 1, H, Dh)."""
+    b, _, h, dh = q.shape
+    kheads = k_cache.shape[2]
+    g = h // kheads
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, 1, kheads, g, dh)
+    scores = _gqa_scores(qg, k_cache) * scale  # (B, K, G, 1, S)
+    valid = jnp.arange(k_cache.shape[1])[None, :] <= cur_index  # (1, S) vs scalar
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_apply(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    """SwiGLU / GeGLU gated MLP, or plain GELU FFN: (B, S, D) → (B, S, D)."""
+    gate = jnp.einsum("bsd,df->bsf", x, params["wi_gate"])
+    if kind == "swiglu":
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    elif kind in ("geglu", "gelu"):
+        act = jax.nn.gelu(gate.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        raise KeyError(kind)
+    if kind != "gelu":  # gated variants multiply by the up projection
+        act = act * jnp.einsum("bsd,df->bsf", x, params["wi_up"])
+    return jnp.einsum("bsf,fd->bsd", act, params["wo"])
+
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, dtype, kind: str = "swiglu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "wi_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if kind != "gelu":
+        p["wi_up"] = (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype)
+    return p

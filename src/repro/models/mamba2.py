@@ -1,0 +1,136 @@
+"""Mamba-2 block [arXiv:2405.21060]: in_proj → short causal depthwise conv →
+SSD sequence transform → gated RMSNorm → out_proj.
+
+Sequence path uses the chunked SSD (``kernels/ssd``: Pallas on TPU, pure-jnp
+reference elsewhere); decode path keeps a recurrent (conv window, SSM state)
+cache per layer — O(1) per token, which is why the SSM archs run long_500k.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.ssd.ref import ssd_decode_step, ssd_reference
+from .layers import rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_d_inner
+    nh = cfg.ssm_n_heads
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * n  # x, B, C all pass through the conv
+    return d_in, nh, n, conv_dim
+
+
+def mamba2_init(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in, nh, n, conv_dim = _dims(cfg)
+    keys = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    # in_proj emits [z (d_in), xBC (conv_dim), dt (nh)]
+    return {
+        "in_proj": (
+            jax.random.normal(keys[0], (d, 2 * d_in + 2 * n + nh)) * s_in
+        ).astype(dtype),
+        "conv_w": (jax.random.normal(keys[1], (cfg.ssm_conv_width, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": (
+            jax.random.normal(keys[3], (d_in, d)) / math.sqrt(d_in)
+        ).astype(dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W: y_t = Σ_w x_{t-W+1+w} · w_w + b.
+    Expressed as W shifted adds (no conv primitive needed — fuses trivially).
+    xbc: (B, S, C)."""
+    width = w.shape[0]
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        shift = width - 1 - i
+        if shift == 0:
+            out = out + xbc * w[i]
+        else:
+            out = out + jnp.pad(xbc, ((0, 0), (shift, 0), (0, 0)))[:, : xbc.shape[1]] * w[i]
+    return out + b
+
+
+def _split(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_in, nh, n, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim :]
+    return z, xbc, dt
+
+
+def mamba2_apply(
+    params: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    ssd_fn=None,
+) -> jax.Array:
+    d_in, nh, n, conv_dim = _dims(cfg)
+    b, s, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = _split(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :d_in].reshape(b, s, nh, cfg.ssm_head_dim)
+    b_mat = xbc[..., d_in : d_in + n]
+    c_mat = xbc[..., d_in + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    a = -jnp.exp(params["a_log"])  # (nh,) < 0
+    ssd = ssd_fn or ssd_reference
+    y, _ = ssd(xs, dt, a, b_mat, c_mat)
+    y = y + params["d_skip"][None, None, :, None] * xs  # D skip connection
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# decode path: recurrent cache = (conv window, ssm state)
+# ---------------------------------------------------------------------------
+def mamba2_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_in, nh, n, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def mamba2_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, D)
+    cache: dict,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, dict]:
+    d_in, nh, n, conv_dim = _dims(cfg)
+    b = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt = _split(cfg, zxbcdt)  # xbc: (B, 1, conv_dim)
+
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, W, conv_dim)
+    conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    xbc_t = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)  # (B, conv_dim)
+
+    xs = xbc_t[:, :d_in].reshape(b, nh, cfg.ssm_head_dim)
+    b_vec = xbc_t[:, d_in : d_in + n]
+    c_vec = xbc_t[:, d_in + n :]
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B, nh)
+    a = -jnp.exp(params["a_log"])
+
+    y, h_new = ssd_decode_step(cache["ssm"], xs, dt_t, a, b_vec, c_vec)
+    y = y + params["d_skip"][None, :, None] * xs
+    y = y.reshape(b, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    new_cache = {"conv": window[:, 1:], "ssm": h_new}
+    return out, new_cache

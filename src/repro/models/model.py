@@ -1,0 +1,537 @@
+"""Generic decoder stack: instantiates every assigned architecture from its
+``ModelConfig`` (DESIGN.md §4).
+
+Layers are grouped into a repeating *cycle* (Jamba's 8-layer Mamba/attention
+pattern, or a single layer for uniform stacks) and the stack is a
+``lax.scan`` over cycles — keeping HLO size and compile time independent of
+depth (88–94-layer configs) and making remat policies uniform.
+
+Three execution modes share one block implementation:
+  train    — full sequence, no cache (logits + MoE aux loss)
+  prefill  — full sequence, emits per-layer cache (KV / SSM state)
+  decode   — one token against the cache (serve_step)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.act import constrain
+from .layers import (
+    apply_mrope,
+    apply_rope,
+    attention_blockwise,
+    attention_decode,
+    attention_full,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+)
+from .mamba2 import (
+    mamba2_apply,
+    mamba2_cache_init,
+    mamba2_decode,
+    mamba2_init,
+)
+from .moe import moe_apply, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    """Per-call execution knobs (the FARSI-tunable 'swap' dimension)."""
+
+    attn_impl: str = "auto"  # "auto" | "full" | "blockwise" | "kernel"
+    q_block: int = 512
+    kv_block: int = 1024
+    remat: str = "none"  # "none" | "full" | "dots"
+    ssd_chunk: int = 64
+    moe_impl: str = "dense"  # "dense" | "shard_map" (EP local-dispatch)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _attn_init(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, h, k_, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    keys = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(h * dh)
+    p = {
+        "wq": (jax.random.normal(keys[0], (d, h * dh)) * s_in).astype(dtype),
+        "wk": (jax.random.normal(keys[1], (d, k_ * dh)) * s_in).astype(dtype),
+        "wv": (jax.random.normal(keys[2], (d, k_ * dh)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(keys[3], (h * dh, d)) * s_out).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dtype)
+        p["k_norm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def _pos_init(key: jax.Array, cfg: ModelConfig, pos: int, dtype) -> dict:
+    kind = cfg.block_kinds[pos]
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind == "attn":
+        p["mixer"] = _attn_init(k1, cfg, dtype)
+    else:
+        p["mixer"] = mamba2_init(k1, cfg, dtype)
+    mk = cfg.mlp_kind_at(pos)
+    if mk == "dense":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype, cfg.mlp_kind)
+    elif mk == "moe":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["mlp"] = moe_init(k2, cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, cfg.cycle_len + 2)
+    layers = []
+    for pos in range(cfg.cycle_len):
+        cycle_keys = jax.random.split(keys[pos], cfg.n_cycles)
+        layers.append(jax.vmap(lambda k, p=pos: _pos_init(k, cfg, p, dtype))(cycle_keys))
+    params: Dict[str, Any] = {
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.input_mode == "tokens":
+        params["embed"] = (
+            jax.random.normal(keys[-2], (cfg.vocab_size, cfg.d_model)) * 0.02
+        ).astype(dtype)
+    if not (cfg.tie_embeddings and cfg.input_mode == "tokens"):
+        params["lm_head"] = (
+            jax.random.normal(keys[-1], (cfg.d_model, cfg.vocab_size))
+            / math.sqrt(cfg.d_model)
+        ).astype(dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+def _attn_seq(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    flags: RunFlags,
+    positions: jax.Array,
+    mrope_positions: Optional[jax.Array],
+    want_cache: bool,
+):
+    b, s, _ = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, kh, dh)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, kh, dh)
+    q = constrain(q, ("batch", "seq", "act_heads", None))
+    k = constrain(k, ("batch", "seq", "act_kv_heads", "act_kv_dim"))
+    v = constrain(v, ("batch", "seq", "act_kv_heads", "act_kv_dim"))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        mp = (
+            mrope_positions
+            if mrope_positions is not None
+            else jnp.broadcast_to(positions[None], (3, b, s))
+        )
+        q = apply_mrope(q, mp, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mp, cfg.rope_theta, cfg.mrope_sections)
+
+    impl = flags.attn_impl
+    if impl == "auto":
+        impl = "full" if s <= 1024 else "blockwise"
+    if impl == "kernel":
+        from ..kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(q, k, v, causal=True)
+    elif impl == "blockwise":
+        from .flash_ref import flash_attention_ref
+
+        qb = min(flags.q_block, s)
+        kb = min(flags.kv_block, s)
+        out = flash_attention_ref(q, k, v, True, qb, kb)
+    else:
+        out = attention_full(q, k, v, causal=True)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * dh), p["wo"])
+    cache = {"k": k, "v": v} if want_cache else None
+    return y, cache
+
+
+def _attn_decode(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: dict,
+    cur_index: jax.Array,
+    mrope_positions: Optional[jax.Array],
+):
+    b, s, _ = x.shape  # s == 1
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, kh, dh)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, kh, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    positions = jnp.broadcast_to(cur_index[None, None], (b, 1)).astype(jnp.int32)
+    if cfg.rope_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_kind == "mrope":
+        mp = (
+            mrope_positions
+            if mrope_positions is not None
+            else jnp.broadcast_to(positions[None], (3, b, 1))
+        )
+        q = apply_mrope(q, mp, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mp, cfg.rope_theta, cfg.mrope_sections)
+    if "k_scale" in cache:  # int8 KV cache (per-token, per-head absmax)
+        def quantize(x_):
+            scale = jnp.max(jnp.abs(x_.astype(jnp.float32)), axis=-1) / 127.0
+            scale = jnp.maximum(scale, 1e-8)
+            q_ = jnp.round(x_.astype(jnp.float32) / scale[..., None]).astype(jnp.int8)
+            return q_, scale.astype(jnp.bfloat16)
+
+        kq, ks = quantize(k)
+        vq, vs = quantize(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, cur_index, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, cur_index, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, cur_index, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, cur_index, 0)),
+        }
+        k_cache = (
+            new_cache["k"].astype(jnp.bfloat16)
+            * new_cache["k_scale"].astype(jnp.bfloat16)[..., None]
+        )
+        v_cache = (
+            new_cache["v"].astype(jnp.bfloat16)
+            * new_cache["v_scale"].astype(jnp.bfloat16)[..., None]
+        )
+    else:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cur_index, 0, 0)
+            ),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cur_index, 0, 0)
+            ),
+        }
+        k_cache, v_cache = new_cache["k"], new_cache["v"]
+    out = attention_decode(q, k_cache, v_cache, cur_index)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, h * dh), p["wo"])
+    return y, new_cache
+
+
+def _block_seq(
+    pos: int,
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    flags: RunFlags,
+    positions: jax.Array,
+    mrope_positions,
+    want_cache: bool,
+):
+    kind = cfg.block_kinds[pos]
+    normed = rms_norm(x, p["norm1"], cfg.norm_eps)
+    # Megatron-SP boundary: the residual stream is sequence-sharded over the
+    # model axis (seq_res rule); block inputs re-gather to full sequence here
+    # (lowers to all-gather), and the residual add below reduce-scatters back.
+    normed = constrain(normed, ("batch", None, "act_embed"))
+    cache = None
+    if kind == "attn":
+        h, cache = _attn_seq(p["mixer"], normed, cfg, flags, positions, mrope_positions, want_cache)
+    else:
+        from ..kernels.ssd.ref import ssd_reference
+
+        h = mamba2_apply(
+            p["mixer"], normed, cfg, ssd_fn=partial(ssd_reference, chunk=min(flags.ssd_chunk, x.shape[1]))
+        )
+        if want_cache:
+            # sequence-mode cache: rebuild recurrent state for decode handoff
+            cache = _mamba_prefill_cache(p["mixer"], normed, cfg, flags)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    mk = cfg.mlp_kind_at(pos)
+    if mk == "dense":
+        h2 = constrain(rms_norm(x, p["norm2"], cfg.norm_eps), ("batch", None, "act_embed"))
+        x = x + mlp_apply(p["mlp"], h2, cfg.mlp_kind)
+    elif mk == "moe":
+        from ..sharding.act import current_context
+
+        ctx = current_context()
+        if (
+            flags.moe_impl == "shard_map"
+            and ctx is not None
+            and cfg.n_experts % ctx[1].shape.get("model", 1) == 0
+        ):
+            from .moe_shard_map import moe_apply_shard_map
+
+            rules, mesh = ctx
+            h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+            y, aux = moe_apply_shard_map(p["mlp"], h2, cfg, mesh, rules)
+        else:
+            h2 = constrain(rms_norm(x, p["norm2"], cfg.norm_eps), ("batch", None, "act_embed"))
+            y, aux = moe_apply(p["mlp"], h2, cfg)
+        x = x + y
+    return x, cache, aux
+
+
+def _mamba_prefill_cache(p: dict, h: jax.Array, cfg: ModelConfig, flags: RunFlags) -> dict:
+    """Recompute the (conv window, final SSM state) after a prefill pass."""
+    from .mamba2 import _dims, _split
+    from ..kernels.ssd.ref import ssd_reference
+
+    d_in, nh, n, conv_dim = _dims(cfg)
+    b, s, _ = h.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    _, xbc_raw, dt = _split(cfg, zxbcdt)
+    from .mamba2 import _causal_conv
+
+    xbc = jax.nn.silu(
+        _causal_conv(xbc_raw, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    ).astype(h.dtype)
+    xs = xbc[..., :d_in].reshape(b, s, nh, cfg.ssm_head_dim)
+    b_mat = xbc[..., d_in : d_in + n]
+    c_mat = xbc[..., d_in + n :]
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    _, h_final = ssd_reference(
+        xs, dt_sp, a, b_mat, c_mat, chunk=min(flags.ssd_chunk, s)
+    )
+    w = cfg.ssm_conv_width
+    return {"conv": xbc_raw[:, s - (w - 1) :, :], "ssm": h_final}
+
+
+def _block_decode(
+    pos: int,
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    cache: dict,
+    cur_index: jax.Array,
+    mrope_positions,
+):
+    kind = cfg.block_kinds[pos]
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        h, new_cache = _attn_decode(p["mixer"], h, cfg, cache, cur_index, mrope_positions)
+    else:
+        h, new_cache = mamba2_decode(p["mixer"], h, cache, cfg)
+    x = x + h
+    mk = cfg.mlp_kind_at(pos)
+    if mk == "dense":
+        x = x + mlp_apply(p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps), cfg.mlp_kind)
+    elif mk == "moe":
+        y, _ = moe_apply(p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps), cfg)
+        x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+def cast_params(params, compute_dtype):
+    """Mixed-precision policy: matrices compute in bf16; the MoE router and
+    the fp32 SSM scalars (a_log, dt_bias, d_skip) and all 1-D norm scales
+    keep full precision."""
+
+    def cast(path, a):
+        name = str(path[-1]) if path else ""
+        if "router" in name:
+            return a
+        if a.ndim >= 2 and a.dtype == jnp.float32:
+            return a.astype(compute_dtype)
+        return a
+
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+def _embed(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array], compute_dtype):
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    else:
+        x = batch["embeds"]
+    x = x.astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
+    return x
+
+
+def _head(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings and "embed" in params:
+        w = params["embed"].T.astype(x.dtype)
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    # bf16 matmul with fp32 accumulation — logits feed the fp32 CE loss
+    logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+    return constrain(logits, ("batch", "seq", "act_vocab"))
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    flags: RunFlags = RunFlags(),
+    compute_dtype=jnp.bfloat16,
+    want_cache: bool = False,
+):
+    """Sequence-mode forward: returns (logits fp32, aux, cache|None)."""
+    params = cast_params(params, compute_dtype)
+    x = _embed(params, cfg, batch, compute_dtype)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    mrope_positions = batch.get("mrope_positions")
+
+    x = constrain(x, ("batch", "seq_res", "act_embed"))
+
+    def cycle_body(carry, cycle_params):
+        x, aux = carry
+        caches = []
+        for pos in range(cfg.cycle_len):
+            x, cache, a = _block_seq(
+                pos, cycle_params[pos], x, cfg, flags, positions, mrope_positions, want_cache
+            )
+            x = constrain(x, ("batch", "seq_res", "act_embed"))
+            aux = aux + a
+            caches.append(cache)
+        out = tuple(caches) if want_cache else None
+        return (x, aux), out
+
+    body = cycle_body
+    if flags.remat == "full":
+        body = jax.checkpoint(cycle_body)
+    elif flags.remat == "dots":
+        body = jax.checkpoint(
+            cycle_body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    logits = _head(params, cfg, x).astype(jnp.float32)
+    return logits, aux, caches
+
+
+def forward_hidden(
+    params: dict,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    flags: RunFlags = RunFlags(),
+    compute_dtype=jnp.bfloat16,
+):
+    """Forward without the LM head: returns (hidden (B,S,D) post-final-norm
+    pre-head, aux). The training loss streams the head over sequence chunks
+    (train/step.py) so full fp32 logits never materialize."""
+    params = cast_params(params, compute_dtype)
+    x = _embed(params, cfg, batch, compute_dtype)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    mrope_positions = batch.get("mrope_positions")
+    x = constrain(x, ("batch", "seq_res", "act_embed"))
+
+    def cycle_body(carry, cycle_params):
+        x, aux = carry
+        for pos in range(cfg.cycle_len):
+            x, _, a = _block_seq(
+                pos, cycle_params[pos], x, cfg, flags, positions, mrope_positions, False
+            )
+            x = constrain(x, ("batch", "seq_res", "act_embed"))
+            aux = aux + a
+        return (x, aux), None
+
+    body = cycle_body
+    if flags.remat == "full":
+        body = jax.checkpoint(cycle_body)
+    elif flags.remat == "dots":
+        body = jax.checkpoint(
+            cycle_body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def head_matrix(params: dict, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    params = cast_params(params, compute_dtype)
+    if cfg.tie_embeddings and "embed" in params:
+        return params["embed"].T.astype(compute_dtype)
+    return params["lm_head"].astype(compute_dtype)
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16, kv_quant: str = "none"
+):
+    """Decode cache pytree: per cycle position, stacked over cycles.
+    ``kv_quant='int8'`` stores KV as int8 with a per-(token, head) absmax
+    scale — halving both the cache footprint and the decode HBM-read term
+    (the dominant roofline term of every decode cell)."""
+    caches = []
+    for pos, kind in enumerate(cfg.block_kinds):
+        if kind == "attn":
+            shape = (cfg.n_cycles, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+            if kv_quant == "int8":
+                sshape = shape[:-1]
+                caches.append(
+                    {
+                        "k": jnp.zeros(shape, jnp.int8),
+                        "v": jnp.zeros(shape, jnp.int8),
+                        "k_scale": jnp.zeros(sshape, jnp.bfloat16),
+                        "v_scale": jnp.zeros(sshape, jnp.bfloat16),
+                    }
+                )
+                continue
+            caches.append({"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)})
+        else:
+            c = mamba2_cache_init(cfg, batch, dtype)
+            caches.append(
+                jax.tree.map(lambda a: jnp.zeros((cfg.n_cycles,) + a.shape, a.dtype), c)
+            )
+    return tuple(caches)
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    cache,
+    batch: Dict[str, jax.Array],
+    cur_index: jax.Array,
+    flags: RunFlags = RunFlags(),
+    compute_dtype=jnp.bfloat16,
+):
+    """serve_step: one new token against the cache. Returns (logits, cache)."""
+    params = cast_params(params, compute_dtype)
+    x = _embed(params, cfg, batch, compute_dtype)
+    mrope_positions = batch.get("mrope_positions")
+
+    def cycle_body(x, inp):
+        cycle_params, cycle_cache = inp
+        new_caches = []
+        for pos in range(cfg.cycle_len):
+            x, nc = _block_decode(
+                pos, cycle_params[pos], x, cfg, cycle_cache[pos], cur_index, mrope_positions
+            )
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(cycle_body, x, (params["layers"], cache))
+    logits = _head(params, cfg, x).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,100 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+Dispatch uses the deterministic position-in-expert construction (one-hot
+cumsum over the token axis — GShard/Switch style) so every shape is static
+under jit/pjit: tokens beyond an expert's capacity are dropped (standard
+capacity-factor semantics), and the combine weights renormalize the kept
+experts per token.
+
+Sharding: tokens (B·S) ride the data axes; expert weights (E, D, F) shard E
+over the model axis when E divides it (EP) and F otherwise (expert-TP) — see
+``repro.sharding.rules``. XLA's SPMD partitioner materializes the token
+exchange as all-to-all / all-gather collectives; the §Perf loop tunes which.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding.act import constrain
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return {
+        "router": (jax.random.normal(k1, (d, e)) * s_in).astype(jnp.float32),
+        "wi_gate": (jax.random.normal(k2, (e, d, f)) * s_in).astype(dtype),
+        "wi_up": (jax.random.normal(k3, (e, d, f)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k4, (e, f, d)) * s_out).astype(dtype),
+    }
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(cfg.top_k, min(c, n_tokens))
+
+
+def moe_apply(
+    params: dict, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (y (B, S, D), aux_loss scalar). Static capacity."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    c = capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch):  E · Σ_e f_e · p_e
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # position-in-expert via one-hot cumsum over the flat assignment axis
+    flat_e = expert_idx.reshape(t * k)  # token-major → earlier tokens win capacity
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T·k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - 1) * onehot
+    pos_in_e = pos.sum(axis=-1)  # (T·k,)
+    keep = pos_in_e < c
+
+    # scatter into (E·C, D): dropped assignments contribute masked zeros at
+    # slot 0 instead of an overflow row, so every flat dim stays divisible
+    # and the dispatch tensors can live sharded (they are T·k × d_model —
+    # replicating them costs tens of GB/device at 1M-token prefill)
+    slot = jnp.where(keep, flat_e * c + pos_in_e, 0)
+    x_rep = jnp.broadcast_to(xf[:, None, :], (t, k, d)).reshape(t * k, d)
+    x_rep = constrain(x_rep, ("moe_flat", None))
+    x_rep = x_rep * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((e * c, d), x.dtype).at[slot].add(x_rep)
+    grouped = buf.reshape(e, c, d)
+    # pin the dispatch buffer to the expert-parallel layout: E over 'model',
+    # capacity over the data axes (the token exchange lowers to all-to-all)
+    grouped = constrain(grouped, ("experts", "exp_capacity", None))
+
+    # expert MLPs (grouped einsum — the Megablocks-style GMM fusion target)
+    gate = jnp.einsum("ecd,edf->ecf", grouped, params["wi_gate"])
+    up = jnp.einsum("ecd,edf->ecf", grouped, params["wi_up"])
+    if cfg.mlp_kind == "geglu":
+        act = jax.nn.gelu(gate.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    h = jnp.einsum("ecf,efd->ecd", act * up, params["wo"])  # (E, C, D)
+    h = constrain(h, ("experts", "exp_capacity", None))
+
+    # combine: gather each kept assignment back, weight by its gate
+    # (dropped assignments gather slot 0 and are zeroed by the keep mask)
+    h_flat = h.reshape(e * c, d)
+    y_rep = h_flat[slot] * (gate_vals.reshape(t * k, 1) * keep[:, None]).astype(h.dtype)
+    y_rep = constrain(y_rep, ("moe_flat", None))
+    y = y_rep.reshape(t, k, d).sum(axis=1)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,66 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule (pure pytree
+implementation — optimizer state shards exactly like the parameters)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.peak_lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params), "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(
+    grads, state: Dict[str, Any], params, cfg: AdamWConfig
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    count = state["count"] + 1
+    lr = schedule(count, cfg)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    m = jax.tree.map(lambda m_, g: cfg.b1 * m_ + (1 - cfg.b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: cfg.b2 * v_ + (1 - cfg.b2) * g * g, state["v"], grads)
+    bc1 = 1 - cfg.b1**count.astype(jnp.float32)
+    bc2 = 1 - cfg.b2**count.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step_ = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        return (p.astype(jnp.float32) - lr * (step_ + cfg.weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": count}, {"lr": lr, "grad_norm": gnorm}

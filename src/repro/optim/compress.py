@@ -1,0 +1,57 @@
+"""Error-feedback int8 gradient compression [1-bit Adam / EF-SGD lineage;
+Seide et al. 2014, arXiv:2102.02888].
+
+The DP gradient reduction is the only cross-pod collective in the training
+step; quantizing its payload to int8 (per-leaf absmax scale) cuts the
+inter-pod ICI term ~4× for fp32 grads. The quantization residual is carried
+in an error-feedback buffer so the *accumulated* update is unbiased — the
+standard trick that keeps convergence intact.
+
+Usage (wired via DistConfig.grad_compress="int8"):
+    grads_q, err = compress_with_feedback(grads, err)
+    # all-reduce grads_q.payload (int8) + scale, then
+    grads = decompress(grads_q)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    payload: Any  # int8 pytree
+    scale: Any  # fp32 scalar per leaf
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, error) -> Tuple[Compressed, Any]:
+    """Quantize (grads + carried error) to int8; return new error = residual."""
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, 1e-12)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        new_e = x - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(error)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat, eflat):
+        q, s, ne = one(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    unf = lambda xs: jax.tree.unflatten(treedef, xs)
+    return Compressed(unf(qs), unf(scales)), unf(errs)
+
+
+def decompress(c: Compressed):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, c.payload, c.scale
+    )

@@ -1,0 +1,81 @@
+"""HLO-text parsing: collective operand bytes per category.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled module text and sum the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction.
+
+Collectives inside a while body (lax.scan over layer cycles) appear once in
+the text; the roofline analysis multiplies per-computation totals by the
+known trip counts compositionally (roofline/analysis.py) — the whole-graph
+numbers returned here are the raw, single-visit sums.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-reduce.7 = f32[16,512]{1,0} all-reduce(f32[16,512]{1,0} %x), ...
+_INSTR_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective category over the whole module text.
+    ``*-done`` ops are skipped (the ``*-start`` carries the shape)."""
+    out: Dict[str, int] = {c: 0 for c in COLLECTIVES}
+    out["count"] = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        dtype, dims, kind = m.groups()
+        if "-done" in m.group(0):
+            continue
+        out[kind] += _shape_bytes(dtype, dims)
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    return out
+
+
+def collective_bytes_per_computation(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """Same sums, but grouped by HLO computation name (lets the caller apply
+    while-loop trip counts to loop bodies)."""
+    comps: Dict[str, Dict[str, int]] = {}
+    cur = "<module>"
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{$", stripped)
+        if stripped.endswith("{") and ("(" in stripped and "->" in stripped):
+            name = stripped.split()[0].lstrip("%")
+            cur = name
+            continue
+        im = _INSTR_RE.search(line)
+        if im:
+            dtype, dims, kind = im.groups()
+            d = comps.setdefault(cur, {c: 0 for c in COLLECTIVES})
+            d[kind] += _shape_bytes(dtype, dims)
+    for d in comps.values():
+        d["total"] = sum(d[c] for c in COLLECTIVES)
+    return comps

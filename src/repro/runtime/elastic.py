@@ -1,0 +1,55 @@
+"""Elastic scaling: re-map a training state onto a different mesh.
+
+Checkpoints are topology-free (plain numpy per leaf), so elasticity reduces
+to re-deriving shardings for the *current* mesh from the same logical rules
+and re-placing leaves. ``shrink_mesh`` proposes the largest viable mesh from
+the surviving device count (keeping the model axis intact first — TP degree
+is baked into layout efficiency; the data axis absorbs losses, with the
+global batch re-split across fewer data shards).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..sharding.rules import default_rules, tree_shardings
+from ..sharding.specs import param_logical
+
+
+def shrink_mesh(n_devices: int, model_axis: int = 16) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Largest (data, model) mesh with data a power of two that fits
+    ``n_devices``. Falls back to smaller model axes if necessary."""
+    while model_axis > 1:
+        if n_devices >= model_axis:
+            data = 1
+            while data * 2 * model_axis <= n_devices:
+                data *= 2
+            return (data, model_axis), ("data", "model")
+        model_axis //= 2
+    return (max(n_devices, 1), 1), ("data", "model")
+
+
+def state_shardings(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    state_struct: Any,
+    rules: Optional[Dict] = None,
+):
+    """Shardings for a {params, opt{m,v,count}, step} train state on ``mesh``."""
+    rules = rules or default_rules(cfg, shape, mesh)
+    p_logical = param_logical(cfg)
+    logical = {
+        "params": p_logical,
+        "opt": {"m": p_logical, "v": p_logical, "count": ()},
+        "step": (),
+    }
+    return tree_shardings(state_struct, logical, rules, mesh)
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """Re-place every leaf with the new sharding (cross-mesh device_put)."""
+    return jax.tree.map(jax.device_put, state, shardings)

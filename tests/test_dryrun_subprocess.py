@@ -1,0 +1,48 @@
+"""Integration: the multi-pod dry-run path end-to-end in a subprocess (the
+XLA_FLAGS=512-devices header must run before jax init, so it gets its own
+process). Uses the two cheapest cells to keep CI time bounded; the full
+64-cell sweep lives in experiments/dryrun/."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize(
+    "arch,shape,multi",
+    [
+        ("mamba2-370m", "decode_32k", False),
+        ("qwen2-vl-2b", "decode_32k", True),
+    ],
+)
+def test_dryrun_cell_subprocess(arch, shape, multi):
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape,
+    ] + (["--multi-pod"] if multi else [])
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)  # dryrun must set it itself
+    out = subprocess.run(
+        cmd, cwd=REPO, env=env, capture_output=True, text=True, timeout=480
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "1/1 cells OK" in out.stdout
+
+
+def test_launch_train_cli_subprocess():
+    """The production launcher end-to-end on the host mesh."""
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "qwen3-1.7b", "--reduced", "--steps", "6",
+        "--seq-len", "32", "--global-batch", "4", "--save-every", "3",
+        "--ckpt-dir", "/tmp/repro_cli_test_ckpt",
+    ]
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        cmd, cwd=REPO, env=env, capture_output=True, text=True, timeout=480
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "done: 6 steps" in out.stdout

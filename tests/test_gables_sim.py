@@ -1,0 +1,177 @@
+"""Extended-Gables analytical models (Eqs. 1–6) + phase-driven simulator on
+hand-solvable systems, and phase-vs-event fidelity properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Design,
+    HardwareDatabase,
+    Task,
+    TaskGraph,
+    simulate,
+    simulate_events,
+)
+from repro.core.gables import completion_time, phase_rates
+
+
+def _single_task_graph(f=8e8, i_r=10.0, i_w=20.0, llp=1.0):
+    g = TaskGraph("g")
+    g.add_task(Task("t0", work_ops=f, i_read=i_r, i_write=i_w, llp=llp))
+    return g
+
+
+def test_eq1_eq5_single_task():
+    """One task on a 100 MHz GPP (2 ops/cycle): C_T = max(f/P, D_r/B, D_w/B)."""
+    db = HardwareDatabase()
+    g = _single_task_graph()
+    d = Design.base(g)
+    res = simulate(d, g, db)
+    p_peak = 100e6 * 2
+    b_peak = 100e6 * 32  # mem 100 MHz × 32 B
+    t = g.tasks["t0"]
+    expected = max(t.work_ops / p_peak, t.read_bytes / b_peak, t.write_bytes / b_peak)
+    assert math.isclose(res.latency_s, expected, rel_tol=1e-9)
+    assert res.n_phases == 1
+
+
+def test_eq1_preemptive_sharing():
+    """Two independent compute-bound tasks on one PE finish in 2× the time
+    (Eq. 1: P/|T|) but identical total (equal share, same completion)."""
+    db = HardwareDatabase()
+    g = TaskGraph("g")
+    g.add_task(Task("a", work_ops=4e8, i_read=1e9, i_write=1e9))
+    g.add_task(Task("b", work_ops=4e8, i_read=1e9, i_write=1e9))
+    d = Design.base(g)
+    res = simulate(d, g, db)
+    single = 4e8 / (100e6 * 2)
+    assert math.isclose(res.latency_s, 2 * single, rel_tol=1e-6)
+
+
+def test_eq4_burst_proportional_memory():
+    """Memory bandwidth divides by burst ratio: a task with 3× burst gets 3×
+    bandwidth (Eq. 4), so the two finish together when data scales 3:1."""
+    db = HardwareDatabase()
+    g = TaskGraph("g")
+    # communication-bound tasks (tiny compute): data ∝ burst
+    g.add_task(Task("big", work_ops=1.0, i_read=1.0 / 3e6, i_write=1e30, burst_bytes=192))
+    g.add_task(Task("small", work_ops=1.0, i_read=1.0 / 1e6, i_write=1e30, burst_bytes=64))
+    d = Design.base(g)
+    rates = phase_rates(d, g, ["big", "small"], db)
+    assert math.isclose(rates["big"].read_bw / rates["small"].read_bw, 3.0, rel_tol=1e-9)
+    c_big = completion_time(g.tasks["big"], rates["big"])
+    c_small = completion_time(g.tasks["small"], rates["small"])
+    assert math.isclose(c_big, c_small, rel_tol=1e-6)
+
+
+def test_eq6_phase_boundaries_on_dependencies():
+    """A chain of n tasks ⇒ n phases (each completion shifts the bottleneck)."""
+    db = HardwareDatabase()
+    g = TaskGraph("g")
+    prev = None
+    for i in range(4):
+        g.add_task(Task(f"t{i}", work_ops=2e8, i_read=50, i_write=50))
+        if prev:
+            g.add_edge(prev, f"t{i}", 1e5)
+        prev = f"t{i}"
+    d = Design.base(g)
+    res = simulate(d, g, db)
+    assert res.n_phases == 4
+    assert math.isclose(res.latency_s, 4 * (2e8 / 2e8), rel_tol=1e-6)
+
+
+def test_accelerator_speedup_eq2():
+    db = HardwareDatabase()
+    g = _single_task_graph(f=8e8, i_r=1e9, i_w=1e9, llp=64.0)
+    d = Design.base(g)
+    base = simulate(d, g, db).latency_s
+    # harden: swap the GPP into an accelerator for t0 with unroll 8
+    pe = d.blocks[d.task_pe["t0"]]
+    pe.subtype = "acc"
+    pe.hardened_for = "t0"
+    pe.unroll = 8
+    acc = simulate(d, g, db).latency_s
+    expected_speedup = db.a_peak("t0", llp=64.0, unroll=8)
+    assert math.isclose(base / acc, expected_speedup, rel_tol=1e-6)
+    # unroll beyond LLP is capped (Table 3: "according to the task")
+    pe.unroll = 1024
+    capped = simulate(d, g, db).latency_s
+    assert math.isclose(base / capped, db.a_peak_base("t0") * 64.0, rel_tol=1e-6)
+
+
+def test_noc_multi_hop_route():
+    """A buffer two NoCs away is bottlenecked by the slowest link and counts
+    hops in energy (locality reasoning substrate)."""
+    from repro.core.blocks import make_gpp, make_mem, make_noc
+
+    db = HardwareDatabase()
+    g = _single_task_graph(f=1.0, i_r=1.0 / 3.2e6, i_w=1e30)
+    d = Design()
+    n0 = d.add_block(make_noc(freq_mhz=800, width_bytes=32))
+    n1 = d.add_block(make_noc(freq_mhz=100, width_bytes=4))  # slow far link
+    pe = d.add_block(make_gpp(800), attach_to=n0.name)
+    m = d.add_block(make_mem("dram", 800, 256), attach_to=n1.name)
+    d.task_pe["t0"] = pe.name
+    d.task_mem["t0"] = m.name
+    assert d.hops("t0") == 2
+    res = simulate(d, g, db)
+    slow_bw = 100e6 * 4
+    assert math.isclose(res.latency_s, 3.2e6 / slow_bw, rel_tol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# phase-sim vs event-sim (the §4 fidelity claim, as properties)
+# ---------------------------------------------------------------------------
+@st.composite
+def random_workload(draw):
+    n = draw(st.integers(2, 6))
+    g = TaskGraph("rand")
+    for i in range(n):
+        g.add_task(
+            Task(
+                f"t{i}",
+                work_ops=draw(st.floats(1e6, 1e9)),
+                i_read=draw(st.floats(1.0, 1e4)),
+                i_write=draw(st.floats(1.0, 1e4)),
+                llp=draw(st.floats(1.0, 1e4)),
+                burst_bytes=draw(st.sampled_from([64, 256, 1024])),
+            )
+        )
+    for i in range(1, n):
+        if draw(st.booleans()):
+            j = draw(st.integers(0, i - 1))
+            g.add_edge(f"t{j}", f"t{i}", 1e5)
+    return g
+
+
+@given(random_workload(), st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_event_sim_close_to_phase_sim(g, n_extra_pe):
+    """The event-driven reference (burst-pipelined, per-event re-arbitration)
+    must stay close to the phase estimate — the paper's 98.5% claim shape."""
+    from repro.core.blocks import make_gpp
+
+    db = HardwareDatabase()
+    d = Design.base(g)
+    # spread tasks over a few PEs to create contention variety
+    for k in range(n_extra_pe):
+        d.add_block(make_gpp(200), attach_to=d.noc_chain[0])
+    pes = d.pes()
+    for i, t in enumerate(sorted(g.tasks)):
+        d.task_pe[t] = pes[i % len(pes)]
+    r_p = simulate(d, g, db)
+    r_e = simulate_events(d, g, db, max_chunks=64)
+    rel = abs(r_p.latency_s - r_e.latency_s) / r_e.latency_s
+    assert rel < 0.15, (r_p.latency_s, r_e.latency_s)
+    assert r_p.n_phases <= r_e.n_phases  # agility: far fewer phases than events
+
+
+def test_monotonicity_faster_pe():
+    db = HardwareDatabase()
+    g = _single_task_graph()
+    d = Design.base(g)
+    lat1 = simulate(d, g, db).latency_s
+    d.blocks[d.task_pe["t0"]].freq_mhz = 800
+    lat2 = simulate(d, g, db).latency_s
+    assert lat2 < lat1

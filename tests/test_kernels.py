@@ -1,0 +1,136 @@
+"""Per-kernel validation (deliverable c): shape/dtype sweeps in
+``interpret=True`` against the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_naive, ssd_reference
+from repro.models.layers import rms_norm
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+FLASH_CASES = [
+    # (B, S, H, KH, Dh, qb, kb, dtype)
+    (2, 256, 8, 4, 64, 64, 128, jnp.float32),
+    (1, 512, 4, 4, 128, 128, 128, jnp.float32),
+    (2, 128, 8, 2, 32, 64, 64, jnp.float32),
+    (1, 256, 16, 1, 64, 128, 64, jnp.float32),  # MQA
+    (2, 256, 8, 4, 64, 64, 128, jnp.bfloat16),
+    (1, 128, 4, 4, 256, 64, 64, jnp.bfloat16),  # gemma-style head_dim
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_kernel_vs_oracle(case, causal):
+    b, s, h, kh, dh, qb, kb, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kh, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kh, dh)).astype(dtype)
+    out = flash_attention(q, k, v, causal, qb, kb, interpret=True)
+    ref = attention_reference(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal,
+    ).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_blockwise_ref_grads_match_dense():
+    """The training path's custom-VJP blockwise attention: grads vs dense."""
+    from repro.models.flash_ref import flash_attention_ref
+    from repro.models.layers import attention_full
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 8, 32))
+    k = jax.random.normal(ks[1], (2, 128, 4, 32))
+    v = jax.random.normal(ks[2], (2, 128, 4, 32))
+
+    g1 = jax.grad(lambda q, k, v: jnp.sum(jnp.tanh(attention_full(q, k, v, causal=True))), (0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda q, k, v: jnp.sum(jnp.tanh(flash_attention_ref(q, k, v, True, 32, 64))), (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+SSD_CASES = [
+    # (B, S, H, P, N, chunk, dtype)
+    (2, 128, 4, 16, 8, 32, jnp.float32),
+    (1, 256, 2, 64, 128, 128, jnp.float32),
+    (2, 64, 8, 32, 16, 16, jnp.float32),
+    (1, 128, 4, 64, 32, 64, jnp.bfloat16),
+]
+
+
+def _ssd_inputs(b, s, h, p, n, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, n))
+    cm = jax.random.normal(ks[4], (b, s, n))
+    return x, dt, a, bm, cm
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_kernel_vs_naive(case):
+    b, s, h, p, n, chunk, dtype = case
+    x, dt, a, bm, cm = _ssd_inputs(b, s, h, p, n, dtype)
+    y_k, h_k = ssd(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    y_r, h_r = ssd_naive(x, dt, a, bm, cm)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(
+        y_k.astype(jnp.float32), y_r.astype(jnp.float32), atol=tol, rtol=tol
+    )
+    np.testing.assert_allclose(h_k, h_r, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64, 128])
+def test_ssd_ref_chunk_invariance(chunk):
+    """Chunked SSD == naive recurrence for every chunk size (oracle property)."""
+    x, dt, a, bm, cm = _ssd_inputs(2, 128, 4, 16, 8, jnp.float32)
+    y_c, h_c = ssd_reference(x, dt, a, bm, cm, chunk=chunk)
+    y_n, h_n = ssd_naive(x, dt, a, bm, cm)
+    np.testing.assert_allclose(y_c, y_n, atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(h_c, h_n, atol=5e-5, rtol=1e-3)
+
+
+def test_ssd_initial_state_handoff():
+    """Splitting a sequence in two and carrying h across == one pass
+    (prefill→decode contract)."""
+    x, dt, a, bm, cm = _ssd_inputs(1, 64, 2, 8, 4, jnp.float32)
+    y_full, h_full = ssd_reference(x, dt, a, bm, cm, chunk=16)
+    y1, h1 = ssd_reference(x[:, :32], dt[:, :32], a, bm[:, :32], cm[:, :32], chunk=16)
+    y2, h2 = ssd_reference(x[:, 32:], dt[:, 32:], a, bm[:, 32:], cm[:, 32:], chunk=16, h0=h1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(h2, h_full, atol=1e-5, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,rb", [((64, 128), 32), ((2, 32, 64), 16), ((256, 512), 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel(shape, rb, dtype):
+    x = jax.random.normal(KEY, shape).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(7), (shape[-1],)) * 0.1).astype(dtype)
+    out = rmsnorm(x, w, row_block=rb, interpret=True)
+    ref = rms_norm(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), atol=tol, rtol=tol
+    )

@@ -1,0 +1,182 @@
+"""Move symmetry/legality (paper §3.3) and explorer behaviour (§3.4, §5.2)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Design,
+    Explorer,
+    ExplorerConfig,
+    HardwareDatabase,
+    ar_complex,
+    calibrated_budget,
+    distance,
+    edge_detection,
+    simulate,
+)
+from repro.core.blocks import BlockKind
+from repro.core.moves import (
+    MOVE_KINDS,
+    apply_fork,
+    apply_join,
+    apply_migrate,
+    apply_move,
+    apply_swap,
+)
+
+
+def _design_and_graph():
+    g = edge_detection()
+    return Design.base(g), g
+
+
+def _check_invariants(d: Design, g) -> None:
+    """Every task mapped to an existing PE/MEM; every route resolvable."""
+    for t in g.tasks:
+        assert d.task_pe[t] in d.blocks
+        assert d.task_mem[t] in d.blocks
+        assert d.blocks[d.task_pe[t]].kind == BlockKind.PE
+        assert d.blocks[d.task_mem[t]].kind == BlockKind.MEM
+        assert len(d.route(t)) >= 1
+    for name in d.attached_noc.values():
+        assert name in d.blocks
+
+
+def test_swap_symmetry():
+    d, g = _design_and_graph()
+    pe = d.pes()[0]
+    before = d.blocks[pe].signature()
+    assert apply_swap(d, g, pe, +1)
+    assert d.blocks[pe].signature() != before
+    assert apply_swap(d, g, pe, -1)
+    assert d.blocks[pe].signature() == before
+
+
+def test_fork_then_join_restores_count():
+    d, g = _design_and_graph()
+    n0 = d.block_counts()["pe"]
+    assert apply_fork(d, g, d.pes()[0], task_name="grad_x")
+    assert d.block_counts()["pe"] == n0 + 1
+    new_pe = d.task_pe["grad_x"]
+    assert apply_join(d, g, new_pe)
+    assert d.block_counts()["pe"] == n0
+    _check_invariants(d, g)
+
+
+def test_fork_requires_splittable_load():
+    """Fork must never orphan a single-task block (the zombie-PE bug)."""
+    d, g = _design_and_graph()
+    assert apply_fork(d, g, d.pes()[0], task_name="grad_x")
+    solo_pe = d.task_pe["grad_x"]
+    assert len(d.tasks_on_pe(solo_pe)) == 1
+    assert not apply_fork(d, g, solo_pe, task_name="grad_x")
+
+
+def test_join_last_block_fails():
+    d, g = _design_and_graph()
+    assert not apply_join(d, g, d.pes()[0])  # only PE
+    assert not apply_join(d, g, d.mems()[0])  # only MEM
+    assert not apply_join(d, g, d.nocs()[0])  # only NoC
+
+
+def test_migrate_moves_task_and_buffer():
+    d, g = _design_and_graph()
+    apply_fork(d, g, d.pes()[0], task_name="grad_x")
+    src = d.task_pe["grad_y"]
+    assert apply_migrate(d, g, "grad_y", bottleneck="pe")
+    assert d.task_pe["grad_y"] != src
+    # buffer migrate needs a second memory
+    from repro.core.blocks import make_mem
+
+    d.add_block(make_mem("sram"), attach_to=d.noc_chain[0])
+    src_m = d.task_mem["grad_y"]
+    assert apply_migrate(d, g, "grad_y", bottleneck="mem")
+    assert d.task_mem["grad_y"] != src_m
+    _check_invariants(d, g)
+
+
+def test_noc_fork_splits_attachments():
+    d, g = _design_and_graph()
+    from repro.core.blocks import make_gpp, make_mem
+
+    d.add_block(make_gpp(), attach_to=d.noc_chain[0])
+    d.add_block(make_mem(), attach_to=d.noc_chain[0])
+    assert apply_fork(d, g, d.noc_chain[0])
+    assert len(d.noc_chain) == 2
+    _check_invariants(d, g)
+
+
+@given(st.lists(st.tuples(st.sampled_from(MOVE_KINDS), st.integers(0, 10**6)), max_size=25))
+@settings(max_examples=20, deadline=None)
+def test_random_move_sequences_keep_invariants(moves):
+    """Any sequence of (possibly failing) moves leaves a simulatable design."""
+    db = HardwareDatabase()
+    g = edge_detection()
+    d = Design.base(g)
+    rng = random.Random(0)
+    tasks = sorted(g.tasks)
+    for kind, seed in moves:
+        r = random.Random(seed)
+        block = r.choice(list(d.blocks))
+        task = r.choice(tasks)
+        apply_move(
+            d, g, kind, block, task, r.choice([-1, 1]),
+            r.choice(["pe", "mem", "noc"]), r.choice(["latency", "power", "area"]), rng,
+        )
+        _check_invariants(d, g)
+    simulate(d, g, db)  # must still simulate
+
+
+# ---------------------------------------------------------------------------
+# explorer
+# ---------------------------------------------------------------------------
+def test_farsi_converges_on_ar_complex():
+    db = HardwareDatabase()
+    g = ar_complex()
+    bud = calibrated_budget(db)
+    ex = Explorer(g, db, bud, ExplorerConfig(awareness="farsi", max_iterations=500, seed=1))
+    res = ex.run()
+    assert res.converged, res.best_distance.per_metric
+    # development-cost sanity: no more blocks than tasks + a few
+    counts = res.best_design.block_counts()
+    assert counts["pe"] <= len(g.tasks) + 4
+
+
+def test_awareness_ordering():
+    """§5.2: naive SA must be far behind FARSI at equal iteration budget."""
+    db = HardwareDatabase()
+    g = ar_complex()
+    bud = calibrated_budget(db)
+    dists = {}
+    for level in ("farsi", "sa"):
+        ex = Explorer(g, db, bud, ExplorerConfig(awareness=level, max_iterations=250, seed=3))
+        res = ex.run()
+        dists[level] = res.best_distance.city_block()
+    assert dists["farsi"] < dists["sa"]
+
+
+def test_codesign_ledger_populates():
+    db = HardwareDatabase()
+    g = ar_complex()
+    bud = calibrated_budget(db)
+    ex = Explorer(g, db, bud, ExplorerConfig(max_iterations=60, seed=0))
+    res = ex.run()
+    summary = res.ledger.summary()
+    assert set(summary) == {"metric", "workload", "comm_comp", "opt_level"}
+    assert res.ledger.move_histogram()
+
+
+def test_budget_relaxation_reduces_complexity():
+    """§6.1 mechanism: a 4× relaxed budget must not need a more complex
+    system (block count monotonicity in expectation)."""
+    db = HardwareDatabase()
+    g = ar_complex()
+    bud = calibrated_budget(db)
+    counts = {}
+    for scale in (1.0, 4.0):
+        ex = Explorer(g, db, bud.scaled(scale), ExplorerConfig(max_iterations=400, seed=5))
+        res = ex.run()
+        c = res.best_design.block_counts()
+        counts[scale] = c["pe"] + c["mem"] + c["noc"]
+    assert counts[4.0] <= counts[1.0]

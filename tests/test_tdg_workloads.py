@@ -1,0 +1,68 @@
+"""TDG structure + the AR workloads' Table-1 characteristics."""
+import math
+
+import pytest
+
+from repro.core import all_workloads, ar_complex, audio, cava, edge_detection
+from repro.core.tdg import Task, TaskGraph, merge_graphs, workload_of
+
+MOPS = 1e6
+MB = 1e6
+
+
+def test_graph_validates_and_topo():
+    for g in all_workloads().values():
+        g.validate()
+        order = g.topo_order()
+        pos = {n: i for i, n in enumerate(order)}
+        for (s, d) in g.edge_bytes:
+            assert pos[s] < pos[d]
+
+
+def test_task_counts_match_paper():
+    # paper Fig. 2: Audio has the most tasks (15), Edge Detection the least (6)
+    assert len(audio().tasks) == 15
+    assert len(edge_detection().tasks) == 6
+    assert len(cava().tasks) in range(5, 12)
+
+
+@pytest.mark.parametrize(
+    "maker,f_mops,dm_mb",
+    [(audio, 13, 0.19), (cava, 24_252, 0.33), (edge_detection, 1_098, 7.01)],
+)
+def test_table1_averages(maker, f_mops, dm_mb):
+    g = maker()
+    assert math.isclose(g.avg_work_ops(), f_mops * MOPS, rel_tol=1e-6)
+    if maker is not cava:  # CAVA edges are serial-chain (n-1 edges)
+        pass
+    # edge bytes carry the Table-1 average data movement
+    mean_edge = sum(g.edge_bytes.values()) / len(g.edge_bytes)
+    assert math.isclose(mean_edge, dm_mb * MB, rel_tol=1e-6)
+
+
+def test_talp_ordering():
+    # paper Table 1: Audio has the highest TaLP, CAVA exactly 1 (serial)
+    t = {n: g.talp() for n, g in all_workloads().items()}
+    assert t["cava"] == 1.0
+    assert t["ed"] == 4.0
+    assert t["audio"] > t["ed"] > t["cava"]
+
+
+def test_llp_ordering():
+    l = {n: g.avg_llp() for n, g in all_workloads().items()}
+    # ED has the highest LLP, CAVA the lowest (Table 1)
+    assert l["ed"] > l["audio"] > l["cava"]
+
+
+def test_merge_namespacing():
+    g = ar_complex()
+    assert len(g.tasks) == 15 + 7 + 6
+    for t in g.tasks:
+        assert workload_of(t) in ("audio", "cava", "ed")
+
+
+def test_parallel_tasks_of():
+    g = edge_detection()
+    par = set(g.parallel_tasks_of("grad_x"))
+    assert "grad_y" in par and "laplacian" in par
+    assert "gauss_blur" not in par and "magnitude" not in par
