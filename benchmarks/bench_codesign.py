@@ -1,13 +1,16 @@
 """Paper Fig. 10: co-design deployment rates per vector (10b) and their
 convergence contribution (10c); plus the co-design ON/OFF ablation (§5.3:
 'embedding the same co-design capabilities in regular SA does not necessarily
-translate to design improvements')."""
+translate to design improvements').
+
+Both the seed average and the ablation grid run as `Campaign`s over a shared
+backend instead of sequential per-seed Explorer loops."""
 from __future__ import annotations
 
 import statistics
 from typing import List
 
-from repro.core import Explorer, ExplorerConfig, HardwareDatabase, ar_complex, calibrated_budget
+from repro.core import Campaign, ExplorerConfig, HardwareDatabase, ar_complex, calibrated_budget
 from repro.core.codesign import VECTORS
 
 from .common import Row
@@ -21,34 +24,39 @@ def run() -> List[Row]:
     bud = calibrated_budget(db)
     rows: List[Row] = []
 
-    summaries = []
+    camp = Campaign(db)
     for seed in SEEDS:
-        res = Explorer(g, db, bud, ExplorerConfig(max_iterations=500, seed=seed)).run()
-        summaries.append(res.ledger.summary())
+        camp.add(f"fig10.s{seed}", g, bud, ExplorerConfig(max_iterations=500, seed=seed))
+    cres = camp.run()
+    summaries = [cres.runs[f"fig10.s{seed}"].ledger.summary() for seed in SEEDS]
     for v in VECTORS:
         sw = statistics.mean(s[v]["switch_rate"] for s in summaries)
         cc = statistics.mean(s[v]["convergence_contribution"] for s in summaries)
         rows.append((f"fig10.{v}", 0.0, f"switch_rate={sw:.2f} convergence_contrib={cc*100:.1f}%"))
 
-    # ON/OFF ablation at fixed iteration budget
+    # ON/OFF ablation at fixed iteration budget — one campaign per variant so
+    # each label keeps its own aggregate
     for label, codesign, awareness in (
         ("farsi_codesign_on", True, "farsi"),
         ("farsi_codesign_off", False, "farsi"),
         ("sa_codesign_on", True, "sa"),
     ):
-        iters, dists = [], []
+        camp = Campaign(db)
         for seed in SEEDS:
-            res = Explorer(
-                g, db, bud,
+            camp.add(
+                f"{label}.s{seed}", g, bud,
                 ExplorerConfig(awareness=awareness, codesign=codesign, max_iterations=400, seed=seed),
-            ).run()
-            iters.append(res.iterations if res.converged else 400)
-            dists.append(res.best_distance.city_block())
+            )
+        ares = camp.run()
+        iters = [
+            r.iterations if r.converged else 400 for r in ares.runs.values()
+        ]
         rows.append(
             (
                 f"fig10c.{label}",
                 0.0,
-                f"iters_avg={statistics.mean(iters):.0f} dist_avg={statistics.mean(dists):.3f}",
+                f"iters_avg={statistics.mean(iters):.0f} "
+                f"dist_avg={ares.aggregate['best_distance_mean']:.3f}",
             )
         )
     return rows

@@ -37,11 +37,11 @@ def run() -> List[Row]:
     # beyond-paper: vmap'd batched neighbour evaluation (single-NoC regime)
     import jax
 
+    from repro.core import random_single_noc_designs
     from repro.core.phase_sim_jax import EncodedWorkload, encode_batch, simulate_batch
-    from tests.test_phase_sim_jax import _random_single_noc_designs
 
     enc = EncodedWorkload.of(g)
-    designs = _random_single_noc_designs(g, 64, seed=5)
+    designs = random_single_noc_designs(g, 64, seed=5)
     batch = encode_batch(designs, g, db, enc)
     fn = jax.jit(lambda *a: simulate_batch(enc, *a))
     jax.block_until_ready(fn(*batch)["latency_s"])  # compile once

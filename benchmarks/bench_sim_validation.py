@@ -40,16 +40,18 @@ def _collect_designs(n: int = 40) -> List[Design]:
         ex = Explorer(
             g, db, bud, ExplorerConfig(awareness=level, max_iterations=120, seed=seed)
         )
-        orig = ex._simulate
+        orig = ex.backend.evaluate
         quota = n // 3 + 1
 
-        def spy(design, orig=orig, ex=ex, box=[0, quota]):
-            if box[0] < box[1] and ex.n_sims % 7 == 3:
-                designs.append(design.clone())
-                box[0] += 1
-            return orig(design)
+        def spy(batch, orig=orig, box=[0, quota], seen=[0]):
+            for design in batch:
+                seen[0] += 1
+                if box[0] < box[1] and seen[0] % 7 == 3:
+                    designs.append(design.clone())
+                    box[0] += 1
+            return orig(batch)
 
-        ex._simulate = spy
+        ex.backend.evaluate = spy
         ex.run()
     return designs[:n]
 

@@ -1,0 +1,113 @@
+"""SimulatorBackend shoot-out: scalar-Python vs vmap-batched-JAX evaluation.
+
+Measures the two things the API redesign is for, and writes them to
+``BENCH_simbackend.json`` (next to this file) so future PRs can track the
+speedup trajectory:
+
+  1. neighbour-evaluation throughput — the same candidate batch priced by
+     ``PythonBackend`` (simulate() per design) and by a warm
+     ``JaxBatchedBackend`` (one `vmap` dispatch), in designs/second;
+  2. end-to-end explorer iteration rate — a fixed-seed exploration run with
+     each backend, in iterations/second (jit warm-up excluded via a short
+     priming run so the number reflects steady-state search).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from repro.core import (
+    Explorer,
+    ExplorerConfig,
+    HardwareDatabase,
+    JaxBatchedBackend,
+    PythonBackend,
+    ar_complex,
+    audio,
+    calibrated_budget,
+    random_single_noc_designs,
+)
+
+from .common import Row, timeit
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "BENCH_simbackend.json")
+BATCH = 64  # campaign-scale cross-batch (explorer alone submits 4/iteration)
+EXPLORE_ITERS = 120
+
+
+def run() -> List[Row]:
+    db = HardwareDatabase()
+    payload = {"batch": BATCH, "explore_iterations": EXPLORE_ITERS, "workloads": {}}
+    rows: List[Row] = []
+
+    # audio (15 tasks) and the full AR complex (28 tasks) — the two paper
+    # workload scales where batching is the DSE's operating point
+    for g in (audio(), ar_complex()):
+        designs = random_single_noc_designs(g, BATCH, seed=7)
+        py = PythonBackend(g, db)
+        jx = JaxBatchedBackend(g, db)
+        jx.evaluate(designs)  # compile once; steady state is what the DSE sees
+        py.evaluate(designs)
+        # interleave the samples so both backends see the same machine
+        # conditions (scheduler noise on small graphs otherwise skews ratios)
+        t_py = t_jx = float("inf")
+        for _ in range(7):
+            t_py = min(t_py, timeit(lambda: py.evaluate(designs), n=1))
+            t_jx = min(t_jx, timeit(lambda: jx.evaluate(designs), n=1))
+        evals_py = BATCH / (t_py * 1e-6)
+        evals_jx = BATCH / (t_jx * 1e-6)
+
+        # end-to-end: fixed-seed exploration per backend (prime the jit cache
+        # with a short run so shape-bucket compiles don't bill the measure run)
+        bud = calibrated_budget(db)
+        Explorer(g, db, bud, ExplorerConfig(max_iterations=EXPLORE_ITERS, seed=2),
+                 backend=jx).run()
+        iters = {}
+        for name, backend in (("python", py), ("jax", jx)):
+            ex = Explorer(
+                g, db, bud,
+                ExplorerConfig(max_iterations=EXPLORE_ITERS, seed=3),
+                backend=backend,
+            )
+            res = ex.run()
+            iters[name] = {
+                "iterations": res.iterations,
+                "wall_s": res.wall_s,
+                "sim_wall_s": res.sim_wall_s,
+                "iters_per_s": res.iterations / max(res.wall_s, 1e-9),
+                "converged": res.converged,
+            }
+
+        payload["workloads"][g.name] = {
+            "n_tasks": len(g.tasks),
+            "python_evals_per_s": evals_py,
+            "jax_evals_per_s": evals_jx,
+            "eval_throughput_speedup": evals_jx / max(evals_py, 1e-9),
+            "explorer": iters,
+            "explorer_iters_per_s_speedup": (
+                iters["jax"]["iters_per_s"] / max(iters["python"]["iters_per_s"], 1e-9)
+            ),
+        }
+        rows.append(
+            (
+                f"simbackend.{g.name}.eval_throughput",
+                t_jx / BATCH,
+                f"jax={evals_jx:.0f}/s python={evals_py:.0f}/s "
+                f"speedup={evals_jx/max(evals_py,1e-9):.1f}x batch={BATCH}",
+            )
+        )
+        rows.append(
+            (
+                f"simbackend.{g.name}.explorer",
+                iters["jax"]["wall_s"] * 1e6,
+                f"jax={iters['jax']['iters_per_s']:.1f}it/s "
+                f"python={iters['python']['iters_per_s']:.1f}it/s "
+                f"speedup={payload['workloads'][g.name]['explorer_iters_per_s_speedup']:.1f}x",
+            )
+        )
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(("simbackend.json", 0.0, f"wrote {JSON_PATH}"))
+    return rows

@@ -9,6 +9,8 @@ table. Prints ``name,us_per_call,derived`` CSV per row.
   fig14/15  budget relaxation vs system complexity/heterogeneity
   fig17     divide-and-conquer suboptimality
   roofline  all (arch × shape) baseline roofline terms
+  simbackend scalar-Python vs batched-JAX backend throughput
+             (also writes BENCH_simbackend.json for trajectory tracking)
 """
 from __future__ import annotations
 
@@ -24,6 +26,7 @@ from . import (
     bench_generation,
     bench_roofline,
     bench_sim_validation,
+    bench_simbackend,
 )
 from .common import emit
 
@@ -36,6 +39,7 @@ BENCHES = {
     "fig14_15": bench_budget_sweep,
     "fig17": bench_divide_conquer,
     "roofline": bench_roofline,
+    "simbackend": bench_simbackend,
 }
 
 

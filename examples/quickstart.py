@@ -25,6 +25,11 @@ def main() -> None:
     ap.add_argument("--iterations", type=int, default=500)
     ap.add_argument("--awareness", choices=AWARENESS_LEVELS, default="farsi")
     ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument(
+        "--backend", choices=("python", "jax"), default="python",
+        help="simulation backend: scalar Python reference or vmap-batched JAX "
+             "(each iteration's neighbour set priced in one XLA dispatch)",
+    )
     args = ap.parse_args()
 
     db = HardwareDatabase()
@@ -42,12 +47,16 @@ def main() -> None:
 
     ex = Explorer(
         graph, db, budget,
-        ExplorerConfig(awareness=args.awareness, max_iterations=args.iterations, seed=args.seed),
+        ExplorerConfig(awareness=args.awareness, max_iterations=args.iterations,
+                       seed=args.seed, backend=args.backend),
     )
     res = ex.run()
 
+    stats = ex.backend.stats()
     print(f"\nexplored {res.n_sims} designs in {res.wall_s:.1f}s "
-          f"({res.n_sims/max(res.wall_s,1e-9):.0f} sims/s)")
+          f"({res.n_sims/max(res.wall_s,1e-9):.0f} sims/s) "
+          f"[backend={res.backend_name}: {stats.n_dispatches} dispatches, "
+          f"sim_wall={res.sim_wall_s:.1f}s]")
     print(f"converged={res.converged} after {res.iterations} iterations")
     for h in res.history[:: max(len(res.history) // 10, 1)]:
         print(f"  iter {h['iteration']:4d}  distance={h['distance']:10.3f}  "

@@ -2,11 +2,20 @@
 
 Public API re-exports. See DESIGN.md §2 for the paper→TPU mapping.
 """
+from .backend import (
+    BackendStats,
+    JaxBatchedBackend,
+    PythonBackend,
+    SimulatorBackend,
+    make_backend,
+)
 from .blocks import Block, BlockKind, make_accelerator, make_gpp, make_mem, make_noc
 from .budgets import Budget, Distance, distance
+from .campaign import Campaign, CampaignResult, RunSpec
 from .codesign import CodesignLedger, FocusRecord
 from .database import HardwareDatabase, TPUDatabase
 from .design import Design
+from .design_space import random_single_noc_designs
 from .event_sim import simulate_events
 from .explorer import AWARENESS_LEVELS, ExplorationResult, Explorer, ExplorerConfig
 from .gables import TaskRates, bottleneck_of, completion_time, phase_rates
@@ -23,11 +32,18 @@ from .workloads import (
 )
 
 __all__ = [
+    "BackendStats",
     "Block",
     "BlockKind",
     "Budget",
+    "Campaign",
+    "CampaignResult",
     "CodesignLedger",
     "Design",
+    "JaxBatchedBackend",
+    "PythonBackend",
+    "RunSpec",
+    "SimulatorBackend",
     "Distance",
     "ExplorationResult",
     "Explorer",
@@ -50,12 +66,14 @@ __all__ = [
     "distance",
     "edge_detection",
     "make_accelerator",
+    "make_backend",
     "make_gpp",
     "make_mem",
     "make_noc",
     "merge_graphs",
     "paper_budget",
     "phase_rates",
+    "random_single_noc_designs",
     "simulate",
     "simulate_events",
     "workload_of",

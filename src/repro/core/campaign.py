@@ -1,0 +1,226 @@
+"""Campaign: many explorations, one cross-batched simulation stream.
+
+FARSI's experiments are never a single search — Fig. 9/10 average seeds,
+Fig. 9b sweeps the awareness ladder, §6 sweeps budgets and workloads. A
+``Campaign`` declares that whole grid up front, then drives every
+exploration's :meth:`Explorer.run_steps` coroutine in lockstep: each round it
+gathers the pending neighbour batches of *all* live explorers on a workload
+and prices them through **one** ``backend.evaluate`` dispatch. With
+`JaxBatchedBackend` that turns N concurrent searches into single `vmap`
+dispatches of N×neighbours designs — the batching the vectorized simulator
+was built for — while `PythonBackend` campaigns still benefit from the shared
+accounting. One backend is shared per distinct task graph (the encoding is
+workload-specific); per-run ``n_sims`` stays with each explorer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Union
+
+from .backend import BackendStats, SimulatorBackend, make_backend
+from .budgets import Budget
+from .database import HardwareDatabase
+from .design import Design
+from .explorer import ExplorationResult, Explorer, ExplorerConfig
+from .tdg import TaskGraph
+
+
+@dataclasses.dataclass
+class RunSpec:
+    """One exploration of a campaign grid."""
+
+    name: str
+    tdg: TaskGraph
+    budget: Budget
+    config: ExplorerConfig = dataclasses.field(default_factory=ExplorerConfig)
+    initial: Optional[Design] = None
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    runs: Dict[str, ExplorationResult]  # per-run, keyed by RunSpec.name
+    aggregate: Dict[str, float]  # convergence statistics over the grid
+    backend_stats: Dict[str, BackendStats]  # per shared backend (workload name)
+    wall_s: float
+
+    def converged_runs(self) -> List[str]:
+        return [n for n, r in self.runs.items() if r.converged]
+
+
+class Campaign:
+    """Declarative multi-exploration runner sharing one backend per workload.
+
+    >>> camp = Campaign(db, backend="jax")
+    >>> camp.add("audio.s1", g_audio, budget, ExplorerConfig(seed=1))
+    >>> camp.add("audio.s2", g_audio, budget, ExplorerConfig(seed=2))
+    >>> result = camp.run()   # both searches share one dispatch stream
+    """
+
+    def __init__(
+        self,
+        db: HardwareDatabase,
+        backend: Union[str, Callable[[TaskGraph, HardwareDatabase], SimulatorBackend]] = "python",
+    ) -> None:
+        self.db = db
+        self._backend_spec = backend
+        self.specs: List[RunSpec] = []
+        self._backends: Dict[int, SimulatorBackend] = {}  # id(tdg) -> backend
+
+    # ---- declaration ---------------------------------------------------
+    def add(
+        self,
+        name: str,
+        tdg: TaskGraph,
+        budget: Budget,
+        config: Optional[ExplorerConfig] = None,
+        initial: Optional[Design] = None,
+    ) -> "Campaign":
+        if any(s.name == name for s in self.specs):
+            raise ValueError(f"duplicate run name {name!r}")
+        config = config or ExplorerConfig()
+        # runs share the campaign backend; a config asking for a *different*
+        # one would be silently overridden — refuse instead (the default
+        # "python" is treated as unset and follows the campaign)
+        campaign_be = self._backend_spec if isinstance(self._backend_spec, str) else None
+        if config.backend != "python" and config.backend != campaign_be:
+            raise ValueError(
+                f"run {name!r} requests backend {config.backend!r} but the "
+                f"campaign shares backend {self._backend_spec!r} across runs"
+            )
+        self.specs.append(RunSpec(name, tdg, budget, config, initial))
+        return self
+
+    @classmethod
+    def sweep(
+        cls,
+        db: HardwareDatabase,
+        workloads: Dict[str, TaskGraph],
+        budgets: Union[Budget, Dict[str, Budget]],
+        seeds: Iterable[int] = (0,),
+        awareness: Sequence[str] = ("farsi",),
+        backend: Union[str, Callable] = "python",
+        **config_kw,
+    ) -> "Campaign":
+        """Multi-seed × multi-workload × awareness-ladder grid. Reusing one
+        graph object per workload keys every run of it onto one shared
+        backend."""
+        camp = cls(db, backend=backend)
+        if isinstance(backend, str):
+            config_kw.setdefault("backend", backend)
+        for wl_name, tdg in workloads.items():
+            bud = budgets[wl_name] if isinstance(budgets, dict) else budgets
+            for level in awareness:
+                for seed in seeds:
+                    camp.add(
+                        f"{wl_name}.{level}.s{seed}",
+                        tdg,
+                        bud,
+                        ExplorerConfig(awareness=level, seed=seed, **config_kw),
+                    )
+        return camp
+
+    # ---- execution -----------------------------------------------------
+    def backend_for(self, tdg: TaskGraph) -> SimulatorBackend:
+        key = id(tdg)
+        if key not in self._backends:
+            if callable(self._backend_spec):
+                self._backends[key] = self._backend_spec(tdg, self.db)
+            else:
+                self._backends[key] = make_backend(self._backend_spec, tdg, self.db)
+        return self._backends[key]
+
+    def run(self) -> CampaignResult:
+        t0 = time.perf_counter()
+        if not self.specs:
+            raise ValueError("empty campaign: nothing to run")
+
+        @dataclasses.dataclass
+        class _Live:
+            spec: RunSpec
+            gen: object
+            pending: List[Design]
+            sim_wall: float = 0.0
+
+        live: Dict[str, _Live] = {}
+        done: Dict[str, ExplorationResult] = {}
+        for spec in self.specs:
+            ex = Explorer(
+                spec.tdg, self.db, spec.budget, spec.config,
+                backend=self.backend_for(spec.tdg),
+            )
+            gen = ex.run_steps(spec.initial)
+            live[spec.name] = _Live(spec=spec, gen=gen, pending=next(gen))
+
+        while live:
+            # group live runs by shared backend and cross-batch each group's
+            # pending requests into one dispatch
+            groups: Dict[int, List[_Live]] = {}
+            for st in live.values():
+                groups.setdefault(id(st.spec.tdg), []).append(st)
+            for members in groups.values():
+                backend = self.backend_for(members[0].spec.tdg)
+                designs = [d for st in members for d in st.pending]
+                td = time.perf_counter()
+                results = backend.evaluate(designs)
+                dispatch_s = time.perf_counter() - td
+                offset = 0
+                for st in members:
+                    k = len(st.pending)
+                    sub = results[offset:offset + k]
+                    offset += k
+                    st.sim_wall += dispatch_s * k / max(len(designs), 1)
+                    try:
+                        st.pending = st.gen.send(sub)
+                    except StopIteration as stop:
+                        res: ExplorationResult = stop.value
+                        res.sim_wall_s = st.sim_wall
+                        done[st.spec.name] = res
+                        del live[st.spec.name]
+
+        runs = {spec.name: done[spec.name] for spec in self.specs}
+        labels = self._backend_labels()
+        backend_stats = {
+            labels[tdg_id]: b.stats() for tdg_id, b in self._backends.items()
+        }
+        return CampaignResult(
+            runs=runs,
+            aggregate=self._aggregate(runs),
+            backend_stats=backend_stats,
+            wall_s=time.perf_counter() - t0,
+        )
+
+    def _backend_labels(self) -> Dict[int, str]:
+        """One stable label per backend: the graph name, suffixed ``#n`` when
+        distinct graph objects share a name (they get distinct backends)."""
+        labels: Dict[int, str] = {}
+        counts: Dict[str, int] = {}
+        for spec in self.specs:
+            key = id(spec.tdg)
+            if key in labels:
+                continue
+            n = counts.get(spec.tdg.name, 0)
+            labels[key] = spec.tdg.name if n == 0 else f"{spec.tdg.name}#{n}"
+            counts[spec.tdg.name] = n + 1
+        return labels
+
+    @staticmethod
+    def _aggregate(runs: Dict[str, ExplorationResult]) -> Dict[str, float]:
+        iters = [r.iterations for r in runs.values()]
+        dists = [r.best_distance.city_block() for r in runs.values()]
+        conv_iters = [r.iterations for r in runs.values() if r.converged]
+        return {
+            "n_runs": len(runs),
+            "n_converged": sum(r.converged for r in runs.values()),
+            "convergence_rate": statistics.mean(
+                [1.0 if r.converged else 0.0 for r in runs.values()]
+            ),
+            "iterations_mean": statistics.mean(iters),
+            "iterations_median": statistics.median(iters),
+            "converged_iterations_mean": statistics.mean(conv_iters) if conv_iters else float("nan"),
+            "best_distance_mean": statistics.mean(dists),
+            "best_distance_max": max(dists),
+            "n_sims_total": sum(r.n_sims for r in runs.values()),
+            "sim_wall_s_total": sum(r.sim_wall_s for r in runs.values()),
+        }

@@ -28,15 +28,16 @@ import dataclasses
 import math
 import random
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Generator, List, Optional, Tuple
 
+from .backend import SimulatorBackend, make_backend
 from .blocks import BlockKind
 from .budgets import Budget, Distance, distance
 from .codesign import CodesignLedger, FocusRecord
 from .database import HardwareDatabase
 from .design import Design
 from .moves import MOVE_KINDS, MOVE_PRECEDENCE, apply_move
-from .phase_sim import SimResult, simulate
+from .phase_sim import SimResult
 from .tdg import TaskGraph, workload_of
 
 AWARENESS_LEVELS = ("sa", "task", "task_block", "farsi")
@@ -54,6 +55,7 @@ class ExplorerConfig:
     dev_cost_aware: bool = True
     codesign: bool = True  # False => fixate focus until the focused metric is met
     taboo_ttl: int = 5
+    backend: str = "python"  # SimulatorBackend registry name (backend.BACKENDS)
 
 
 @dataclasses.dataclass
@@ -67,6 +69,8 @@ class ExplorationResult:
     wall_s: float
     history: List[dict]
     ledger: CodesignLedger
+    backend_name: str = "python"
+    sim_wall_s: float = 0.0  # time inside backend.evaluate for this run
 
 
 def _task_duration(result: SimResult, tdg: TaskGraph, t: str) -> float:
@@ -101,6 +105,7 @@ class Explorer:
         db: HardwareDatabase,
         budget: Budget,
         config: ExplorerConfig = ExplorerConfig(),
+        backend: Optional[SimulatorBackend] = None,
     ) -> None:
         self.tdg = tdg
         self.db = db
@@ -108,14 +113,11 @@ class Explorer:
         self.cfg = config
         assert config.awareness in AWARENESS_LEVELS
         self.rng = random.Random(config.seed)
-        self.n_sims = 0
+        self.backend = backend or make_backend(config.backend, tdg, db)
+        self.n_sims = 0  # designs this run submitted (backend stats aggregate
+        # across sharers; this stays per-exploration under Campaign)
         self._taboo: Dict[Tuple[str, str], int] = {}
         self._sticky_focus: Optional[str] = None  # codesign-off fixation
-
-    # ------------------------------------------------------------------
-    def _simulate(self, design: Design) -> SimResult:
-        self.n_sims += 1
-        return simulate(design, self.tdg, self.db)
 
     # ---- 5-tuple selection ----------------------------------------------
     def _select_metric(self, dist: Distance) -> str:
@@ -130,7 +132,9 @@ class Explorer:
             return self._sticky_focus
         return dist.farthest_metric()
 
-    def _select_task(self, metric: str, dist: Distance, result: SimResult) -> str:
+    def _select_task(
+        self, design: Design, metric: str, dist: Distance, result: SimResult
+    ) -> str:
         tasks = list(self.tdg.tasks)
         if self.cfg.awareness == "sa":
             return self.rng.choice(tasks)
@@ -149,17 +153,17 @@ class Explorer:
                 tasks, key=lambda t: result.task_energy_j.get(t, 0.0), reverse=True
             )
         else:  # area: tasks whose buffers sit on the largest memories first
+            # (capacity is keyed by *memory* name — resolve through the task's
+            # mapped memory; own write bytes break ties within one memory)
             ranked = sorted(
                 tasks,
-                key=lambda t: result.mem_capacity_bytes.get(
-                    # design of current result — capacity proxy via write bytes
-                    t, self.tdg.tasks[t].write_bytes,
+                key=lambda t: (
+                    result.mem_capacity_bytes.get(design.task_mem.get(t, ""), 0.0),
+                    self.tdg.tasks[t].write_bytes,
                 ),
                 reverse=True,
             )
         for t in ranked:
-            if all((t, b) not in self._taboo for b in ("*",)):
-                pass
             if not any(k[0] == t for k in self._taboo):
                 return t
         return ranked[0]
@@ -259,10 +263,19 @@ class Explorer:
             return news[0] if news else None
 
     # ---- main loop ---------------------------------------------------------
-    def run(self, initial: Optional[Design] = None) -> ExplorationResult:
+    def run_steps(
+        self, initial: Optional[Design] = None
+    ) -> Generator[List[Design], List[SimResult], ExplorationResult]:
+        """Coroutine form of the search: yields each iteration's candidate
+        designs as one batch and is resumed (``gen.send``) with the matching
+        ``SimResult`` list. ``run()`` drives it against ``self.backend``;
+        `Campaign` drives many explorers' generators in lockstep so one
+        dispatch prices the pending neighbours of *all* live explorations.
+        The ``StopIteration`` value is the :class:`ExplorationResult`."""
         t0 = time.perf_counter()
         cur = initial or Design.base(self.tdg)
-        cur_res = self._simulate(cur)
+        self.n_sims += 1
+        (cur_res,) = yield [cur]
         cur_dist = distance(cur_res, self.budget)
         best = (cur, cur_res, cur_dist)
         history: List[dict] = []
@@ -274,20 +287,24 @@ class Explorer:
             self._taboo = {k: v - 1 for k, v in self._taboo.items() if v > 1}
 
             metric = self._select_metric(cur_dist)
-            task = self._select_task(metric, cur_dist, cur_res)
+            task = self._select_task(cur, metric, cur_dist, cur_res)
             block = self._select_block(cur, metric, task, cur_res)
             bneck = cur_res.task_bottleneck.get(task, "pe")
             moves = self._select_moves(cur, metric, task, block)
 
-            cands: List[Tuple[Design, str, SimResult, Distance]] = []
-            for cand, move in self._make_neighbors(
+            neighbors = self._make_neighbors(
                 cur, metric, task, block, moves, bneck, self.cfg.neighbors_per_iter
-            ):
-                res = self._simulate(cand)
-                cands.append((cand, move, res, distance(res, self.budget)))
-            if not cands:
+            )
+            if not neighbors:
                 self._taboo[(task, block)] = self.cfg.taboo_ttl
                 continue
+            # one evaluation request per iteration: the whole neighbour set
+            self.n_sims += len(neighbors)
+            batch_res = yield [d for d, _ in neighbors]
+            cands: List[Tuple[Design, str, SimResult, Distance]] = [
+                (cand, move, res, distance(res, self.budget))
+                for (cand, move), res in zip(neighbors, batch_res, strict=True)
+            ]
 
             cands.sort(key=lambda c: c[3].fitness(self.cfg.alpha_met))
             cand, move, res, dist_after = cands[0]
@@ -339,4 +356,23 @@ class Explorer:
             wall_s=time.perf_counter() - t0,
             history=history,
             ledger=ledger,
+            backend_name=self.backend.name,
         )
+
+    def run(self, initial: Optional[Design] = None) -> ExplorationResult:
+        """Drive :meth:`run_steps` against ``self.backend`` — exactly one
+        ``backend.evaluate`` call per search iteration (plus one for the
+        initial design)."""
+        gen = self.run_steps(initial)
+        sim_wall = 0.0
+        try:
+            pending = next(gen)
+            while True:
+                t0 = time.perf_counter()
+                results = self.backend.evaluate(pending)
+                sim_wall += time.perf_counter() - t0
+                pending = gen.send(results)
+        except StopIteration as stop:
+            result: ExplorationResult = stop.value
+            result.sim_wall_s = sim_wall
+            return result

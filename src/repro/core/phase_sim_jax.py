@@ -80,30 +80,35 @@ class EncodedDesign:
     @staticmethod
     def of(design: Design, g: TaskGraph, db: HardwareDatabase, enc: EncodedWorkload) -> "EncodedDesign":
         assert len(design.noc_chain) == 1, "vectorized sim: single-NoC regime"
-        pes = design.pes()
-        mems = design.mems()
-        pe_i = {n: i for i, n in enumerate(pes)}
-        mem_i = {n: i for i, n in enumerate(mems)}
-        task_pe = np.asarray([pe_i[design.task_pe[n]] for n in enc.names], np.int32)
-        task_mem = np.asarray([mem_i[design.task_mem[n]] for n in enc.names], np.int32)
-        pe_peak = np.asarray([db.pe_peak_ops(design.blocks[p]) for p in pes], np.float32)
-        accel = []
-        for n in enc.names:
-            b = design.blocks[design.task_pe[n]]
-            if b.subtype == "acc" and b.hardened_for == n:
-                accel.append(db.a_peak(n, g.tasks[n].llp, b.unroll))
-            else:
-                accel.append(1.0)
-        mem_bw = np.asarray(
-            [design.blocks[m].peak_bandwidth(db) for m in mems], np.float32
-        )
-        noc = design.blocks[design.noc_chain[0]]
+        # single pass over blocks: slot index maps + peak rates (this runs per
+        # candidate design in the DSE inner loop — keep it allocation-light)
+        pe_i: Dict[str, int] = {}
+        mem_i: Dict[str, int] = {}
+        pe_peak: List[float] = []
+        mem_bw: List[float] = []
+        for n, b in design.blocks.items():
+            if b.kind == BlockKind.PE:
+                pe_i[n] = len(pe_peak)
+                pe_peak.append(db.pe_peak_ops(b))
+            elif b.kind == BlockKind.MEM:
+                mem_i[n] = len(mem_bw)
+                mem_bw.append(b.peak_bandwidth(db))
+        t = len(enc.names)
+        d_pe, d_mem, blocks, tasks = design.task_pe, design.task_mem, design.blocks, g.tasks
+        task_pe = np.fromiter((pe_i[d_pe[n]] for n in enc.names), np.int32, t)
+        task_mem = np.fromiter((mem_i[d_mem[n]] for n in enc.names), np.int32, t)
+        accel = np.ones(t, np.float32)
+        for k, n in enumerate(enc.names):
+            b = blocks[d_pe[n]]
+            if b.hardened_for == n and b.subtype == "acc":
+                accel[k] = db.a_peak(n, tasks[n].llp, b.unroll)
+        noc = blocks[design.noc_chain[0]]
         return EncodedDesign(
             task_pe=task_pe,
             task_mem=task_mem,
-            pe_peak=pe_peak,
-            pe_accel=np.asarray(accel, np.float32),
-            mem_bw=mem_bw,
+            pe_peak=np.asarray(pe_peak, np.float32),
+            pe_accel=accel,
+            mem_bw=np.asarray(mem_bw, np.float32),
             noc_bw=np.float32(noc.peak_bandwidth(db)),
             noc_links=int(noc.n_links),
         )
@@ -126,7 +131,15 @@ def simulate_batch(
     noc_bw: jnp.ndarray,  # (B,)
     noc_links: jnp.ndarray,  # (B,) int32
 ) -> Dict[str, jnp.ndarray]:
-    """vmap'd phase simulation. Returns latency (B,) + task finish times (B,T)."""
+    """vmap'd phase simulation.
+
+    Returns latency (B,), task finish times (B, T), and the per-task /
+    per-phase attribution a :class:`~repro.core.backend.JaxBatchedBackend`
+    needs to reconstruct a full ``SimResult``: the binding-resource code of
+    each task at retirement (0=pe, 1=mem, 2=noc — mirroring
+    ``gables.bottleneck_of``), time-weighted bottleneck seconds per class,
+    accelerator-level parallelism time, bytes moved, and the phase count.
+    """
 
     t = enc.work_ops.shape[0]
     n_pe = pe_peak.shape[-1]
@@ -134,7 +147,7 @@ def simulate_batch(
 
     def one(task_pe, task_mem, pe_peak, pe_accel, mem_bw, noc_bw, noc_links):
         def phase(_, state):
-            remain, completed, now, finish = state
+            remain, completed, now, finish, bneck, kind_s, alp_t, traffic, nph = state
             done_parents = jnp.all(~enc.parent_mask | completed[None, :], axis=1)
             running = (~completed) & done_parents
             any_run = jnp.any(running)
@@ -157,46 +170,118 @@ def simulate_batch(
 
             rd_bw = jnp.minimum(m_bw, n_bw)
             wr_bw = jnp.minimum(m_bw, n_bw)
-            c_t = jnp.maximum(
-                remain[:, 0] / compute,
-                jnp.maximum(remain[:, 1] / rd_bw, remain[:, 2] / wr_bw),
-            )
+            comp_t = remain[:, 0] / compute
+            rd_t = remain[:, 1] / rd_bw
+            wr_t = remain[:, 2] / wr_bw
+            c_t = jnp.maximum(comp_t, jnp.maximum(rd_t, wr_t))
             c_t = jnp.where(running, c_t, BIG)
             phi = jnp.min(c_t)  # Eq. 6
             phi = jnp.where(any_run, phi, 0.0)
 
+            # binding resource per running task (gables.bottleneck_of — note:
+            # attribution uses the task's *total* work over current rates, not
+            # the remaining work; compute wins ties, then mem vs noc by the
+            # tighter pipe)
+            tot_comp_t = enc.work_ops / compute
+            tot_rd_t = enc.read_bytes / rd_bw
+            tot_wr_t = enc.write_bytes / wr_bw
+            code = jnp.where(
+                tot_comp_t >= jnp.maximum(tot_rd_t, tot_wr_t),
+                0,
+                jnp.where(m_bw <= n_bw, 1, 2),
+            )
+            kind_s = kind_s + jax.ops.segment_sum(
+                jnp.where(running, phi, 0.0), code, num_segments=3
+            )
+
             rates = jnp.stack([compute, rd_bw, wr_bw], axis=1)
             dec = jnp.where(running[:, None], rates * phi, 0.0)
-            new_remain = jnp.maximum(remain - dec, 0.0)
+            drained = jnp.maximum(remain - dec, 0.0)  # post-drain, pre-retire
             newly_done = running & (c_t <= phi * (1 + 1e-9))
-            new_remain = jnp.where(newly_done[:, None], 0.0, new_remain)
+            new_remain = jnp.where(newly_done[:, None], 0.0, drained)
             now = now + phi
             finish = jnp.where(newly_done, now, finish)
-            return new_remain, completed | newly_done, now, finish
+            bneck = jnp.where(newly_done, code, bneck)
+            alp_t = alp_t + phi * jnp.sum(load > 0)
+            # phase_sim accumulates min(post-drain bytes, bw·phi) per running
+            # task — mirror it exactly so the backends agree on this field too
+            traffic = traffic + jnp.sum(
+                jnp.where(
+                    running,
+                    jnp.minimum(drained[:, 1] + drained[:, 2], dec[:, 1] + dec[:, 2]),
+                    0.0,
+                )
+            )
+            nph = nph + jnp.where(any_run, 1, 0)
+            return (
+                new_remain, completed | newly_done, now, finish,
+                bneck, kind_s, alp_t, traffic, nph,
+            )
 
         remain0 = jnp.stack([enc.work_ops, enc.read_bytes, enc.write_bytes], axis=1)
-        state = (remain0, jnp.zeros((t,), bool), jnp.float32(0.0), jnp.zeros((t,), jnp.float32))
-        remain, completed, now, finish = jax.lax.fori_loop(0, t, phase, state)
-        return {"latency_s": now, "finish_s": finish, "all_done": jnp.all(completed)}
+        state = (
+            remain0,
+            jnp.zeros((t,), bool),
+            jnp.float32(0.0),
+            jnp.zeros((t,), jnp.float32),
+            jnp.zeros((t,), jnp.int32),
+            jnp.zeros((3,), jnp.float32),
+            jnp.float32(0.0),
+            jnp.float32(0.0),
+            jnp.int32(0),
+        )
+        (remain, completed, now, finish, bneck, kind_s, alp_t, traffic, nph) = (
+            jax.lax.fori_loop(0, t, phase, state)
+        )
+        return {
+            "latency_s": now,
+            "finish_s": finish,
+            "all_done": jnp.all(completed),
+            "bneck_code": bneck,
+            "bneck_kind_s": kind_s,
+            "alp_time_s": alp_t,
+            "traffic_bytes": traffic,
+            "n_phases": nph,
+        }
 
     return jax.vmap(one)(task_pe, task_mem, pe_peak, pe_accel, mem_bw, noc_bw, noc_links)
 
 
-def encode_batch(designs: List[Design], g: TaskGraph, db: HardwareDatabase, enc: EncodedWorkload):
-    """Pad a list of single-NoC designs to a common slot count and stack."""
+def encode_batch(
+    designs: List[Design],
+    g: TaskGraph,
+    db: HardwareDatabase,
+    enc: EncodedWorkload,
+    n_pe: int = 0,
+    n_mem: int = 0,
+):
+    """Pad a list of single-NoC designs to a common slot count and stack.
+
+    ``n_pe``/``n_mem`` optionally force the padded slot counts — backends pad
+    to shape buckets so the jit cache is keyed on a handful of shapes instead
+    of recompiling every time a move adds a block. Returns host (numpy)
+    arrays; `jax.jit` transfers them on dispatch.
+    """
     encs = [EncodedDesign.of(d, g, db, enc) for d in designs]
-    n_pe = max(e.pe_peak.shape[0] for e in encs)
-    n_mem = max(e.mem_bw.shape[0] for e in encs)
+    b, t = len(encs), len(enc.names)
+    n_pe = max(n_pe, max(e.pe_peak.shape[0] for e in encs))
+    n_mem = max(n_mem, max(e.mem_bw.shape[0] for e in encs))
 
-    def pad(a, n):
-        return np.pad(a, (0, n - a.shape[0]), constant_values=1.0)
-
-    return (
-        jnp.asarray(np.stack([e.task_pe for e in encs])),
-        jnp.asarray(np.stack([e.task_mem for e in encs])),
-        jnp.asarray(np.stack([pad(e.pe_peak, n_pe) for e in encs])),
-        jnp.asarray(np.stack([e.pe_accel for e in encs])),
-        jnp.asarray(np.stack([pad(e.mem_bw, n_mem) for e in encs])),
-        jnp.asarray(np.stack([e.noc_bw for e in encs])),
-        jnp.asarray(np.stack([np.int32(e.noc_links) for e in encs])),
-    )
+    # preallocate padded buffers and fill (pad value 1.0 keeps unused slots
+    # free of div-by-zero; they host no tasks so they never contribute)
+    task_pe = np.empty((b, t), np.int32)
+    task_mem = np.empty((b, t), np.int32)
+    pe_accel = np.empty((b, t), np.float32)
+    pe_peak = np.ones((b, n_pe), np.float32)
+    mem_bw = np.ones((b, n_mem), np.float32)
+    noc_bw = np.empty((b,), np.float32)
+    noc_links = np.empty((b,), np.int32)
+    for i, e in enumerate(encs):
+        task_pe[i] = e.task_pe
+        task_mem[i] = e.task_mem
+        pe_accel[i] = e.pe_accel
+        pe_peak[i, : e.pe_peak.shape[0]] = e.pe_peak
+        mem_bw[i, : e.mem_bw.shape[0]] = e.mem_bw
+        noc_bw[i] = e.noc_bw
+        noc_links[i] = e.noc_links
+    return task_pe, task_mem, pe_peak, pe_accel, mem_bw, noc_bw, noc_links

@@ -1,0 +1,40 @@
+"""Optional-hypothesis shim: property tests skip cleanly when the library is
+absent, while the plain pytest tests in the same modules keep running.
+
+Usage (instead of ``from hypothesis import given, settings, strategies``):
+
+    from _optional_hypothesis import given, settings, st
+
+When hypothesis is installed these are the real objects. When it is not,
+``st`` swallows any strategy-building expression and ``given`` replaces the
+test with a skip marker — so module import (and collection) always succeeds.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs arbitrary strategy expressions: st.lists(...).filter(...)."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -1,0 +1,200 @@
+"""SimulatorBackend API: JAX≡Python equivalence, multi-NoC fallback,
+one-dispatch-per-iteration Explorer contract, and Campaign aggregation."""
+import pytest
+
+from repro.core import (
+    Campaign,
+    Design,
+    Explorer,
+    ExplorerConfig,
+    HardwareDatabase,
+    JaxBatchedBackend,
+    PythonBackend,
+    ar_complex,
+    audio,
+    calibrated_budget,
+    edge_detection,
+    make_backend,
+    random_single_noc_designs,
+)
+from repro.core.backend import BackendStats
+from repro.core.blocks import make_gpp, make_noc
+
+REL_TOL = 1e-4  # acceptance bar: backends agree on latency within 1e-4
+
+
+def _multi_noc_design(g):
+    """Two-NoC chain: outside the vectorized regime, must take the fallback."""
+    d = Design.base(g)
+    noc2 = d.add_block(make_noc(), after_noc=d.noc_chain[0])
+    pe2 = d.add_block(make_gpp(400), attach_to=noc2.name)
+    tasks = sorted(g.tasks)
+    for t in tasks[: len(tasks) // 2]:
+        d.task_pe[t] = pe2.name
+    return d
+
+
+# ---- equivalence ---------------------------------------------------------
+@pytest.mark.parametrize("graph_fn,seed", [(edge_detection, 3), (ar_complex, 5)])
+def test_backend_equivalence_randomized(graph_fn, seed):
+    """Property-style: random single-NoC designs price identically (within
+    float32) through either backend — latency, finish times, power, area."""
+    db = HardwareDatabase()
+    g = graph_fn()
+    designs = random_single_noc_designs(g, 12, seed=seed)
+    rp = PythonBackend(g, db).evaluate(designs)
+    rj = JaxBatchedBackend(g, db).evaluate(designs)
+    for i, (a, b) in enumerate(zip(rp, rj)):
+        assert abs(a.latency_s - b.latency_s) / a.latency_s < REL_TOL, i
+        for t in a.task_finish_s:
+            ref = max(a.task_finish_s[t], 1e-12)
+            assert abs(a.task_finish_s[t] - b.task_finish_s[t]) / ref < REL_TOL, (i, t)
+        for w in a.workload_latency_s:
+            ref = max(a.workload_latency_s[w], 1e-12)
+            assert abs(a.workload_latency_s[w] - b.workload_latency_s[w]) / ref < REL_TOL
+        assert abs(a.power_w - b.power_w) / a.power_w < 1e-3, i
+        assert abs(a.area_mm2 - b.area_mm2) / a.area_mm2 < 1e-6, i
+        assert a.mem_capacity_bytes == pytest.approx(b.mem_capacity_bytes)
+        # Algorithm-1 inputs must match: bottleneck attribution drives moves
+        assert a.task_bottleneck == b.task_bottleneck, i
+        assert a.task_bottleneck_block == b.task_bottleneck_block, i
+        assert b.total_traffic_bytes == pytest.approx(
+            a.total_traffic_bytes, rel=1e-3, abs=1.0
+        ), i
+
+
+def test_jax_backend_multi_noc_fallback():
+    """Designs outside the single-NoC regime transparently fall back to the
+    Python path inside the same evaluate() call, result order preserved."""
+    db = HardwareDatabase()
+    g = edge_detection()
+    singles = random_single_noc_designs(g, 3, seed=1)
+    multi = _multi_noc_design(g)
+    jb = JaxBatchedBackend(g, db)
+    assert not jb.supports(multi) and all(jb.supports(d) for d in singles)
+
+    mixed = [singles[0], multi, singles[1], singles[2]]
+    got = jb.evaluate(mixed)
+    ref = PythonBackend(g, db).evaluate(mixed)
+    for a, b in zip(ref, got):
+        assert abs(a.latency_s - b.latency_s) / a.latency_s < REL_TOL
+    # the multi-NoC result is the exact Python result (same code path)
+    assert got[1].latency_s == ref[1].latency_s
+    s = jb.stats()
+    assert s.n_sims == 4 and s.n_fallback == 1 and s.n_batched == 3
+    assert s.n_dispatches == 1
+
+
+# ---- explorer contract ---------------------------------------------------
+class _CountingBackend:
+    """Wraps a backend, recording every dispatch's batch size."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = f"counting[{inner.name}]"
+        self.tdg, self.db = inner.tdg, inner.db
+        self.batches = []
+
+    def supports(self, design):
+        return self.inner.supports(design)
+
+    def stats(self):
+        return self.inner.stats()
+
+    def evaluate(self, designs):
+        self.batches.append(len(designs))
+        return self.inner.evaluate(designs)
+
+
+def test_explorer_one_dispatch_per_iteration():
+    db = HardwareDatabase()
+    g = edge_detection()
+    spy = _CountingBackend(PythonBackend(g, db))
+    ex = Explorer(g, db, calibrated_budget(db),
+                  ExplorerConfig(max_iterations=25, seed=4), backend=spy)
+    res = ex.run()
+    # dispatch 0 is the initial design; every search iteration issues at most
+    # one evaluate() (exactly one when neighbours were generated)
+    assert spy.batches[0] == 1
+    assert len(spy.batches) <= res.iterations + 1 + 25  # taboo'd iters skip
+    assert all(b >= 1 for b in spy.batches)
+    assert sum(spy.batches) == res.n_sims == spy.stats().n_sims
+    assert res.sim_wall_s > 0.0
+
+
+def test_explorer_backend_config_selection():
+    db = HardwareDatabase()
+    g = edge_detection()
+    bud = calibrated_budget(db)
+    res_p = Explorer(g, db, bud, ExplorerConfig(max_iterations=15, seed=2)).run()
+    res_j = Explorer(
+        g, db, bud, ExplorerConfig(max_iterations=15, seed=2, backend="jax")
+    ).run()
+    assert res_p.backend_name == "python" and res_j.backend_name == "jax"
+    # same seed, same decisions modulo float32: the searches track each other
+    assert res_j.n_sims == res_p.n_sims
+    assert abs(res_j.best_result.latency_s - res_p.best_result.latency_s) / max(
+        res_p.best_result.latency_s, 1e-12
+    ) < 1e-3
+    with pytest.raises(ValueError):
+        make_backend("nope", g, db)
+
+
+# ---- campaign ------------------------------------------------------------
+def test_campaign_smoke_two_seeds_two_workloads():
+    """2 seeds × 2 workloads: per-run results come back, n_sims aggregates
+    exactly, and all runs of one workload share one backend."""
+    db = HardwareDatabase()
+    g_ed, g_au = edge_detection(), audio()
+    bud = calibrated_budget(db)
+    camp = Campaign.sweep(
+        db, {"ed": g_ed, "audio": g_au}, bud, seeds=(1, 2),
+        backend="jax", max_iterations=40,
+    )
+    res = camp.run()
+    assert set(res.runs) == {
+        "ed.farsi.s1", "ed.farsi.s2", "audio.farsi.s1", "audio.farsi.s2"
+    }
+    assert res.aggregate["n_runs"] == 4
+    assert res.aggregate["n_converged"] >= 1  # edge_detection converges fast
+    assert res.aggregate["n_sims_total"] == sum(r.n_sims for r in res.runs.values())
+    # one shared backend per workload, cross-batching all its runs
+    assert set(res.backend_stats) == {"ed", "audio"}
+    assert isinstance(res.backend_stats["ed"], BackendStats)
+    for wl, prefix in (("ed", "ed."), ("audio", "audio.")):
+        per_run = sum(r.n_sims for n, r in res.runs.items() if n.startswith(prefix))
+        assert res.backend_stats[wl].n_sims == per_run
+        # cross-batched: far fewer dispatches than sims (≥2 runs per dispatch)
+        assert res.backend_stats[wl].n_dispatches < per_run
+    assert res.aggregate["sim_wall_s_total"] > 0.0
+    assert res.converged_runs()
+
+
+def test_campaign_distinct_graphs_same_name_keep_separate_stats():
+    """Two distinct graph objects sharing a name get distinct backends AND
+    distinct backend_stats entries (suffix-disambiguated)."""
+    db = HardwareDatabase()
+    g1, g2 = edge_detection(), edge_detection()
+    bud = calibrated_budget(db)
+    camp = (
+        Campaign(db)
+        .add("a", g1, bud, ExplorerConfig(max_iterations=5))
+        .add("b", g2, bud, ExplorerConfig(max_iterations=5))
+    )
+    res = camp.run()
+    assert set(res.backend_stats) == {"ed", "ed#1"}
+    assert res.backend_stats["ed"].n_sims == res.runs["a"].n_sims
+    assert res.backend_stats["ed#1"].n_sims == res.runs["b"].n_sims
+
+
+def test_campaign_duplicate_name_rejected():
+    db = HardwareDatabase()
+    g = edge_detection()
+    bud = calibrated_budget(db)
+    camp = Campaign(db).add("a", g, bud, ExplorerConfig(max_iterations=5))
+    with pytest.raises(ValueError):
+        camp.add("a", g, bud, ExplorerConfig(max_iterations=5))
+    # a per-run backend that conflicts with the shared campaign backend is
+    # refused rather than silently overridden
+    with pytest.raises(ValueError):
+        camp.add("b", g, bud, ExplorerConfig(max_iterations=5, backend="jax"))

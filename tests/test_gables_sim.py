@@ -3,7 +3,7 @@ hand-solvable systems, and phase-vs-event fidelity properties."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional_hypothesis import given, settings, st
 
 from repro.core import (
     Design,

@@ -2,7 +2,7 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional_hypothesis import given, settings, st
 
 from repro.core import (
     Design,

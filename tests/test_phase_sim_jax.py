@@ -1,38 +1,11 @@
 """Vectorized phase simulator ≡ the Python reference (single-NoC regime)."""
-import random
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Design, HardwareDatabase, ar_complex, edge_detection, simulate
-from repro.core.blocks import make_accelerator, make_gpp, make_mem
+from repro.core import Design, HardwareDatabase, ar_complex, edge_detection, random_single_noc_designs, simulate
 from repro.core.phase_sim_jax import EncodedWorkload, encode_batch, simulate_batch
-
-
-def _random_single_noc_designs(g, n, seed=0):
-    rng = random.Random(seed)
-    designs = []
-    for _ in range(n):
-        d = Design.base(g)
-        noc = d.noc_chain[0]
-        tasks = sorted(g.tasks)
-        for _ in range(rng.randint(0, 6)):
-            if rng.random() < 0.6:
-                t = rng.choice(tasks)
-                b = d.add_block(make_accelerator(t, rng.choice((100, 400, 800))), attach_to=noc)
-                b.unroll = rng.choice((1, 8, 64))
-                d.task_pe[t] = b.name
-            else:
-                d.add_block(make_mem(rng.choice(("dram", "sram")), rng.choice((100, 800)),
-                                     rng.choice((32, 256))), attach_to=noc)
-        mems = d.mems()
-        for t in tasks:
-            d.task_mem[t] = rng.choice(mems)
-        d.blocks[noc].n_links = rng.choice((1, 2, 4))
-        designs.append(d)
-    return designs
 
 
 @pytest.mark.parametrize("graph_fn", [edge_detection, ar_complex])
@@ -40,7 +13,7 @@ def test_vectorized_matches_python(graph_fn):
     db = HardwareDatabase()
     g = graph_fn()
     enc = EncodedWorkload.of(g)
-    designs = _random_single_noc_designs(g, 8, seed=3)
+    designs = random_single_noc_designs(g, 8, seed=3)
     batch = encode_batch(designs, g, db, enc)
     out = jax.jit(lambda *a: simulate_batch(enc, *a))(*batch)
     assert bool(out["all_done"].all())
@@ -59,7 +32,7 @@ def test_batch_throughput_smoke():
     db = HardwareDatabase()
     g = edge_detection()
     enc = EncodedWorkload.of(g)
-    designs = _random_single_noc_designs(g, 32, seed=9)
+    designs = random_single_noc_designs(g, 32, seed=9)
     batch = encode_batch(designs, g, db, enc)
     out = jax.jit(lambda *a: simulate_batch(enc, *a))(*batch)
     assert out["latency_s"].shape == (32,)

@@ -28,7 +28,7 @@ MESH1 = FakeMesh({"data": 16, "model": 16})
 MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
 
 
-from hypothesis import given, settings, strategies as st
+from _optional_hypothesis import given, settings, st
 
 
 @given(
