@@ -43,9 +43,9 @@ def run() -> List[Row]:
     enc = EncodedWorkload.of(g)
     designs = random_single_noc_designs(g, 64, seed=5)
     batch = encode_batch(designs, g, db, enc)
-    fn = jax.jit(lambda *a: simulate_batch(enc, *a))
-    jax.block_until_ready(fn(*batch)["latency_s"])  # compile once
-    t_batch = timeit(lambda: jax.block_until_ready(fn(*batch)["latency_s"]), n=5)
+    fn = jax.jit(lambda rows: simulate_batch(enc, rows))
+    jax.block_until_ready(fn(batch)["latency_s"])  # compile once
+    t_batch = timeit(lambda: jax.block_until_ready(fn(batch)["latency_s"]), n=5)
     t_python = timeit(lambda: [simulate(dd, g, db) for dd in designs], n=3)
     rows.append(
         (

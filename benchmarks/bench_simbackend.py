@@ -1,23 +1,34 @@
-"""SimulatorBackend shoot-out: scalar-Python vs vmap-batched-JAX evaluation.
+"""SimulatorBackend shoot-out: scalar-Python vs array-native JAX evaluation.
 
-Measures the two things the API redesign is for, and writes them to
+Measures the DSE hot path the perf work targets, and writes it to
 ``BENCH_simbackend.json`` (next to this file) so future PRs can track the
 speedup trajectory:
 
-  1. neighbour-evaluation throughput — the same candidate batch priced by
-     ``PythonBackend`` (simulate() per design) and by a warm
-     ``JaxBatchedBackend`` (one `vmap` dispatch), in designs/second;
-  2. end-to-end explorer iteration rate — a fixed-seed exploration run with
+  1. neighbour-evaluation throughput — the regime the explorer actually
+     runs: one base design, a batch of move candidates (recorded deltas, no
+     clones), priced by ``PythonBackend`` (simulate() per candidate) and by
+     a warm ``JaxBatchedBackend`` (incremental encode → one `vmap` dispatch
+     → fitness column consumed, no decode), in candidates/second;
+  2. the backend's encode/dispatch/decode wall-clock breakdown
+     (``BackendStats``) over the measured dispatches;
+  3. end-to-end explorer iteration rate — a fixed-seed exploration run with
      each backend, in iterations/second (jit warm-up excluded via a short
      priming run so the number reflects steady-state search).
+
+``run(smoke=True)`` is the CI guard (`python -m benchmarks.run --smoke`):
+tiny iteration counts, and it *asserts* JAX beats Python on neighbour-eval
+throughput and that both backends agree on the winning candidate's latency.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
+import random
 from typing import List
 
 from repro.core import (
+    Candidate,
     Explorer,
     ExplorerConfig,
     HardwareDatabase,
@@ -28,6 +39,7 @@ from repro.core import (
     calibrated_budget,
     random_single_noc_designs,
 )
+from repro.core.moves import MOVE_KINDS, MoveDelta, MoveSpec, apply_move
 
 from .common import Row, timeit
 
@@ -36,42 +48,95 @@ BATCH = 64  # campaign-scale cross-batch (explorer alone submits 4/iteration)
 EXPLORE_ITERS = 120
 
 
-def run() -> List[Row]:
+def make_candidates(g, base, budget, n: int, seed: int = 7) -> List[Candidate]:
+    """``n`` recorded-move candidates off one base design — the shape of an
+    explorer/campaign neighbour batch (shared base, delta per candidate)."""
+    rng = random.Random(seed)
+    tasks = sorted(g.tasks)
+    ck = base.checkpoint()
+    out: List[Candidate] = []
+    while len(out) < n:
+        move = rng.choice(MOVE_KINDS)
+        block = rng.choice(list(base.blocks))
+        task = rng.choice(tasks)
+        direction = rng.choice([-1, 1])
+        delta = MoveDelta()
+        ok = apply_move(base, g, move, block, task, direction, "pe", "latency",
+                        random.Random(0), delta)
+        base.restore(ck)
+        if ok and not delta.topology:
+            spec = MoveSpec(move, block, task, direction, "pe", "latency")
+            out.append(Candidate(base=base, spec=spec, delta=delta, budget=budget))
+    return out
+
+
+def _consume(handles) -> int:
+    """Rank the batch the way the explorer does: fitness column only."""
+    fits = [h.fitness for h in handles]
+    return min(range(len(fits)), key=fits.__getitem__)
+
+
+def run(smoke: bool = False) -> List[Row]:
     db = HardwareDatabase()
-    payload = {"batch": BATCH, "explore_iterations": EXPLORE_ITERS, "workloads": {}}
+    batch = 16 if smoke else BATCH
+    iters = 20 if smoke else EXPLORE_ITERS
+    reps = 3 if smoke else 7
+    payload = {"batch": batch, "explore_iterations": iters, "workloads": {}}
     rows: List[Row] = []
 
     # audio (15 tasks) and the full AR complex (28 tasks) — the two paper
     # workload scales where batching is the DSE's operating point
-    for g in (audio(), ar_complex()):
-        designs = random_single_noc_designs(g, BATCH, seed=7)
+    graphs = (audio(),) if smoke else (audio(), ar_complex())
+    for g in graphs:
+        bud = calibrated_budget(db)
+        base = random_single_noc_designs(g, 1, seed=7)[0]
+        cands = make_candidates(g, base, bud, batch)
         py = PythonBackend(g, db)
         jx = JaxBatchedBackend(g, db)
-        jx.evaluate(designs)  # compile once; steady state is what the DSE sees
-        py.evaluate(designs)
+        _consume(jx.evaluate_candidates(cands))  # compile once; steady state
+        _consume(py.evaluate_candidates(cands))
         # interleave the samples so both backends see the same machine
         # conditions (scheduler noise on small graphs otherwise skews ratios)
         t_py = t_jx = float("inf")
-        for _ in range(7):
-            t_py = min(t_py, timeit(lambda: py.evaluate(designs), n=1))
-            t_jx = min(t_jx, timeit(lambda: jx.evaluate(designs), n=1))
-        evals_py = BATCH / (t_py * 1e-6)
-        evals_jx = BATCH / (t_jx * 1e-6)
+        s0 = dataclasses.replace(jx.stats())
+        for _ in range(reps):
+            t_py = min(t_py, timeit(lambda: _consume(py.evaluate_candidates(cands)), n=1))
+            t_jx = min(t_jx, timeit(lambda: _consume(jx.evaluate_candidates(cands)), n=1))
+        s1 = jx.stats()
+        evals_py = batch / (t_py * 1e-6)
+        evals_jx = batch / (t_jx * 1e-6)
+        n_disp = s1.n_dispatches - s0.n_dispatches
+        breakdown = {
+            "encode_s_per_dispatch": (s1.encode_s - s0.encode_s) / n_disp,
+            "dispatch_s_per_dispatch": (s1.dispatch_s - s0.dispatch_s) / n_disp,
+            "decode_s_per_dispatch": (s1.decode_s - s0.decode_s) / n_disp,
+            "n_compiles": s1.n_compiles,
+        }
+
+        if smoke:
+            assert evals_jx / max(evals_py, 1e-9) >= 1.0, (
+                f"jax neighbour-eval slower than python: {evals_jx:.0f}/s vs {evals_py:.0f}/s"
+            )
+            hj = jx.evaluate_candidates(cands)
+            hp = py.evaluate_candidates(cands)
+            j = _consume(hj)
+            a, b = hp[j].result(), hj[j].result()
+            rel = abs(a.latency_s - b.latency_s) / a.latency_s
+            assert rel < 1e-4, f"backend latency mismatch on winner: {rel}"
 
         # end-to-end: fixed-seed exploration per backend (prime the jit cache
         # with a short run so shape-bucket compiles don't bill the measure run)
-        bud = calibrated_budget(db)
-        Explorer(g, db, bud, ExplorerConfig(max_iterations=EXPLORE_ITERS, seed=2),
+        Explorer(g, db, bud, ExplorerConfig(max_iterations=iters, seed=2),
                  backend=jx).run()
-        iters = {}
+        it_stats = {}
         for name, backend in (("python", py), ("jax", jx)):
             ex = Explorer(
                 g, db, bud,
-                ExplorerConfig(max_iterations=EXPLORE_ITERS, seed=3),
+                ExplorerConfig(max_iterations=iters, seed=3),
                 backend=backend,
             )
             res = ex.run()
-            iters[name] = {
+            it_stats[name] = {
                 "iterations": res.iterations,
                 "wall_s": res.wall_s,
                 "sim_wall_s": res.sim_wall_s,
@@ -84,30 +149,42 @@ def run() -> List[Row]:
             "python_evals_per_s": evals_py,
             "jax_evals_per_s": evals_jx,
             "eval_throughput_speedup": evals_jx / max(evals_py, 1e-9),
-            "explorer": iters,
+            "jax_breakdown": breakdown,
+            "explorer": it_stats,
             "explorer_iters_per_s_speedup": (
-                iters["jax"]["iters_per_s"] / max(iters["python"]["iters_per_s"], 1e-9)
+                it_stats["jax"]["iters_per_s"] / max(it_stats["python"]["iters_per_s"], 1e-9)
             ),
         }
         rows.append(
             (
                 f"simbackend.{g.name}.eval_throughput",
-                t_jx / BATCH,
+                t_jx / batch,
                 f"jax={evals_jx:.0f}/s python={evals_py:.0f}/s "
-                f"speedup={evals_jx/max(evals_py,1e-9):.1f}x batch={BATCH}",
+                f"speedup={evals_jx/max(evals_py,1e-9):.1f}x batch={batch}",
+            )
+        )
+        rows.append(
+            (
+                f"simbackend.{g.name}.breakdown",
+                0.0,
+                "encode={encode_s_per_dispatch:.2e}s dispatch={dispatch_s_per_dispatch:.2e}s "
+                "decode={decode_s_per_dispatch:.2e}s compiles={n_compiles}".format(**breakdown),
             )
         )
         rows.append(
             (
                 f"simbackend.{g.name}.explorer",
-                iters["jax"]["wall_s"] * 1e6,
-                f"jax={iters['jax']['iters_per_s']:.1f}it/s "
-                f"python={iters['python']['iters_per_s']:.1f}it/s "
+                it_stats["jax"]["wall_s"] * 1e6,
+                f"jax={it_stats['jax']['iters_per_s']:.1f}it/s "
+                f"python={it_stats['python']['iters_per_s']:.1f}it/s "
                 f"speedup={payload['workloads'][g.name]['explorer_iters_per_s_speedup']:.1f}x",
             )
         )
 
-    with open(JSON_PATH, "w") as f:
-        json.dump(payload, f, indent=2)
-    rows.append(("simbackend.json", 0.0, f"wrote {JSON_PATH}"))
+    if not smoke:
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=2)
+        rows.append(("simbackend.json", 0.0, f"wrote {JSON_PATH}"))
+    else:
+        rows.append(("simbackend.smoke", 0.0, "speedup>=1 and winner equivalence OK"))
     return rows

@@ -46,7 +46,19 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=sorted(BENCHES), default=None)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="perf-regression guard: tiny simbackend run that *asserts* the "
+        "JAX neighbour-eval path beats the Python path and both agree on "
+        "the winner (non-zero exit on regression; invoked by tier-1 tests)",
+    )
     args = ap.parse_args()
+    if args.smoke:
+        t0 = time.perf_counter()
+        emit(bench_simbackend.run(smoke=True))  # raises on regression
+        print(f"smoke.wall,{(time.perf_counter()-t0)*1e6:.0f},bench wall time", flush=True)
+        return
     names = args.only or list(BENCHES)
     print("name,us_per_call,derived")
     for name in names:

@@ -4,8 +4,10 @@ Public API re-exports. See DESIGN.md §2 for the paper→TPU mapping.
 """
 from .backend import (
     BackendStats,
+    Candidate,
     JaxBatchedBackend,
     PythonBackend,
+    SimHandle,
     SimulatorBackend,
     make_backend,
 )
@@ -38,8 +40,10 @@ __all__ = [
     "Budget",
     "Campaign",
     "CampaignResult",
+    "Candidate",
     "CodesignLedger",
     "Design",
+    "SimHandle",
     "JaxBatchedBackend",
     "PythonBackend",
     "RunSpec",

@@ -1,4 +1,4 @@
-"""Pluggable simulation backends: one `evaluate(designs) -> results` API.
+"""Pluggable simulation backends: one batched ``evaluate`` API.
 
 The paper's headline claim is an *agile* simulator (8,400X vs Platform
 Architect at 98.5% accuracy) driving the DSE, and its own profile (Fig. 8)
@@ -15,24 +15,36 @@ so the search loop never cares how a design is priced:
                           Python path for designs outside the vectorized
                           regime (multi-NoC topologies).
 
-`Explorer` submits every iteration's neighbour set through one
-``backend.evaluate`` call; `Campaign` goes further and cross-batches pending
-requests from many concurrent explorations into single dispatches. Both
-backends must agree on latency/finish times (asserted in
+The DSE hot path is :meth:`evaluate_candidates`: the explorer submits
+lightweight :class:`Candidate` records (base design + recorded move delta —
+no cloned object graphs), the backend applies each delta onto the cached
+encoding of the base (`phase_sim_jax.apply_delta`) inside persistent
+preallocated shape-bucket buffers, and one non-blocking dispatch returns
+:class:`SimHandle` objects. A handle's Eq.-7 ``fitness`` (computed on
+device) and scalar PPA columns are one small host transfer for the whole
+batch; the full ``SimResult`` (per-task finish/bottleneck/energy dicts) is
+reconstructed lazily on first ``result()`` — only the candidate the explorer
+accepts ever pays the decode.
+
+``evaluate(designs)`` stays as the eager compatibility wrapper (it decodes
+everything). Both backends must agree on latency/finish times (asserted in
 tests/test_backend_campaign.py); simulation-count and wall-clock accounting
 live here, in ``BackendStats``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-from typing import Dict, List, Optional, Protocol, Sequence, runtime_checkable
+from typing import Dict, Iterator, List, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
 from .blocks import BlockKind
+from .budgets import Budget, distance
 from .database import HardwareDatabase
 from .design import Design
+from .moves import MoveDelta, MoveSpec, apply_spec
 from .phase_sim import SimResult, simulate
 from .ppa import total_leakage_w
 from .tdg import TaskGraph, workload_of
@@ -42,7 +54,14 @@ _BNECK_KINDS = ("pe", "mem", "noc")
 
 @dataclasses.dataclass
 class BackendStats:
-    """Evaluation accounting — the backend owns n_sims and sim wall-clock."""
+    """Evaluation accounting — the backend owns n_sims and sim wall-clock.
+
+    ``wall_s`` covers time inside ``evaluate``/``evaluate_candidates``;
+    the encode/dispatch/decode breakdown splits the JAX hot path: host-side
+    delta encoding into the batch buffers, XLA dispatch submission (async —
+    device time is hidden behind it), and lazy ``SimResult`` reconstruction
+    (paid per *accessed* handle, possibly after the dispatch returns, so
+    ``decode_s`` is not a subset of ``wall_s``)."""
 
     n_sims: int = 0  # designs evaluated
     n_dispatches: int = 0  # evaluate() calls
@@ -50,6 +69,96 @@ class BackendStats:
     n_fallback: int = 0  # designs through the scalar Python path
     n_compiles: int = 0  # distinct padded shapes seen by the jit cache
     wall_s: float = 0.0  # total time inside evaluate()
+    encode_s: float = 0.0  # incremental encoding into batch buffers
+    dispatch_s: float = 0.0  # XLA dispatch submission
+    decode_s: float = 0.0  # lazy SimResult reconstruction + score fetches
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One design to price: a shared *base* design plus an optional recorded
+    move. The move is replayed (``apply_spec``) only when a full ``Design``
+    is needed — python fallback, lazy decode, or explorer acceptance; the
+    vectorized path prices the candidate straight from ``delta`` without
+    ever materializing the object graph."""
+
+    base: Design
+    spec: Optional[MoveSpec] = None
+    delta: Optional[MoveDelta] = None
+    budget: Optional[Budget] = None  # enables device-side Eq.-7 fitness
+    alpha: float = 0.05
+
+    @staticmethod
+    def of_design(design: Design, budget: Optional[Budget] = None,
+                  alpha: float = 0.05) -> "Candidate":
+        return Candidate(base=design, budget=budget, alpha=alpha)
+
+    def vectorizable(self) -> bool:
+        """True when the *resulting* design stays in the single-NoC regime
+        and (for moved candidates) the delta path can encode it."""
+        if len(self.base.noc_chain) != 1:
+            return False
+        if self.spec is None:
+            return True
+        return self.delta is not None and not self.delta.topology
+
+    def _replay(self, tdg: TaskGraph) -> None:
+        """Replay the recorded move, then rename any block the replay minted
+        back to the name recorded in the delta: every materialization of
+        this candidate — pricing fallback, lazy decode, and the final
+        ``accept`` — must agree on block names, or the decoded
+        ``SimResult``'s per-task block references would dangle in the
+        accepted design."""
+        before = None
+        if self.delta is not None and self.delta.added:
+            before = set(self.base.blocks)
+        ok = apply_spec(self.base, tdg, self.spec)
+        assert ok, f"recorded move failed to replay: {self.spec}"
+        if before is not None:
+            minted = [n for n in self.base.blocks if n not in before]
+            for fresh, rec in zip(minted, self.delta.added):
+                if fresh != rec.name:
+                    self.base.rename_block(fresh, rec.name)
+
+    @contextlib.contextmanager
+    def materialized(self, tdg: TaskGraph) -> Iterator[Design]:
+        """Temporarily turn the candidate into a real ``Design`` (apply the
+        recorded move in place, roll back on exit). The base must be in the
+        state it had when the move was recorded — the explorer guarantees
+        that by materializing/accepting before mutating ``cur``."""
+        if self.spec is None:
+            yield self.base
+            return
+        ck = self.base.checkpoint()
+        self._replay(tdg)
+        try:
+            yield self.base
+        finally:
+            self.base.restore(ck)
+
+    def accept(self, tdg: TaskGraph) -> None:
+        """Apply the recorded move to the base permanently (the one full
+        materialization the whole batch pays)."""
+        if self.spec is not None:
+            self._replay(tdg)
+
+
+@runtime_checkable
+class SimHandle(Protocol):
+    """Lazy result of pricing one candidate."""
+
+    @property
+    def fitness(self) -> float:
+        """Eq.-7 distance-to-budget fitness (requires Candidate.budget)."""
+        ...
+
+    def scalars(self) -> Dict[str, float]:
+        """Cheap PPA columns: latency_s / power_w / area_mm2 (no decode)."""
+        ...
+
+    def result(self) -> SimResult:
+        """Full SimResult; reconstructed on first access."""
+        ...
 
 
 @runtime_checkable
@@ -61,7 +170,12 @@ class SimulatorBackend(Protocol):
     db: HardwareDatabase
 
     def evaluate(self, designs: Sequence[Design]) -> List[SimResult]:
-        """Simulate every design; results align with the input order."""
+        """Simulate every design eagerly; results align with the input order."""
+        ...
+
+    def evaluate_candidates(self, cands: Sequence[Candidate]) -> List[SimHandle]:
+        """Price a batch of candidates, returning lazy handles (the DSE hot
+        path: one dispatch, scores consumable without decoding)."""
         ...
 
     def supports(self, design: Design) -> bool:
@@ -71,6 +185,36 @@ class SimulatorBackend(Protocol):
 
     def stats(self) -> BackendStats:
         ...
+
+
+class _ReadyHandle:
+    """Handle over an already-decoded SimResult (python path / fallbacks)."""
+
+    __slots__ = ("_res", "_fitness")
+
+    def __init__(self, res: SimResult, fitness: float) -> None:
+        self._res = res
+        self._fitness = fitness
+
+    @property
+    def fitness(self) -> float:
+        return self._fitness
+
+    def scalars(self) -> Dict[str, float]:
+        return {
+            "latency_s": self._res.latency_s,
+            "power_w": self._res.power_w,
+            "area_mm2": self._res.area_mm2,
+        }
+
+    def result(self) -> SimResult:
+        return self._res
+
+
+def _host_fitness(res: SimResult, cand: Candidate) -> float:
+    if cand.budget is None:
+        return float("nan")
+    return distance(res, cand.budget).fitness(cand.alpha)
 
 
 class PythonBackend:
@@ -94,6 +238,18 @@ class PythonBackend:
         self._stats.wall_s += time.perf_counter() - t0
         return out
 
+    def evaluate_candidates(self, cands: Sequence[Candidate]) -> List[SimHandle]:
+        t0 = time.perf_counter()
+        out: List[SimHandle] = []
+        for c in cands:
+            with c.materialized(self.tdg) as d:
+                res = simulate(d, self.tdg, self.db)
+            out.append(_ReadyHandle(res, _host_fitness(res, c)))
+        self._stats.n_sims += len(out)
+        self._stats.n_dispatches += 1
+        self._stats.wall_s += time.perf_counter() - t0
+        return out
+
     def stats(self) -> BackendStats:
         return self._stats
 
@@ -109,28 +265,114 @@ def _bucket(n: int) -> int:
     return max(8, _pow2(n))
 
 
-class JaxBatchedBackend:
-    """One `vmap` dispatch per batch of single-NoC designs.
+class _JaxBatch:
+    """Shared state of one dispatch: device outputs + memoized host pulls.
 
-    Latency/finish times come from the vectorized phase loop; the rest of
-    ``SimResult`` is reconstructed exactly on the host: PPA rollups are
-    O(blocks) closed forms, and per-task dynamic energy depends only on total
-    drained work (every task runs to completion), not on phase rates.
-    Designs outside the single-NoC regime fall back to the Python simulator
-    per design, inside the same ``evaluate`` call.
-    """
+    The dispatch is non-blocking — nothing transfers until a handle asks.
+    Consuming scores costs one small (B,)-shaped pull for the whole batch;
+    full decode pulls the per-task rows of that one handle only."""
+
+    __slots__ = ("out", "stats", "_fitness", "_scalars", "_host", "_n_decodes")
+
+    def __init__(self, out, stats: BackendStats) -> None:
+        self.out = out
+        self.stats = stats
+        self._fitness: Optional[np.ndarray] = None
+        self._scalars: Optional[Dict[str, np.ndarray]] = None
+        self._host: Optional[Dict[str, np.ndarray]] = None
+        self._n_decodes = 0
+
+    def fitness(self) -> np.ndarray:
+        if self._fitness is None:
+            t0 = time.perf_counter()
+            self._fitness = np.asarray(self.out["fitness"])
+            self.stats.decode_s += time.perf_counter() - t0
+        return self._fitness
+
+    def scalars(self) -> Dict[str, np.ndarray]:
+        if self._scalars is None:
+            t0 = time.perf_counter()
+            self._scalars = {
+                k: np.asarray(self.out[k])
+                for k in ("latency_s", "power_w", "area_mm2")
+            }
+            self.stats.decode_s += time.perf_counter() - t0
+        return self._scalars
+
+    def decode_source(self):
+        """Arrays to decode a handle's row from. The explorer decodes one
+        winner per batch — per-row pulls are right for that. A second decode
+        means an eager consumer (``evaluate()``) is walking the whole batch,
+        so pull everything across the device boundary once instead of ~8
+        small syncs per handle."""
+        self._n_decodes += 1
+        if self._host is None and self._n_decodes > 1:
+            import jax
+
+            self._host = jax.device_get(self.out)
+        return self._host if self._host is not None else self.out
+
+
+class _JaxHandle:
+    """Lazy handle into one row of a `_JaxBatch`."""
+
+    __slots__ = ("_batch", "_j", "_cand", "_backend", "_res")
+
+    def __init__(self, batch: _JaxBatch, j: int, cand: Candidate, backend) -> None:
+        self._batch = batch
+        self._j = j
+        self._cand = cand
+        self._backend = backend
+        self._res: Optional[SimResult] = None
+
+    @property
+    def fitness(self) -> float:
+        return float(self._batch.fitness()[self._j])
+
+    def scalars(self) -> Dict[str, float]:
+        s = self._batch.scalars()
+        return {k: float(v[self._j]) for k, v in s.items()}
+
+    def result(self) -> SimResult:
+        if self._res is None:
+            t0 = time.perf_counter()
+            out, j = self._batch.decode_source(), self._j
+            with self._cand.materialized(self._backend.tdg) as design:
+                self._res = self._backend._decode(
+                    design,
+                    float(out["latency_s"][j]),
+                    np.asarray(out["finish_s"][j]),
+                    np.asarray(out["bneck_code"][j]),
+                    np.asarray(out["bneck_kind_s"][j]),
+                    float(out["alp_time_s"][j]),
+                    float(out["traffic_bytes"][j]),
+                    int(out["n_phases"][j]),
+                )
+            self._batch.stats.decode_s += time.perf_counter() - t0
+        return self._res
+
+
+class JaxBatchedBackend:
+    """One `vmap` dispatch per batch of single-NoC candidates.
+
+    Latency/finish times and the Eq.-7 fitness come from the vectorized
+    phase+scoring kernel; the rest of ``SimResult`` is reconstructed exactly
+    on the host, lazily: PPA rollups are O(blocks) closed forms, and per-task
+    dynamic energy depends only on total drained work (every task runs to
+    completion), not on phase rates. Candidates outside the single-NoC
+    regime fall back to the Python simulator per design, inside the same
+    ``evaluate_candidates`` call."""
 
     name = "jax"
 
     def __init__(self, tdg: TaskGraph, db: HardwareDatabase) -> None:
-        import jax
-
-        from .phase_sim_jax import EncodedWorkload, simulate_batch
+        from .phase_sim_jax import EncodedWorkload
 
         self.tdg = tdg
         self.db = db
         self._enc = EncodedWorkload.of(tdg)
-        self._fn = jax.jit(lambda *a: simulate_batch(self._enc, *a))
+        self._jit = None  # single kernel: shapes vary only via padded buckets
+        self._buffers: Dict[tuple, Dict[str, np.ndarray]] = {}  # shape bucket -> rows
         self._shapes: set = set()
         self._stats = BackendStats()
         # static per-task tables for host-side SimResult reconstruction:
@@ -151,29 +393,64 @@ class JaxBatchedBackend:
     def stats(self) -> BackendStats:
         return self._stats
 
+    def _fn(self):
+        if self._jit is None:
+            import jax
+
+            from .phase_sim_jax import simulate_batch
+
+            self._jit = jax.jit(lambda rows: simulate_batch(self._enc, rows))
+        return self._jit
+
     # ------------------------------------------------------------------
     def evaluate(self, designs: Sequence[Design]) -> List[SimResult]:
+        """Eager compatibility path: price + decode everything."""
+        handles = self.evaluate_candidates([Candidate.of_design(d) for d in designs])
+        return [h.result() for h in handles]
+
+    def evaluate_candidates(self, cands: Sequence[Candidate]) -> List[SimHandle]:
         t0 = time.perf_counter()
-        results: List[Optional[SimResult]] = [None] * len(designs)
-        fast = [i for i, d in enumerate(designs) if self.supports(d)]
+        results: List[Optional[SimHandle]] = [None] * len(cands)
+        fast = [i for i, c in enumerate(cands) if c.vectorizable()]
         fast_set = set(fast)
-        for i in range(len(designs)):
+        for i, c in enumerate(cands):
             if i not in fast_set:
-                results[i] = simulate(designs[i], self.tdg, self.db)
+                with c.materialized(self.tdg) as d:
+                    res = simulate(d, self.tdg, self.db)
+                results[i] = _ReadyHandle(res, _host_fitness(res, c))
                 self._stats.n_fallback += 1
         if fast:
-            self._evaluate_batch([designs[i] for i in fast], fast, results)
-        self._stats.n_sims += len(designs)
+            self._evaluate_batch([cands[i] for i in fast], fast, results)
+        self._stats.n_sims += len(cands)
         self._stats.n_dispatches += 1
         self._stats.wall_s += time.perf_counter() - t0
         return results  # type: ignore[return-value]
 
     def _evaluate_batch(
-        self, batch: List[Design], idx: List[int], results: List[Optional[SimResult]]
+        self, batch: List[Candidate], idx: List[int], results: List[Optional[SimHandle]]
     ) -> None:
-        import jax
+        from .phase_sim_jax import (
+            ENCODED_FIELDS, EncodedDesign, alloc_rows, apply_delta, fill_budget,
+            fill_row, fill_row_fields,
+        )
 
-        from .phase_sim_jax import encode_batch
+        tE = time.perf_counter()
+        # incremental encoding: each distinct base design is encoded once per
+        # dispatch (candidates of one explorer iteration share their base),
+        # then every candidate is the base row plus its recorded move delta.
+        # apply_delta is copy-on-write, so `ed.f is base.f` marks untouched
+        # fields — the buffer fill below broadcasts the base row per group
+        # and rewrites only what each move changed.
+        base_encs: Dict[int, EncodedDesign] = {}
+        eds: List[EncodedDesign] = []
+        for c in batch:
+            key = id(c.base)
+            ed = base_encs.get(key)
+            if ed is None:
+                ed = base_encs[key] = EncodedDesign.of(c.base, self.tdg, self.db, self._enc)
+            if c.spec is not None:
+                ed = apply_delta(ed, c.delta, c.base, self.tdg, self.db, self._enc)
+            eds.append(ed)
 
         # pad slots and batch to power-of-two buckets: the jit cache then sees
         # a handful of shapes over a whole exploration instead of one per
@@ -181,33 +458,69 @@ class JaxBatchedBackend:
         # task count (moves allocate at most ~one block per task), so pinning
         # the shared PE/MEM slot bucket at pow2(T) collapses that shape axis
         # to one entry per workload; only the batch axis still varies.
-        need = max(max(len(d.pes()), len(d.mems())) for d in batch)
+        need = max(max(e.pe_peak.shape[0], e.mem_bw.shape[0]) for e in eds)
         slots = _bucket(max(need, len(self._enc.names)))
-        n_pe = n_mem = slots
-        arrays = list(encode_batch(batch, self.tdg, self.db, self._enc, n_pe, n_mem))
         b = len(batch)
         b_pad = _bucket(b)
-        if b_pad > b:
-            arrays = [
-                np.concatenate([a, np.repeat(a[:1], b_pad - b, axis=0)]) for a in arrays
-            ]
-        key = (b_pad, n_pe, n_mem)
+        key = (b_pad, slots)
+        rows = self._buffers.get(key)
+        if rows is None:
+            rows = self._buffers[key] = alloc_rows(
+                b_pad, len(self._enc.names), slots, slots, len(self._enc.wl_names)
+            )
+
+        # fill per base-group: write the base encoding + budget once,
+        # broadcast it across the group's rows, then apply per-candidate diffs
+        j = 0
+        while j < b:
+            c0 = batch[j]
+            base_ed = base_encs[id(c0.base)]
+            end = j + 1
+            while end < b and batch[end].base is c0.base:
+                end += 1
+            fill_row(rows, j, base_ed)
+            bud = c0.budget
+            if bud is not None:
+                fill_budget(rows, j, self._enc, bud.latency_s, bud.power_w,
+                            bud.area_mm2, c0.alpha)
+            else:  # neutral scoring row (buffers are reused across dispatches)
+                fill_budget(rows, j, self._enc, {}, 1e30, 1e30, 0.0)
+            if end - j > 1:
+                for arr in rows.values():
+                    arr[j + 1:end] = arr[j]
+            for k in range(j, end):
+                ed, c = eds[k], batch[k]
+                if ed is not base_ed:
+                    changed = [
+                        f for f in ENCODED_FIELDS
+                        if getattr(ed, f) is not getattr(base_ed, f)
+                    ]
+                    fill_row_fields(rows, k, ed, changed)
+                    if ed.noc_bw != base_ed.noc_bw or ed.noc_links != base_ed.noc_links:
+                        rows["noc_bw"][k] = ed.noc_bw
+                        rows["noc_links"][k] = ed.noc_links
+                        rows["noc_leak"][k] = ed.noc_leak
+                        rows["noc_area"][k] = ed.noc_area
+                if k > j and c.budget is not bud:
+                    if c.budget is not None:
+                        fill_budget(rows, k, self._enc, c.budget.latency_s,
+                                    c.budget.power_w, c.budget.area_mm2, c.alpha)
+                    else:
+                        fill_budget(rows, k, self._enc, {}, 1e30, 1e30, 0.0)
+            j = end
+        for arr in rows.values():  # pad the batch axis with copies of row 0
+            arr[b:b_pad] = arr[0]
         if key not in self._shapes:
             self._shapes.add(key)
             self._stats.n_compiles += 1
-        out = jax.device_get(self._fn(*arrays))  # one host transfer for all outputs
-        lat = out["latency_s"]
-        finish = out["finish_s"]
-        bneck = out["bneck_code"]
-        kind_s = out["bneck_kind_s"]
-        alp = out["alp_time_s"]
-        traffic = out["traffic_bytes"]
-        nph = out["n_phases"]
+        self._stats.encode_s += time.perf_counter() - tE
+
+        tD = time.perf_counter()
+        out = self._fn()(rows)  # non-blocking: no host transfer here
+        self._stats.dispatch_s += time.perf_counter() - tD
+        shared = _JaxBatch(out, self._stats)
         for j, i in enumerate(idx):
-            results[i] = self._decode(
-                batch[j], float(lat[j]), finish[j], bneck[j], kind_s[j],
-                float(alp[j]), float(traffic[j]), int(nph[j]),
-            )
+            results[i] = _JaxHandle(shared, j, batch[j], self)
             self._stats.n_batched += 1
 
     # ------------------------------------------------------------------

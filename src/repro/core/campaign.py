@@ -4,12 +4,12 @@ FARSI's experiments are never a single search — Fig. 9/10 average seeds,
 Fig. 9b sweeps the awareness ladder, §6 sweeps budgets and workloads. A
 ``Campaign`` declares that whole grid up front, then drives every
 exploration's :meth:`Explorer.run_steps` coroutine in lockstep: each round it
-gathers the pending neighbour batches of *all* live explorers on a workload
-and prices them through **one** ``backend.evaluate`` dispatch. With
-`JaxBatchedBackend` that turns N concurrent searches into single `vmap`
-dispatches of N×neighbours designs — the batching the vectorized simulator
-was built for — while `PythonBackend` campaigns still benefit from the shared
-accounting. One backend is shared per distinct task graph (the encoding is
+gathers the pending candidate batches of *all* live explorers on a workload
+and prices them through **one** ``backend.evaluate_candidates`` dispatch.
+With `JaxBatchedBackend` that turns N concurrent searches into single `vmap`
+dispatches of N×neighbours delta-encoded candidates — the batching the
+vectorized simulator was built for — while `PythonBackend` campaigns still
+benefit from the shared accounting. One backend is shared per distinct task graph (the encoding is
 workload-specific); per-run ``n_sims`` stays with each explorer.
 """
 from __future__ import annotations
@@ -19,7 +19,7 @@ import statistics
 import time
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Union
 
-from .backend import BackendStats, SimulatorBackend, make_backend
+from .backend import BackendStats, Candidate, SimulatorBackend, make_backend
 from .budgets import Budget
 from .database import HardwareDatabase
 from .design import Design
@@ -140,7 +140,7 @@ class Campaign:
         class _Live:
             spec: RunSpec
             gen: object
-            pending: List[Design]
+            pending: List[Candidate]
             sim_wall: float = 0.0
 
         live: Dict[str, _Live] = {}
@@ -161,16 +161,16 @@ class Campaign:
                 groups.setdefault(id(st.spec.tdg), []).append(st)
             for members in groups.values():
                 backend = self.backend_for(members[0].spec.tdg)
-                designs = [d for st in members for d in st.pending]
+                cands = [c for st in members for c in st.pending]
                 td = time.perf_counter()
-                results = backend.evaluate(designs)
+                results = backend.evaluate_candidates(cands)
                 dispatch_s = time.perf_counter() - td
                 offset = 0
                 for st in members:
                     k = len(st.pending)
                     sub = results[offset:offset + k]
                     offset += k
-                    st.sim_wall += dispatch_s * k / max(len(designs), 1)
+                    st.sim_wall += dispatch_s * k / max(len(cands), 1)
                     try:
                         st.pending = st.gen.send(sub)
                     except StopIteration as stop:

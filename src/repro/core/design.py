@@ -13,10 +13,29 @@ moves.
 from __future__ import annotations
 
 import copy
-from typing import Dict, List, Optional
+import dataclasses
+from typing import Dict, List, Optional, Tuple
 
 from .blocks import Block, BlockKind, make_gpp, make_mem, make_noc
 from .tdg import TaskGraph
+
+
+@dataclasses.dataclass
+class DesignCheckpoint:
+    """Cheap snapshot of a :class:`Design` for in-place move trial/rollback.
+
+    The DSE hot loop applies a candidate move to the *current* design, encodes
+    the result, and rolls back — no Python object graph is cloned per
+    neighbour (the paper's Fig.-8b hot-spot). Block objects are shared with
+    the design; only their mutable knob fields are snapshotted, so restore is
+    a handful of dict copies plus one attribute sweep."""
+
+    blocks: Dict[str, Block]
+    noc_chain: List[str]
+    attached_noc: Dict[str, str]
+    task_pe: Dict[str, str]
+    task_mem: Dict[str, str]
+    block_states: List[Tuple[Block, str, int, int, int, int, Optional[str]]]
 
 
 class Design:
@@ -62,6 +81,25 @@ class Design:
         else:
             self.attached_noc.pop(name)
 
+    def rename_block(self, old: str, new: str) -> None:
+        """Rename a block in place, preserving its insertion-order slot (slot
+        order is what the flat encoding keys on). Used to make move replays
+        name-deterministic: a replayed fork re-clones the block under a fresh
+        uid, and the caller renames it back to the recorded one."""
+        assert new not in self.blocks, (old, new)
+        blk = self.blocks[old]
+        blk.name = new
+        self.blocks = {(new if k == old else k): v for k, v in self.blocks.items()}
+        self.noc_chain = [new if n == old else n for n in self.noc_chain]
+        self.attached_noc = {
+            (new if k == old else k): (new if v == old else v)
+            for k, v in self.attached_noc.items()
+        }
+        for m in (self.task_pe, self.task_mem):
+            for t, b in m.items():
+                if b == old:
+                    m[t] = new
+
     def pes(self) -> List[str]:
         return [n for n, b in self.blocks.items() if b.kind == BlockKind.PE]
 
@@ -96,24 +134,63 @@ class Design:
     def tasks_via_noc(self, noc: str) -> List[str]:
         return [t for t in self.task_pe if noc in self.route(t)]
 
-    def clone(self) -> "Design":
+    def clone(self, rename: bool = True) -> "Design":
         """Design duplication — the paper's own profiled hot-spot (Fig. 8b:
         79.9% of generation time). We keep it cheap: blocks are shallow-copied
         via their own ``clone`` and mappings are dict copies (no generic
-        deepcopy). ``core/phase_sim_jax.py`` removes the need entirely by
-        evaluating flat-array encodings of neighbours under ``vmap``."""
+        deepcopy). ``rename=False`` keeps block names stable so results priced
+        against the original still resolve (explorer best-design snapshots).
+        The DSE inner loop avoids cloning entirely via
+        :meth:`checkpoint`/:meth:`restore` + flat-array neighbour encodings
+        (``core/phase_sim_jax.py``)."""
         d = Design.__new__(Design)
         d.blocks = {}
-        rename: Dict[str, str] = {}
+        names: Dict[str, str] = {}
         for name, b in self.blocks.items():
             nb = b.clone()
-            rename[name] = nb.name
+            if not rename:
+                nb.name = name
+            names[name] = nb.name
             d.blocks[nb.name] = nb
-        d.noc_chain = [rename[n] for n in self.noc_chain]
-        d.attached_noc = {rename[k]: rename[v] for k, v in self.attached_noc.items()}
-        d.task_pe = {t: rename[p] for t, p in self.task_pe.items()}
-        d.task_mem = {t: rename[m] for t, m in self.task_mem.items()}
+        d.noc_chain = [names[n] for n in self.noc_chain]
+        d.attached_noc = {names[k]: names[v] for k, v in self.attached_noc.items()}
+        d.task_pe = {t: names[p] for t, p in self.task_pe.items()}
+        d.task_mem = {t: names[m] for t, m in self.task_mem.items()}
         return d
+
+    # ---- in-place trial/rollback (clone-free neighbour generation) ------
+    def checkpoint(self) -> DesignCheckpoint:
+        """Snapshot for :meth:`restore`. O(blocks + tasks) dict/tuple copies,
+        no Block construction — the whole point versus :meth:`clone`."""
+        return DesignCheckpoint(
+            blocks=dict(self.blocks),
+            noc_chain=list(self.noc_chain),
+            attached_noc=dict(self.attached_noc),
+            task_pe=dict(self.task_pe),
+            task_mem=dict(self.task_mem),
+            block_states=[
+                (b, b.subtype, b.freq_mhz, b.width_bytes, b.n_links, b.unroll,
+                 b.hardened_for)
+                for b in self.blocks.values()
+            ],
+        )
+
+    def restore(self, ck: DesignCheckpoint) -> None:
+        """Undo every mutation since ``ck`` was taken: topology, mappings, and
+        knob edits on blocks that existed then. Blocks added afterwards are
+        dropped (any captured references stay valid but detached)."""
+        self.blocks = dict(ck.blocks)
+        self.noc_chain = list(ck.noc_chain)
+        self.attached_noc = dict(ck.attached_noc)
+        self.task_pe = dict(ck.task_pe)
+        self.task_mem = dict(ck.task_mem)
+        for b, subtype, freq, width, links, unroll, hardened in ck.block_states:
+            b.subtype = subtype
+            b.freq_mhz = freq
+            b.width_bytes = width
+            b.n_links = links
+            b.unroll = unroll
+            b.hardened_for = hardened
 
     def deep_clone_reference(self) -> "Design":
         """Naive ``copy.deepcopy`` clone, kept as the reference the paper

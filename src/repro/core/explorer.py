@@ -30,13 +30,13 @@ import random
 import time
 from typing import Dict, Generator, List, Optional, Tuple
 
-from .backend import SimulatorBackend, make_backend
+from .backend import Candidate, SimHandle, SimulatorBackend, make_backend
 from .blocks import BlockKind
 from .budgets import Budget, Distance, distance
 from .codesign import CodesignLedger, FocusRecord
 from .database import HardwareDatabase
 from .design import Design
-from .moves import MOVE_KINDS, MOVE_PRECEDENCE, apply_move
+from .moves import MOVE_KINDS, MOVE_PRECEDENCE, MoveDelta, MoveSpec, apply_move
 from .phase_sim import SimResult
 from .tdg import TaskGraph, workload_of
 
@@ -229,55 +229,60 @@ class Explorer:
     def _make_neighbors(
         self, design: Design, metric: str, task: str, block: str, moves: List[str],
         bottleneck: str, n: int,
-    ) -> List[Tuple[Design, str]]:
+    ) -> List[Candidate]:
         """Up to ``n`` *distinct* neighbours: one per move of the precedence-
-        ordered list (candidate generation in SA, §3.4)."""
+        ordered list (candidate generation in SA, §3.4).
+
+        Clone-free: each move is trialled in place on ``design`` (checkpoint
+        → apply, recording its encoding delta → rollback), and the neighbour
+        is shipped to the backend as a lightweight :class:`Candidate` — the
+        paper's Fig.-8b design-duplication hot-spot never runs. Only the
+        accepted candidate is ever materialized (``Candidate.accept``)."""
         direction = +1 if metric == "latency" else -1
-        out: List[Tuple[Design, str]] = []
+        out: List[Candidate] = []
+        ck = design.checkpoint()
         for move in moves:
             if len(out) >= n:
                 break
-            cand = design.clone()
-            # clone() renames blocks; recompute the target in the clone
-            block_c = self._reresolve(design, cand, block)
-            if block_c is None:
-                continue
+            delta = MoveDelta()
             ok = apply_move(
-                cand, self.tdg, move, block_c, task, direction, bottleneck,
-                metric, self.rng,
+                design, self.tdg, move, block, task, direction, bottleneck,
+                metric, self.rng, delta,
             )
+            design.restore(ck)
             if ok:
-                out.append((cand, move))
+                spec = MoveSpec(move, block, task, direction, bottleneck, metric)
+                out.append(
+                    Candidate(
+                        base=design, spec=spec, delta=delta,
+                        budget=self.budget, alpha=self.cfg.alpha_met,
+                    )
+                )
         return out
-
-    @staticmethod
-    def _reresolve(old: Design, new: Design, block_name: str) -> Optional[str]:
-        """Map a block of ``old`` to its counterpart in ``new`` (clones rename
-        blocks; order is preserved per kind)."""
-        kind = old.blocks[block_name].kind
-        olds = [n for n, b in old.blocks.items() if b.kind == kind]
-        news = [n for n, b in new.blocks.items() if b.kind == kind]
-        try:
-            return news[olds.index(block_name)]
-        except (ValueError, IndexError):
-            return news[0] if news else None
 
     # ---- main loop ---------------------------------------------------------
     def run_steps(
         self, initial: Optional[Design] = None
-    ) -> Generator[List[Design], List[SimResult], ExplorationResult]:
+    ) -> Generator[List[Candidate], List[SimHandle], ExplorationResult]:
         """Coroutine form of the search: yields each iteration's candidate
-        designs as one batch and is resumed (``gen.send``) with the matching
-        ``SimResult`` list. ``run()`` drives it against ``self.backend``;
-        `Campaign` drives many explorers' generators in lockstep so one
-        dispatch prices the pending neighbours of *all* live explorations.
-        The ``StopIteration`` value is the :class:`ExplorationResult`."""
+        batch (lightweight :class:`Candidate` records sharing the current
+        design — no clones) and is resumed (``gen.send``) with the matching
+        :class:`SimHandle` list. The winner is picked from the handles'
+        fitness column (device-computed on the JAX backend); only that one
+        handle is decoded into a full ``SimResult``, and only on acceptance
+        is its move materialized onto the current design. ``run()`` drives
+        it against ``self.backend``; `Campaign` drives many explorers'
+        generators in lockstep so one dispatch prices the pending neighbours
+        of *all* live explorations. The ``StopIteration`` value is the
+        :class:`ExplorationResult`."""
         t0 = time.perf_counter()
         cur = initial or Design.base(self.tdg)
         self.n_sims += 1
-        (cur_res,) = yield [cur]
+        (h0,) = yield [Candidate.of_design(cur, self.budget, self.cfg.alpha_met)]
+        cur_res = h0.result()
         cur_dist = distance(cur_res, self.budget)
-        best = (cur, cur_res, cur_dist)
+        # best keeps a stable-name snapshot: cur mutates in place hereafter
+        best = (cur.clone(rename=False), cur_res, cur_dist)
         history: List[dict] = []
         ledger = CodesignLedger()
 
@@ -300,14 +305,15 @@ class Explorer:
                 continue
             # one evaluation request per iteration: the whole neighbour set
             self.n_sims += len(neighbors)
-            batch_res = yield [d for d, _ in neighbors]
-            cands: List[Tuple[Design, str, SimResult, Distance]] = [
-                (cand, move, res, distance(res, self.budget))
-                for (cand, move), res in zip(neighbors, batch_res, strict=True)
-            ]
-
-            cands.sort(key=lambda c: c[3].fitness(self.cfg.alpha_met))
-            cand, move, res, dist_after = cands[0]
+            handles = yield neighbors
+            assert len(handles) == len(neighbors)
+            # rank from the batch's (B,) fitness column — no decode; stable
+            # argmin preserves the precedence order on ties like the old sort
+            fits = [h.fitness for h in handles]
+            j = min(range(len(fits)), key=fits.__getitem__)
+            cand, move = neighbors[j], neighbors[j].spec.move
+            res = handles[j].result()  # lazy: only the winner pays decode
+            dist_after = distance(res, self.budget)
             d_before = cur_dist.fitness(self.cfg.alpha_met)
             d_after = dist_after.fitness(self.cfg.alpha_met)
             temp = self.cfg.temperature0 * self.cfg.temp_decay**it
@@ -327,9 +333,10 @@ class Explorer:
                 )
             )
             if accept:
-                cur, cur_res, cur_dist = cand, res, dist_after
+                cand.accept(self.tdg)  # materialize the move onto cur
+                cur_res, cur_dist = res, dist_after
                 if cur_dist.city_block() < best[2].city_block():
-                    best = (cur, cur_res, cur_dist)
+                    best = (cur.clone(rename=False), cur_res, cur_dist)
             else:
                 self._taboo[(task, block)] = self.cfg.taboo_ttl
 
@@ -361,17 +368,17 @@ class Explorer:
 
     def run(self, initial: Optional[Design] = None) -> ExplorationResult:
         """Drive :meth:`run_steps` against ``self.backend`` — exactly one
-        ``backend.evaluate`` call per search iteration (plus one for the
-        initial design)."""
+        ``backend.evaluate_candidates`` call per search iteration (plus one
+        for the initial design)."""
         gen = self.run_steps(initial)
         sim_wall = 0.0
         try:
             pending = next(gen)
             while True:
                 t0 = time.perf_counter()
-                results = self.backend.evaluate(pending)
+                handles = self.backend.evaluate_candidates(pending)
                 sim_wall += time.perf_counter() - t0
-                pending = gen.send(results)
+                pending = gen.send(handles)
         except StopIteration as stop:
             result: ExplorationResult = stop.value
             result.sim_wall_s = sim_wall

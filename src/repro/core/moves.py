@@ -17,14 +17,55 @@ explorer fall through its precedence list.
 """
 from __future__ import annotations
 
+import copy
+import dataclasses
 import random
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from .blocks import Block, BlockKind, make_noc
 from .design import Design
 from .tdg import TaskGraph
 
 MOVE_KINDS = ("swap", "fork", "join", "migrate", "fork_swap")
+
+
+@dataclasses.dataclass(frozen=True)
+class MoveSpec:
+    """The 5-tuple a move application needs — a candidate neighbour is
+    (base design, spec), replayable deterministically via :func:`apply_move`
+    (moves never consume the RNG), so the full ``Design`` object is only
+    materialized for the candidate the explorer accepts."""
+
+    move: str
+    block: Optional[str]
+    task: Optional[str]
+    direction: int
+    bottleneck: str
+    objective: str
+
+
+@dataclasses.dataclass
+class MoveDelta:
+    """Encoding delta emitted by a move: exactly what changed, in terms the
+    flat-array design encoding understands (``phase_sim_jax.apply_delta``
+    turns one into an :class:`~repro.core.phase_sim_jax.EncodedDesign`
+    without re-encoding the whole design).
+
+    ``touched`` holds post-move knob *snapshots* (shallow copies) because the
+    design itself is rolled back after the trial; ``added`` holds the new
+    Block objects themselves — rollback detaches them from the design, after
+    which nothing mutates them. ``topology`` flags NoC-chain/attachment edits,
+    which push the candidate off the single-NoC vectorized path."""
+
+    task_pe: Dict[str, str] = dataclasses.field(default_factory=dict)
+    task_mem: Dict[str, str] = dataclasses.field(default_factory=dict)
+    touched: Dict[str, Block] = dataclasses.field(default_factory=dict)
+    added: List[Block] = dataclasses.field(default_factory=list)
+    removed: List[str] = dataclasses.field(default_factory=list)
+    topology: bool = False
+
+    def touch(self, block: Block) -> None:
+        self.touched[block.name] = copy.copy(block)
 # Development-cost precedence (paper Algorithm 1, step II):
 #   join > migrate > fork > swap > fork_swap
 MOVE_PRECEDENCE = {"join": 5, "migrate": 4, "fork": 3, "swap": 2, "fork_swap": 1}
@@ -57,6 +98,7 @@ def apply_swap(
     direction: int,
     task_name: Optional[str] = None,
     rng: Optional[random.Random] = None,
+    delta: Optional[MoveDelta] = None,
 ) -> bool:
     """Step one knob one rung (incremental customization). ``direction=+1``
     buys performance, ``-1`` returns it (power/area). GPP→Acc hardening
@@ -67,33 +109,38 @@ def apply_swap(
     block = design.blocks[block_name]
     task = tdg.tasks.get(task_name) if task_name else None
 
+    def done() -> bool:
+        if delta is not None:
+            delta.touch(block)
+        return True
+
     # subtype conversions first (the "real" customization)
     if block.kind == BlockKind.PE and direction > 0 and block.subtype == "gpp":
         hosted = design.tasks_on_pe(block_name)
         if task_name and hosted == [task_name]:
             block.subtype = "acc"
             block.hardened_for = task_name
-            return True
+            return done()
     if block.kind == BlockKind.PE and direction < 0 and block.subtype == "acc":
         # soften: cheaper to develop, slower (symmetric inverse of hardening)
         if block.unroll > 1:
-            return block.step_knob("unroll", -1)
+            return block.step_knob("unroll", -1) and done()
         block.subtype = "gpp"
         block.hardened_for = None
-        return True
+        return done()
     if block.kind == BlockKind.MEM:
         # energy pressure → SRAM; area pressure → DRAM (§6.1 memory study)
         if direction < 0 and block.subtype == "dram":
             block.subtype = "sram"
-            return True
+            return done()
 
     knobs = _knob_candidates(block, task, direction)
     for knob in knobs:
         if block.step_knob(knob, direction):
-            return True
+            return done()
     if block.kind == BlockKind.MEM and direction > 0 and block.subtype == "sram":
         block.subtype = "dram"  # ladder exhausted: trade energy for capacity
-        return True
+        return done()
     return False
 
 
@@ -106,6 +153,7 @@ def apply_fork(
     block_name: str,
     task_name: Optional[str] = None,
     rng: Optional[random.Random] = None,
+    delta: Optional[MoveDelta] = None,
 ) -> bool:
     """Duplicate ``block`` and migrate load over: the target task (if given)
     or every other task/buffer. For NoCs the new router is inserted next in
@@ -121,6 +169,9 @@ def apply_fork(
         design.add_block(new, after_noc=block_name)
         for b in attached[1::2]:
             design.attached_noc[b] = new.name
+        if delta is not None:
+            delta.added.append(new)  # never encoded (topology ⇒ fallback),
+            delta.topology = True  # but replays rename to this recorded name
         return True
 
     hosted = (
@@ -139,6 +190,11 @@ def apply_fork(
     target_map = design.task_pe if block.kind == BlockKind.PE else design.task_mem
     for t in movers:
         target_map[t] = clone.name
+    if delta is not None:
+        delta.added.append(clone)
+        moved = delta.task_pe if block.kind == BlockKind.PE else delta.task_mem
+        for t in movers:
+            moved[t] = clone.name
     return True
 
 
@@ -147,6 +203,7 @@ def apply_join(
     tdg: TaskGraph,
     block_name: str,
     rng: Optional[random.Random] = None,
+    delta: Optional[MoveDelta] = None,
 ) -> bool:
     """Merge ``block`` into a sibling and delete it (the inverse of fork;
     the highest-precedence move because it *removes* hardware)."""
@@ -163,6 +220,8 @@ def apply_join(
         for b in design.attached(block_name):
             design.attached_noc[b] = target
         design.remove_block(block_name)
+        if delta is not None:
+            delta.topology = True
         return True
 
     siblings = [
@@ -180,11 +239,17 @@ def apply_join(
         target = (gpps or pool)[0]
         for t in design.tasks_on_pe(block_name):
             design.task_pe[t] = target
+            if delta is not None:
+                delta.task_pe[t] = target
     else:
         target = pool[0]
         for t in design.buffers_on_mem(block_name):
             design.task_mem[t] = target
+            if delta is not None:
+                delta.task_mem[t] = target
     design.remove_block(block_name)
+    if delta is not None:
+        delta.removed.append(block_name)
     return True
 
 
@@ -198,6 +263,7 @@ def apply_migrate(
     bottleneck: str = "pe",
     rng: Optional[random.Random] = None,
     objective: str = "latency",
+    delta: Optional[MoveDelta] = None,
 ) -> bool:
     """Move one task (compute-bound → new PE) or its buffer (comm-bound →
     new MEM) — mapping change. Destination is chosen with architectural
@@ -223,6 +289,8 @@ def apply_migrate(
             def key(m):
                 return -len(design.buffers_on_mem(m))
         design.task_mem[task_name] = min(cands, key=key)
+        if delta is not None:
+            delta.task_mem[task_name] = design.task_mem[task_name]
         return True
 
     cur = design.task_pe[task_name]
@@ -243,6 +311,8 @@ def apply_migrate(
         return (-len(design.tasks_on_pe(p)), not hardened)
 
     design.task_pe[task_name] = min(cands, key=pe_key)
+    if delta is not None:
+        delta.task_pe[task_name] = design.task_pe[task_name]
     return True
 
 
@@ -256,17 +326,20 @@ def apply_fork_swap(
     task_name: Optional[str],
     direction: int,
     rng: Optional[random.Random] = None,
+    delta: Optional[MoveDelta] = None,
 ) -> bool:
     """Fork then swap the forked block up — the paper's shortcut for
     'dedicate new hardware to this task and customize it'."""
     rng = rng or random.Random(0)
     before = set(design.blocks)
-    if not apply_fork(design, tdg, block_name, task_name, rng):
+    if not apply_fork(design, tdg, block_name, task_name, rng, delta):
         return False
     new_block = next(iter(set(design.blocks) - before), None)
     if new_block is None:
         return False
-    apply_swap(design, tdg, new_block, direction, task_name, rng)
+    # the swap's touch snapshot is redundant for a just-added block (the
+    # delta's `added` ref is the same live object) but harmless
+    apply_swap(design, tdg, new_block, direction, task_name, rng, delta)
     return True
 
 
@@ -280,15 +353,32 @@ def apply_move(
     bottleneck: str,
     objective: str,
     rng: random.Random,
+    delta: Optional[MoveDelta] = None,
 ) -> bool:
     if move == "swap":
-        return apply_swap(design, tdg, block_name, direction, task_name, rng)
+        return apply_swap(design, tdg, block_name, direction, task_name, rng, delta)
     if move == "fork":
-        return apply_fork(design, tdg, block_name, task_name, rng)
+        return apply_fork(design, tdg, block_name, task_name, rng, delta)
     if move == "join":
-        return apply_join(design, tdg, block_name, rng)
+        return apply_join(design, tdg, block_name, rng, delta)
     if move == "migrate":
-        return apply_migrate(design, tdg, task_name, bottleneck, rng, objective)
+        return apply_migrate(design, tdg, task_name, bottleneck, rng, objective, delta)
     if move == "fork_swap":
-        return apply_fork_swap(design, tdg, block_name, task_name, direction, rng)
+        return apply_fork_swap(design, tdg, block_name, task_name, direction, rng, delta)
     raise KeyError(move)
+
+
+def apply_spec(
+    design: Design,
+    tdg: TaskGraph,
+    spec: MoveSpec,
+    rng: Optional[random.Random] = None,
+    delta: Optional[MoveDelta] = None,
+) -> bool:
+    """Replay a recorded move 5-tuple (moves are deterministic given the
+    design state, so a spec applied to the same base reproduces the same
+    neighbour bit-for-bit)."""
+    return apply_move(
+        design, tdg, spec.move, spec.block, spec.task, spec.direction,
+        spec.bottleneck, spec.objective, rng or random.Random(0), delta,
+    )

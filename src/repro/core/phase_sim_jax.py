@@ -3,12 +3,25 @@ one `vmap`'d XLA call.
 
 The paper profiles its DSE at 79.9% design-duplication overhead (Fig. 8) —
 a Python object-copy problem. We remove the object graph entirely: a design
-is a flat array encoding (task→PE map, task→MEM map, per-slot knobs), the
-TDG is dense matrices, and the phase loop is a `lax.fori_loop` (every phase
-retires ≥1 task, so ≤T phases). `vmap` over the design axis then evaluates
-all candidate neighbours of an explorer iteration — or entire populations —
-in one dispatch; on TPU this turns the DSE inner loop into batched vector
-ops.
+is a flat array encoding (task→PE map, task→MEM map, per-slot knobs and PPA
+coefficients), the TDG is dense matrices, and the phase loop is a
+`lax.fori_loop` (every phase retires ≥1 task, so ≤T phases). `vmap` over the
+design axis then evaluates all candidate neighbours of an explorer iteration
+— or entire populations — in one dispatch.
+
+Three things keep the *whole* explore→price→rank loop array-native:
+
+  * **Incremental encoding** — a move emits a
+    :class:`~repro.core.moves.MoveDelta`; :func:`apply_delta` turns the
+    cached encoding of the current design into the neighbour's encoding
+    (bit-identical to a from-scratch :meth:`EncodedDesign.of`) without
+    cloning or re-walking the Python object graph.
+  * **Device-side scoring** — the kernel folds the Eq.-7 budget distance
+    and fitness (latency per workload, energy incl. leakage, area rollup)
+    so one dispatch returns a ``(B,)`` fitness vector plus scalar PPA
+    columns; the explorer ranks candidates from that small array.
+  * **Lazy decode** — per-task dict reconstruction lives in
+    ``backend.JaxBatchedBackend`` and is only paid by the winning candidate.
 
 Scope: single-NoC designs (every PE/MEM on one bus — the regime our AR
 explorations live in; multi-NoC topologies fall back to the Python
@@ -18,16 +31,17 @@ for this regime.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .blocks import BlockKind
+from .blocks import Block, BlockKind
 from .database import HardwareDatabase
 from .design import Design
-from .tdg import TaskGraph
+from .moves import MoveDelta
+from .tdg import TaskGraph, workload_of
 
 BIG = 1e30
 
@@ -42,7 +56,10 @@ class EncodedWorkload:
     burst: jnp.ndarray  # (T,)
     llp: jnp.ndarray  # (T,)
     parent_mask: jnp.ndarray  # (T, T) bool: [i, j] = j is a parent of i
+    wl_id: jnp.ndarray  # (T,) int32 workload index per task
     names: List[str]
+    wl_names: List[str]  # index -> workload name (graph name if unnamespaced)
+    index: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @staticmethod
     def of(g: TaskGraph) -> "EncodedWorkload":
@@ -53,6 +70,13 @@ class EncodedWorkload:
         for n in names:
             for p in g.parents[n]:
                 pm[idx[n], idx[p]] = True
+        wl_names: List[str] = []
+        wl_id = np.zeros(t, np.int32)
+        for i, n in enumerate(names):
+            w = workload_of(n) if "." in n else g.name
+            if w not in wl_names:
+                wl_names.append(w)
+            wl_id[i] = wl_names.index(w)
         f = lambda attr: jnp.asarray([getattr(g.tasks[n], attr) for n in names], jnp.float32)
         return EncodedWorkload(
             work_ops=f("work_ops"),
@@ -61,38 +85,87 @@ class EncodedWorkload:
             burst=f("burst_bytes"),
             llp=f("llp"),
             parent_mask=jnp.asarray(pm),
+            wl_id=jnp.asarray(wl_id),
             names=names,
+            wl_names=wl_names,
+            index=idx,
         )
+
+
+# ---------------------------------------------------------------------------
+# per-slot PPA coefficients (host-side closed forms the kernel sums on device)
+# ---------------------------------------------------------------------------
+def _pe_coeffs(b: Block, db: HardwareDatabase):
+    """(peak ops/s, pJ/op, leak W, area mm²) of one PE block."""
+    e = db.energy
+    pj = e.acc_pj_per_op if b.subtype == "acc" else e.gpp_pj_per_op
+    return db.pe_peak_ops(b), pj, db.leakage_w(b), db.block_area_mm2(b)
+
+
+def _mem_coeffs(b: Block, db: HardwareDatabase):
+    """(peak B/s, pJ/B, leak W, fixed area mm², area mm²/MB) of one MEM.
+
+    SRAM area scales with resident capacity (CACTI-style), so it is split
+    into a per-MB term the kernel multiplies by the segment-summed write
+    bytes; DRAM is a fixed PHY block."""
+    e = db.energy
+    pj = e.sram_pj_per_byte if b.subtype == "sram" else e.dram_pj_per_byte
+    if b.subtype == "sram":
+        fixed, per_mb = 0.0, db.area.sram_mm2_per_mb
+    else:
+        fixed, per_mb = db.block_area_mm2(b), 0.0
+    return b.peak_bandwidth(db), pj, db.leakage_w(b), fixed, per_mb
+
+
+def _accel_of(b: Block, task_name: str, llp: float, db: HardwareDatabase) -> float:
+    if b.hardened_for == task_name and b.subtype == "acc":
+        return db.a_peak(task_name, llp, b.unroll)
+    return 1.0
 
 
 @dataclasses.dataclass
 class EncodedDesign:
-    """Flat design encoding: (task maps, per-slot knobs). All (T,) / (S,)."""
+    """Flat design encoding: task maps, per-slot knobs *and* per-slot PPA
+    coefficients, so pricing never revisits the Python object graph. Slot
+    order is the design's block insertion order (PEs and MEMs separately),
+    which is what makes :func:`apply_delta` reproducible bit-for-bit."""
 
     task_pe: np.ndarray  # (T,) int32 PE slot per task
     task_mem: np.ndarray  # (T,) int32 MEM slot per task
-    pe_peak: np.ndarray  # (S_pe,) ops/s at a=1 (freq × ops/cycle)
     pe_accel: np.ndarray  # (T,) effective acceleration of the task's PE for it
+    pe_peak: np.ndarray  # (S_pe,) ops/s at a=1 (freq × ops/cycle)
+    pe_pj: np.ndarray  # (S_pe,) dynamic pJ/op
+    pe_leak: np.ndarray  # (S_pe,) leakage W
+    pe_area: np.ndarray  # (S_pe,) mm²
     mem_bw: np.ndarray  # (S_mem,) bytes/s
-    noc_bw: np.ndarray  # () bytes/s (single NoC, per link)
+    mem_pj: np.ndarray  # (S_mem,) dynamic pJ/byte
+    mem_leak: np.ndarray  # (S_mem,) leakage W
+    mem_area_fixed: np.ndarray  # (S_mem,) mm² (DRAM PHY; 0 for SRAM)
+    mem_area_per_mb: np.ndarray  # (S_mem,) mm²/MB (SRAM; 0 for DRAM)
+    noc_bw: np.float32  # bytes/s (single NoC, per link)
     noc_links: int
+    noc_leak: np.float32
+    noc_area: np.float32
+    noc_pj: np.float32  # dynamic pJ/byte·hop (db constant, rides the row so
+    # the kernel never hardcodes an energy-model default)
+    pe_slot: Dict[str, int]  # block name -> slot
+    mem_slot: Dict[str, int]
 
     @staticmethod
     def of(design: Design, g: TaskGraph, db: HardwareDatabase, enc: EncodedWorkload) -> "EncodedDesign":
         assert len(design.noc_chain) == 1, "vectorized sim: single-NoC regime"
-        # single pass over blocks: slot index maps + peak rates (this runs per
-        # candidate design in the DSE inner loop — keep it allocation-light)
+        # single pass over blocks: slot index maps + per-slot rates/coefficients
         pe_i: Dict[str, int] = {}
         mem_i: Dict[str, int] = {}
-        pe_peak: List[float] = []
-        mem_bw: List[float] = []
+        pe_cols: List[tuple] = []
+        mem_cols: List[tuple] = []
         for n, b in design.blocks.items():
             if b.kind == BlockKind.PE:
-                pe_i[n] = len(pe_peak)
-                pe_peak.append(db.pe_peak_ops(b))
+                pe_i[n] = len(pe_cols)
+                pe_cols.append(_pe_coeffs(b, db))
             elif b.kind == BlockKind.MEM:
-                mem_i[n] = len(mem_bw)
-                mem_bw.append(b.peak_bandwidth(db))
+                mem_i[n] = len(mem_cols)
+                mem_cols.append(_mem_coeffs(b, db))
         t = len(enc.names)
         d_pe, d_mem, blocks, tasks = design.task_pe, design.task_mem, design.blocks, g.tasks
         task_pe = np.fromiter((pe_i[d_pe[n]] for n in enc.names), np.int32, t)
@@ -103,124 +176,373 @@ class EncodedDesign:
             if b.hardened_for == n and b.subtype == "acc":
                 accel[k] = db.a_peak(n, tasks[n].llp, b.unroll)
         noc = blocks[design.noc_chain[0]]
+        f32col = lambda cols, j: np.asarray([c[j] for c in cols], np.float32)
         return EncodedDesign(
             task_pe=task_pe,
             task_mem=task_mem,
-            pe_peak=np.asarray(pe_peak, np.float32),
             pe_accel=accel,
-            mem_bw=np.asarray(mem_bw, np.float32),
+            pe_peak=f32col(pe_cols, 0),
+            pe_pj=f32col(pe_cols, 1),
+            pe_leak=f32col(pe_cols, 2),
+            pe_area=f32col(pe_cols, 3),
+            mem_bw=f32col(mem_cols, 0),
+            mem_pj=f32col(mem_cols, 1),
+            mem_leak=f32col(mem_cols, 2),
+            mem_area_fixed=f32col(mem_cols, 3),
+            mem_area_per_mb=f32col(mem_cols, 4),
             noc_bw=np.float32(noc.peak_bandwidth(db)),
             noc_links=int(noc.n_links),
+            noc_leak=np.float32(db.leakage_w(noc)),
+            noc_area=np.float32(db.block_area_mm2(noc)),
+            noc_pj=np.float32(db.energy.noc_pj_per_byte_hop),
+            pe_slot=pe_i,
+            mem_slot=mem_i,
         )
 
 
-def _segment_share(values: jnp.ndarray, seg: jnp.ndarray, n_seg: int, mask: jnp.ndarray):
-    """Per-element share = value / segment_total(value) over masked elements."""
-    v = jnp.where(mask, values, 0.0)
-    totals = jax.ops.segment_sum(v, seg, num_segments=n_seg)
-    return values / jnp.maximum(totals[seg], 1e-30)
+def _append1(arr: np.ndarray, v) -> np.ndarray:
+    """np.append without its ravel/concatenate overhead (hot path)."""
+    out = np.empty(arr.shape[0] + 1, arr.dtype)
+    out[:-1] = arr
+    out[-1] = v
+    return out
+
+
+def _delete1(arr: np.ndarray, s: int) -> np.ndarray:
+    """np.delete of one index without its mask machinery (hot path)."""
+    out = np.empty(arr.shape[0] - 1, arr.dtype)
+    out[:s] = arr[:s]
+    out[s:] = arr[s + 1:]
+    return out
+
+
+def apply_delta(
+    base: "EncodedDesign",
+    delta: MoveDelta,
+    design: Design,
+    g: TaskGraph,
+    db: HardwareDatabase,
+    enc: EncodedWorkload,
+) -> "EncodedDesign":
+    """Incremental re-encode: the neighbour's :class:`EncodedDesign` from the
+    *current* design's cached encoding plus the move's recorded delta —
+    bit-identical to ``EncodedDesign.of`` on the mutated design (asserted in
+    tests/test_encoding_delta.py), at a handful of O(S)/O(T) numpy edits
+    instead of a full Python-object walk.
+
+    ``design`` is the *base* (pre-move) design: only blocks the delta did not
+    touch are read from it, so it may be called before or after rollback.
+    """
+    assert not delta.topology, "topology deltas leave the single-NoC regime"
+    # copy-on-write: fields the delta does not touch stay *shared* with the
+    # base encoding (`ed.f is base.f`), which both keeps a typical swap/
+    # migrate delta at a couple of tiny array copies and lets the backend
+    # detect exactly which buffer fields need rewriting per candidate
+    ed = dataclasses.replace(base)
+
+    def own(*fields: str) -> None:
+        for f in fields:
+            v = getattr(ed, f)
+            if v is getattr(base, f):
+                setattr(ed, f, v.copy() if isinstance(v, np.ndarray) else dict(v))
+
+    touched_pe_slots: List[int] = []
+
+    # 1) removals (join): compact slots exactly like a from-scratch encode
+    for name in delta.removed:
+        if name in ed.pe_slot:
+            s = ed.pe_slot[name]
+            for f in ("pe_peak", "pe_pj", "pe_leak", "pe_area"):
+                setattr(ed, f, _delete1(getattr(ed, f), s))
+            ed.pe_slot = {n: i - (i > s) for n, i in ed.pe_slot.items() if n != name}
+            ed.task_pe = ed.task_pe - (ed.task_pe > s)
+        elif name in ed.mem_slot:
+            s = ed.mem_slot[name]
+            for f in ("mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb"):
+                setattr(ed, f, _delete1(getattr(ed, f), s))
+            ed.mem_slot = {n: i - (i > s) for n, i in ed.mem_slot.items() if n != name}
+            ed.task_mem = ed.task_mem - (ed.task_mem > s)
+
+    # 2) additions (fork): append at the end, matching dict insertion order
+    for b in delta.added:
+        if b.kind == BlockKind.PE:
+            own("pe_slot")
+            ed.pe_slot[b.name] = ed.pe_peak.shape[0]
+            cols = _pe_coeffs(b, db)
+            for f, v in zip(("pe_peak", "pe_pj", "pe_leak", "pe_area"), cols):
+                setattr(ed, f, _append1(getattr(ed, f), np.float32(v)))
+            touched_pe_slots.append(ed.pe_slot[b.name])
+        elif b.kind == BlockKind.MEM:
+            own("mem_slot")
+            ed.mem_slot[b.name] = ed.mem_bw.shape[0]
+            cols = _mem_coeffs(b, db)
+            for f, v in zip(
+                ("mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb"), cols
+            ):
+                setattr(ed, f, _append1(getattr(ed, f), np.float32(v)))
+
+    # 3) knob edits (swap): refresh the touched slot's rate + coefficients
+    for name, snap in delta.touched.items():
+        if snap.kind == BlockKind.NOC:
+            ed.noc_bw = np.float32(snap.peak_bandwidth(db))
+            ed.noc_links = int(snap.n_links)
+            ed.noc_leak = np.float32(db.leakage_w(snap))
+            ed.noc_area = np.float32(db.block_area_mm2(snap))
+        elif name in ed.pe_slot:
+            s = ed.pe_slot[name]
+            own("pe_peak", "pe_pj", "pe_leak", "pe_area")
+            for f, v in zip(("pe_peak", "pe_pj", "pe_leak", "pe_area"), _pe_coeffs(snap, db)):
+                getattr(ed, f)[s] = np.float32(v)
+            touched_pe_slots.append(s)
+        elif name in ed.mem_slot:
+            s = ed.mem_slot[name]
+            own("mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb")
+            for f, v in zip(
+                ("mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb"),
+                _mem_coeffs(snap, db),
+            ):
+                getattr(ed, f)[s] = np.float32(v)
+
+    # 4) mapping edits (migrate / fork / join reassignments)
+    moved: List[int] = []
+    if delta.task_pe:
+        own("task_pe")
+        for t, pe in delta.task_pe.items():
+            k = enc.index[t]
+            ed.task_pe[k] = ed.pe_slot[pe]
+            moved.append(k)
+    if delta.task_mem:
+        own("task_mem")
+        for t, mem in delta.task_mem.items():
+            ed.task_mem[enc.index[t]] = ed.mem_slot[mem]
+
+    # 5) acceleration refresh for every task whose PE (or its knobs) changed
+    if touched_pe_slots or moved:
+        slot_name = {s: n for n, s in ed.pe_slot.items()}
+        affected = set(moved)
+        for s in set(touched_pe_slots):
+            affected.update(np.nonzero(ed.task_pe == s)[0].tolist())
+        block_of: Dict[str, Block] = {b.name: b for b in delta.added}
+        block_of.update(delta.touched)
+        own("pe_accel")
+        for k in affected:
+            name = slot_name[int(ed.task_pe[k])]
+            b = block_of.get(name) or design.blocks[name]
+            tname = enc.names[k]
+            ed.pe_accel[k] = _accel_of(b, tname, g.tasks[tname].llp, db)
+    return ed
+
+
+# per-design row keys, in the order buffers are allocated/filled
+ROW_KEYS = (
+    "task_pe", "task_mem", "pe_accel",
+    "pe_peak", "pe_pj", "pe_leak", "pe_area",
+    "mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb",
+    "noc_bw", "noc_links", "noc_leak", "noc_area", "noc_pj",
+    "wl_budget", "power_budget", "area_budget", "alpha",
+)
+
+
+def alloc_rows(b: int, t: int, n_pe: int, n_mem: int, n_wl: int) -> Dict[str, np.ndarray]:
+    """Preallocate one batch of padded per-design rows (host buffers the
+    backend reuses across dispatches of the same shape bucket). Pad values:
+    rates 1.0 (div-by-zero-free, never hosting tasks), coefficients 0.0
+    (they are summed), budgets BIG / alpha 0 (neutral scoring)."""
+    rows = {
+        "task_pe": np.zeros((b, t), np.int32),
+        "task_mem": np.zeros((b, t), np.int32),
+        "pe_accel": np.ones((b, t), np.float32),
+        "pe_peak": np.ones((b, n_pe), np.float32),
+        "pe_pj": np.zeros((b, n_pe), np.float32),
+        "pe_leak": np.zeros((b, n_pe), np.float32),
+        "pe_area": np.zeros((b, n_pe), np.float32),
+        "mem_bw": np.ones((b, n_mem), np.float32),
+        "mem_pj": np.zeros((b, n_mem), np.float32),
+        "mem_leak": np.zeros((b, n_mem), np.float32),
+        "mem_area_fixed": np.zeros((b, n_mem), np.float32),
+        "mem_area_per_mb": np.zeros((b, n_mem), np.float32),
+        "noc_bw": np.ones((b,), np.float32),
+        "noc_links": np.ones((b,), np.int32),
+        "noc_leak": np.zeros((b,), np.float32),
+        "noc_area": np.zeros((b,), np.float32),
+        "noc_pj": np.zeros((b,), np.float32),
+        "wl_budget": np.full((b, n_wl), BIG, np.float32),
+        "power_budget": np.full((b,), BIG, np.float32),
+        "area_budget": np.full((b,), BIG, np.float32),
+        "alpha": np.zeros((b,), np.float32),
+    }
+    return rows
+
+
+_TASK_FIELDS = ("task_pe", "task_mem", "pe_accel")
+_PE_FIELDS = ("pe_peak", "pe_pj", "pe_leak", "pe_area")
+_MEM_FIELDS = ("mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb")
+ENCODED_FIELDS = _TASK_FIELDS + _PE_FIELDS + _MEM_FIELDS
+
+
+def fill_row_fields(
+    rows: Dict[str, np.ndarray], j: int, ed: EncodedDesign, fields
+) -> None:
+    """Write a subset of one design's encoding into row ``j`` — the backend
+    pairs this with the copy-on-write :func:`apply_delta` to rewrite only the
+    buffer fields a candidate's move actually changed (``ed.f is not
+    base.f``); everything else keeps the broadcast base-row content."""
+    for f in fields:
+        if f in _TASK_FIELDS:
+            rows[f][j] = getattr(ed, f)
+        elif f in _PE_FIELDS:
+            s = ed.pe_peak.shape[0]
+            rows[f][j, :s] = getattr(ed, f)
+            rows[f][j, s:] = 1.0 if f == "pe_peak" else 0.0
+        else:
+            m = ed.mem_bw.shape[0]
+            rows[f][j, :m] = getattr(ed, f)
+            rows[f][j, m:] = 1.0 if f == "mem_bw" else 0.0
+
+
+def fill_row(rows: Dict[str, np.ndarray], j: int, ed: EncodedDesign) -> None:
+    """Write one design's full encoding into row ``j`` of the padded buffers."""
+    fill_row_fields(rows, j, ed, ENCODED_FIELDS)
+    rows["noc_bw"][j] = ed.noc_bw
+    rows["noc_links"][j] = ed.noc_links
+    rows["noc_leak"][j] = ed.noc_leak
+    rows["noc_area"][j] = ed.noc_area
+    rows["noc_pj"][j] = ed.noc_pj
+
+
+def fill_budget(
+    rows: Dict[str, np.ndarray], j: int, enc: EncodedWorkload,
+    latency_s: Dict[str, float], power_w: float, area_mm2: float, alpha: float,
+) -> None:
+    """Write one design's Eq.-7 budget row (device-side fitness inputs).
+    Workloads the budget does not name score BIG (distance ≈ −1, never the
+    binding term)."""
+    rows["wl_budget"][j] = [latency_s.get(w, BIG) for w in enc.wl_names]
+    rows["power_budget"][j] = power_w
+    rows["area_budget"][j] = area_mm2
+    rows["alpha"][j] = alpha
 
 
 def simulate_batch(
     enc: EncodedWorkload,
-    task_pe: jnp.ndarray,  # (B, T) int32
-    task_mem: jnp.ndarray,  # (B, T)
-    pe_peak: jnp.ndarray,  # (B, S_pe)
-    pe_accel: jnp.ndarray,  # (B, T)
-    mem_bw: jnp.ndarray,  # (B, S_mem)
-    noc_bw: jnp.ndarray,  # (B,)
-    noc_links: jnp.ndarray,  # (B,) int32
+    rows: Dict[str, jnp.ndarray],
 ) -> Dict[str, jnp.ndarray]:
-    """vmap'd phase simulation.
+    """vmap'd phase simulation + device-side scoring.
 
-    Returns latency (B,), task finish times (B, T), and the per-task /
-    per-phase attribution a :class:`~repro.core.backend.JaxBatchedBackend`
-    needs to reconstruct a full ``SimResult``: the binding-resource code of
-    each task at retirement (0=pe, 1=mem, 2=noc — mirroring
-    ``gables.bottleneck_of``), time-weighted bottleneck seconds per class,
-    accelerator-level parallelism time, bytes moved, and the phase count.
+    ``rows`` is a dict of per-design arrays (batch axis leading; see
+    ``ROW_KEYS``/:func:`alloc_rows`). Returns latency (B,), task finish
+    times (B, T), the per-task / per-phase attribution a
+    :class:`~repro.core.backend.JaxBatchedBackend` needs to lazily
+    reconstruct a full ``SimResult`` (binding-resource code per task,
+    time-weighted bottleneck seconds, ALP time, traffic, phase count) —
+    plus the scalar PPA columns (energy/power/area, per-workload latency)
+    and the Eq.-7 ``fitness`` vector the explorer ranks with, so accepting
+    or rejecting a whole neighbour batch transfers O(B) floats, not B
+    decoded dicts.
+
+    Contention sums are (T, T) co-residency matvecs, not ``segment_sum``
+    scatters: ``task_pe``/``task_mem`` are phase-invariant so the same-slot
+    masks hoist out of the loop, and vmapped scatter/gather pairs are the
+    dominant cost of the phase loop on CPU XLA (~4x kernel time). NoC
+    round-robin striping (Eq. 3) is expressed the same way through rank
+    residues — two running tasks share a link iff their running-order ranks
+    are congruent mod ``n_links`` — which is exact for *any* link count
+    (the old segment-bucketed formulation silently dropped the bandwidth
+    attribution of links ≥ its hardcoded segment count).
     """
 
     t = enc.work_ops.shape[0]
-    n_pe = pe_peak.shape[-1]
-    n_mem = mem_bw.shape[-1]
+    n_wl = len(enc.wl_names)
+    idx3 = jnp.arange(3)
 
-    def one(task_pe, task_mem, pe_peak, pe_accel, mem_bw, noc_bw, noc_links):
+    def one(row: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        task_pe, task_mem = row["task_pe"], row["task_mem"]
+        n_mem = row["mem_bw"].shape[-1]
+        noc_bw, noc_links = row["noc_bw"], row["noc_links"]
+        # loop-invariant hoists: effective peak rates per task and the
+        # same-slot co-residency masks behind Eq. 1/2 (PE share) and Eq. 4
+        # (burst-proportional memory share)
+        peak_eff = row["pe_peak"][task_pe] * row["pe_accel"]
+        mem_peak = row["mem_bw"][task_mem]
+        same_pe = (task_pe[:, None] == task_pe[None, :]).astype(jnp.float32)
+        same_mem = (task_mem[:, None] == task_mem[None, :]).astype(jnp.float32)
+        links = jnp.maximum(noc_links, 1)
+
         def phase(_, state):
-            remain, completed, now, finish, bneck, kind_s, alp_t, traffic, nph = state
-            done_parents = jnp.all(~enc.parent_mask | completed[None, :], axis=1)
-            running = (~completed) & done_parents
-            any_run = jnp.any(running)
+            rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, alp_t, traffic, nph = state
+            running = (~completed) & jnp.all(~enc.parent_mask | completed[None, :], axis=1)
+            runf = jnp.where(running, 1.0, 0.0)
+            burst_run = enc.burst * runf
 
             # Eq. 1/2: preemptive equal share per PE slot
-            load = jax.ops.segment_sum(
-                jnp.where(running, 1.0, 0.0), task_pe, num_segments=n_pe
+            load_t = same_pe @ runf  # running tasks sharing my PE (incl. me)
+            compute = peak_eff / jnp.maximum(load_t, 1.0)
+
+            # Eq. 4: burst-proportional memory share (read/write channels
+            # split, but they see identical shares — one bandwidth suffices)
+            mem_t = same_mem @ burst_run
+            m_bw = mem_peak * enc.burst / jnp.maximum(mem_t, 1e-30)
+
+            # Eq. 3: round-robin link striping, burst arbitration within
+            # link; same link ⟺ running ranks congruent mod n_links
+            order = jnp.cumsum(runf)
+            same_link = (runf[:, None] * runf[None, :]) * jnp.where(
+                (order[:, None] - order[None, :]) % links == 0, 1.0, 0.0
             )
-            compute = pe_peak[task_pe] * pe_accel / jnp.maximum(load[task_pe], 1.0)
+            link_t = same_link @ enc.burst
+            n_bw = noc_bw * enc.burst / jnp.maximum(link_t, 1e-30)
 
-            # Eq. 4: burst-proportional memory share (read/write channels split)
-            mem_share = _segment_share(enc.burst, task_mem, n_mem, running)
-            m_bw = mem_bw[task_mem] * mem_share
-
-            # Eq. 3: round-robin link striping, burst arbitration within link
-            order = jnp.cumsum(jnp.where(running, 1, 0)) - 1  # rank among running
-            link = jnp.where(running, order % jnp.maximum(noc_links, 1), 0)
-            l_share = _segment_share(enc.burst, link, 8, running)
-            n_bw = noc_bw * l_share
-
-            rd_bw = jnp.minimum(m_bw, n_bw)
-            wr_bw = jnp.minimum(m_bw, n_bw)
-            comp_t = remain[:, 0] / compute
-            rd_t = remain[:, 1] / rd_bw
-            wr_t = remain[:, 2] / wr_bw
-            c_t = jnp.maximum(comp_t, jnp.maximum(rd_t, wr_t))
-            c_t = jnp.where(running, c_t, BIG)
-            phi = jnp.min(c_t)  # Eq. 6
-            phi = jnp.where(any_run, phi, 0.0)
+            bw = jnp.minimum(m_bw, n_bw)
+            comp_t = rem_ops / compute
+            comm_t = jnp.maximum(rem_rd, rem_wr) / bw
+            c_t = jnp.where(running, jnp.maximum(comp_t, comm_t), BIG)
+            phi_raw = jnp.min(c_t)  # Eq. 6
+            any_run = phi_raw < BIG * 0.5
+            phi = jnp.where(any_run, phi_raw, 0.0)
+            phi_run = jnp.where(running, phi, 0.0)
 
             # binding resource per running task (gables.bottleneck_of — note:
             # attribution uses the task's *total* work over current rates, not
             # the remaining work; compute wins ties, then mem vs noc by the
             # tighter pipe)
             tot_comp_t = enc.work_ops / compute
-            tot_rd_t = enc.read_bytes / rd_bw
-            tot_wr_t = enc.write_bytes / wr_bw
-            code = jnp.where(
-                tot_comp_t >= jnp.maximum(tot_rd_t, tot_wr_t),
-                0,
-                jnp.where(m_bw <= n_bw, 1, 2),
-            )
-            kind_s = kind_s + jax.ops.segment_sum(
-                jnp.where(running, phi, 0.0), code, num_segments=3
+            tot_comm_t = jnp.maximum(enc.read_bytes, enc.write_bytes) / bw
+            code = jnp.where(tot_comp_t >= tot_comm_t, 0, jnp.where(m_bw <= n_bw, 1, 2))
+            kind_s = kind_s + jnp.sum(
+                jnp.where(code[:, None] == idx3[None, :], phi_run[:, None], 0.0), axis=0
             )
 
-            rates = jnp.stack([compute, rd_bw, wr_bw], axis=1)
-            dec = jnp.where(running[:, None], rates * phi, 0.0)
-            drained = jnp.maximum(remain - dec, 0.0)  # post-drain, pre-retire
+            # mask rates BEFORE the phi multiply: slots hosting no running
+            # task price as inf bandwidth, and inf · 0 would poison the
+            # remain columns with NaN
+            d_ops = jnp.where(running, compute, 0.0) * phi
+            d_bw = jnp.where(running, bw, 0.0) * phi
+            dr_ops = jnp.maximum(rem_ops - d_ops, 0.0)  # post-drain, pre-retire
+            dr_rd = jnp.maximum(rem_rd - d_bw, 0.0)
+            dr_wr = jnp.maximum(rem_wr - d_bw, 0.0)
             newly_done = running & (c_t <= phi * (1 + 1e-9))
-            new_remain = jnp.where(newly_done[:, None], 0.0, drained)
+            keep = ~newly_done
             now = now + phi
             finish = jnp.where(newly_done, now, finish)
             bneck = jnp.where(newly_done, code, bneck)
-            alp_t = alp_t + phi * jnp.sum(load > 0)
+            # busy-PE count: each PE with k running tasks contributes k · 1/k
+            alp_t = alp_t + phi * jnp.sum(runf / jnp.maximum(load_t, 1.0))
             # phase_sim accumulates min(post-drain bytes, bw·phi) per running
             # task — mirror it exactly so the backends agree on this field too
             traffic = traffic + jnp.sum(
-                jnp.where(
-                    running,
-                    jnp.minimum(drained[:, 1] + drained[:, 2], dec[:, 1] + dec[:, 2]),
-                    0.0,
-                )
+                jnp.where(running, jnp.minimum(dr_rd + dr_wr, d_bw + d_bw), 0.0)
             )
             nph = nph + jnp.where(any_run, 1, 0)
             return (
-                new_remain, completed | newly_done, now, finish,
+                jnp.where(keep, dr_ops, 0.0), jnp.where(keep, dr_rd, 0.0),
+                jnp.where(keep, dr_wr, 0.0), completed | newly_done, now, finish,
                 bneck, kind_s, alp_t, traffic, nph,
             )
 
-        remain0 = jnp.stack([enc.work_ops, enc.read_bytes, enc.write_bytes], axis=1)
         state = (
-            remain0,
+            enc.work_ops,
+            enc.read_bytes,
+            enc.write_bytes,
             jnp.zeros((t,), bool),
             jnp.float32(0.0),
             jnp.zeros((t,), jnp.float32),
@@ -230,9 +552,39 @@ def simulate_batch(
             jnp.float32(0.0),
             jnp.int32(0),
         )
-        (remain, completed, now, finish, bneck, kind_s, alp_t, traffic, nph) = (
+        (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, alp_t, traffic, nph) = (
             jax.lax.fori_loop(0, t, phase, state)
         )
+
+        # ---- device-side PPA rollup + Eq.-7 fitness ----------------------
+        # dynamic energy is rate-independent (every task drains its totals;
+        # hops == 1 in the single-NoC regime), so it is a coefficient dot
+        wl_lat = jax.ops.segment_max(finish, enc.wl_id, num_segments=n_wl)
+        dyn_pj = jnp.sum(
+            row["pe_pj"][task_pe] * enc.work_ops
+            + (row["mem_pj"][task_mem] + row["noc_pj"]) * (enc.read_bytes + enc.write_bytes)
+        )
+        leak_w = jnp.sum(row["pe_leak"]) + jnp.sum(row["mem_leak"]) + row["noc_leak"]
+        energy = dyn_pj * 1e-12 + leak_w * now
+        power = jnp.where(now > 0, energy / jnp.maximum(now, 1e-30), 0.0)
+        onehot_mem = (task_mem[:, None] == jnp.arange(n_mem)[None, :]).astype(jnp.float32)
+        cap = enc.write_bytes @ onehot_mem
+        area = (
+            jnp.sum(row["pe_area"])
+            + jnp.sum(
+                row["mem_area_fixed"]
+                + row["mem_area_per_mb"] * jnp.maximum(cap, 1.0) / 1e6
+            )
+            + row["noc_area"]
+        )
+        dists = jnp.stack(
+            [
+                jnp.max((wl_lat - row["wl_budget"]) / row["wl_budget"]),
+                (power - row["power_budget"]) / row["power_budget"],
+                (area - row["area_budget"]) / row["area_budget"],
+            ]
+        )
+        fitness = jnp.sum(jnp.where(dists > 0, dists, row["alpha"] * dists))
         return {
             "latency_s": now,
             "finish_s": finish,
@@ -242,9 +594,14 @@ def simulate_batch(
             "alp_time_s": alp_t,
             "traffic_bytes": traffic,
             "n_phases": nph,
+            "wl_latency_s": wl_lat,
+            "energy_j": energy,
+            "power_w": power,
+            "area_mm2": area,
+            "fitness": fitness,
         }
 
-    return jax.vmap(one)(task_pe, task_mem, pe_peak, pe_accel, mem_bw, noc_bw, noc_links)
+    return jax.vmap(one)(rows)
 
 
 def encode_batch(
@@ -254,8 +611,10 @@ def encode_batch(
     enc: EncodedWorkload,
     n_pe: int = 0,
     n_mem: int = 0,
-):
-    """Pad a list of single-NoC designs to a common slot count and stack.
+) -> Dict[str, np.ndarray]:
+    """Pad a list of single-NoC designs to a common slot count and stack into
+    a :func:`simulate_batch` rows dict (neutral budget rows — callers that
+    want device-side fitness fill them via :func:`fill_budget`).
 
     ``n_pe``/``n_mem`` optionally force the padded slot counts — backends pad
     to shape buckets so the jit cache is keyed on a handful of shapes instead
@@ -266,22 +625,7 @@ def encode_batch(
     b, t = len(encs), len(enc.names)
     n_pe = max(n_pe, max(e.pe_peak.shape[0] for e in encs))
     n_mem = max(n_mem, max(e.mem_bw.shape[0] for e in encs))
-
-    # preallocate padded buffers and fill (pad value 1.0 keeps unused slots
-    # free of div-by-zero; they host no tasks so they never contribute)
-    task_pe = np.empty((b, t), np.int32)
-    task_mem = np.empty((b, t), np.int32)
-    pe_accel = np.empty((b, t), np.float32)
-    pe_peak = np.ones((b, n_pe), np.float32)
-    mem_bw = np.ones((b, n_mem), np.float32)
-    noc_bw = np.empty((b,), np.float32)
-    noc_links = np.empty((b,), np.int32)
+    rows = alloc_rows(b, t, n_pe, n_mem, len(enc.wl_names))
     for i, e in enumerate(encs):
-        task_pe[i] = e.task_pe
-        task_mem[i] = e.task_mem
-        pe_accel[i] = e.pe_accel
-        pe_peak[i, : e.pe_peak.shape[0]] = e.pe_peak
-        mem_bw[i, : e.mem_bw.shape[0]] = e.mem_bw
-        noc_bw[i] = e.noc_bw
-        noc_links[i] = e.noc_links
-    return task_pe, task_mem, pe_peak, pe_accel, mem_bw, noc_bw, noc_links
+        fill_row(rows, i, e)
+    return rows

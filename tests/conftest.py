@@ -1,7 +1,13 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real single CPU device; only the dry-run subprocess forces 512."""
+import os
+import sys
+
 import jax
 import pytest
+
+# repo root on sys.path: tests reuse benchmark helpers (benchmarks.*)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 @pytest.fixture(scope="session")

@@ -105,6 +105,10 @@ class _CountingBackend:
         self.batches.append(len(designs))
         return self.inner.evaluate(designs)
 
+    def evaluate_candidates(self, cands):
+        self.batches.append(len(cands))
+        return self.inner.evaluate_candidates(cands)
+
 
 def test_explorer_one_dispatch_per_iteration():
     db = HardwareDatabase()

@@ -1,0 +1,23 @@
+"""Perf-regression guard: `python -m benchmarks.run --smoke` must pass in
+tier-1 CI. The smoke mode prices one neighbour-candidate batch through both
+backends at tiny sizes and *asserts* (1) the JAX array-native path is at
+least as fast as the scalar Python path and (2) both agree on the winning
+candidate's latency — so a regression in the incremental-encoding / lazy-
+decode hot path fails fast instead of silently eroding the BENCH numbers."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_benchmarks_smoke_cli():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=480,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "simbackend.smoke" in out.stdout, out.stdout
+    # smoke must never touch the tracked trajectory file
+    assert "wrote" not in out.stdout

@@ -1,0 +1,212 @@
+"""Array-native DSE hot path: incremental encoding ≡ from-scratch encoding
+(bit-identical, per move kind), checkpoint/restore symmetry, bounded jit
+shapes over a long exploration, lazy SimHandle decode, and the >8-link NoC
+segment regression."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Candidate,
+    Design,
+    Explorer,
+    ExplorerConfig,
+    HardwareDatabase,
+    JaxBatchedBackend,
+    PythonBackend,
+    ar_complex,
+    calibrated_budget,
+    edge_detection,
+    random_single_noc_designs,
+)
+from repro.core.moves import MOVE_KINDS, MoveDelta, apply_move
+from repro.core.phase_sim_jax import EncodedDesign, EncodedWorkload, apply_delta
+
+_ED_FIELDS = (
+    "task_pe", "task_mem", "pe_accel",
+    "pe_peak", "pe_pj", "pe_leak", "pe_area",
+    "mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb",
+)
+
+
+def _assert_bit_identical(got: EncodedDesign, ref: EncodedDesign, ctx) -> None:
+    for f in _ED_FIELDS:
+        a, b = getattr(got, f), getattr(ref, f)
+        assert a.dtype == b.dtype and a.shape == b.shape, (ctx, f)
+        assert np.array_equal(a, b), (ctx, f, a, b)
+    assert got.noc_bw == ref.noc_bw and got.noc_links == ref.noc_links, ctx
+    assert got.noc_leak == ref.noc_leak and got.noc_area == ref.noc_area, ctx
+    assert got.pe_slot == ref.pe_slot and got.mem_slot == ref.mem_slot, ctx
+
+
+@pytest.mark.parametrize("move", MOVE_KINDS)
+def test_delta_encoding_bit_identical_per_move_kind(move):
+    """Every move kind: the delta-applied encoding equals a from-scratch
+    ``EncodedDesign.of`` of the mutated design, bit for bit — and the
+    checkpoint rollback returns the design to its exact pre-move state."""
+    db = HardwareDatabase()
+    g = ar_complex()
+    enc = EncodedWorkload.of(g)
+    designs = random_single_noc_designs(g, 6, seed=17)
+    tasks = sorted(g.tasks)
+    rng = random.Random(23)
+    applied = 0
+    for i, d in enumerate(designs):
+        base_enc = EncodedDesign.of(d, g, db, enc)
+        sig0 = d.signature()
+        for trial in range(8):
+            block = rng.choice(list(d.blocks))
+            task = rng.choice(tasks)
+            direction = rng.choice([-1, 1])
+            ck = d.checkpoint()
+            delta = MoveDelta()
+            ok = apply_move(
+                d, g, move, block, task, direction,
+                rng.choice(["pe", "mem", "noc"]),
+                rng.choice(["latency", "power", "area"]),
+                random.Random(0), delta,
+            )
+            if not ok:
+                d.restore(ck)
+                continue
+            vectorizable = not delta.topology
+            ref = EncodedDesign.of(d, g, db, enc) if vectorizable else None
+            d.restore(ck)
+            assert d.signature() == sig0, (move, i, trial)
+            if not vectorizable:
+                continue  # NoC allocation moves leave the single-NoC regime
+            got = apply_delta(base_enc, delta, d, g, db, enc)
+            _assert_bit_identical(got, ref, (move, i, trial))
+            # the base encoding itself must be untouched (it is a live cache)
+            _assert_bit_identical(base_enc, EncodedDesign.of(d, g, db, enc), (move, i))
+            applied += 1
+    assert applied >= 3, f"move {move!r} never applied — test vacuous"
+
+
+def test_candidate_evaluation_matches_python_on_moved_candidates():
+    """Candidates (base + recorded delta) price identically through the
+    vectorized path and the scalar path — fitness column included. Uses the
+    same candidate-batch builder as the throughput benchmark so test and
+    bench exercise identical candidate shapes."""
+    from benchmarks.bench_simbackend import make_candidates
+
+    db = HardwareDatabase()
+    g = ar_complex()
+    bud = calibrated_budget(db)
+    base = random_single_noc_designs(g, 1, seed=5)[0]
+    cands = make_candidates(g, base, bud, 12, seed=7)
+    hp = PythonBackend(g, db).evaluate_candidates(cands)
+    hj = JaxBatchedBackend(g, db).evaluate_candidates(cands)
+    for k, (a, b) in enumerate(zip(hp, hj)):
+        assert abs(a.fitness - b.fitness) / max(abs(a.fitness), 1e-9) < 1e-3, k
+        ra, rb = a.result(), b.result()
+        assert abs(ra.latency_s - rb.latency_s) / ra.latency_s < 1e-4, k
+        assert ra.task_bottleneck == rb.task_bottleneck, k
+
+
+def test_accepted_fork_keeps_decoded_block_names():
+    """Replays are name-deterministic: after decoding a fork candidate's
+    result and accepting it, every block the result references exists in the
+    accepted design (a naive replay would re-clone the forked block under a
+    fresh uid, leaving task_bottleneck_block/mem_capacity_bytes dangling and
+    silently degrading the explorer's block-selection heuristics)."""
+    from benchmarks.bench_simbackend import make_candidates
+
+    db = HardwareDatabase()
+    g = ar_complex()
+    bud = calibrated_budget(db)
+    base = random_single_noc_designs(g, 1, seed=3)[0]
+    cands = [c for c in make_candidates(g, base, bud, 24, seed=11) if c.delta.added]
+    assert cands, "no fork candidates generated — test vacuous"
+    for be in (JaxBatchedBackend(g, db), PythonBackend(g, db)):
+        c = cands[0]
+        res = be.evaluate_candidates([c])[0].result()
+        ck = base.checkpoint()
+        c.accept(g)
+        try:
+            assert set(res.task_bottleneck_block.values()) <= set(base.blocks)
+            assert set(res.mem_capacity_bytes) == set(base.mems())
+            for t, pe in base.task_pe.items():
+                assert pe in base.blocks, t
+        finally:
+            base.restore(ck)
+
+
+def test_lazy_handles_decode_only_on_access():
+    """Consuming the fitness column must not decode any SimResult; only the
+    accessed handle pays ``result()``. Timing breakdown fields populate."""
+    db = HardwareDatabase()
+    g = edge_detection()
+    bud = calibrated_budget(db)
+    jb = JaxBatchedBackend(g, db)
+    cands = [Candidate.of_design(d, bud) for d in random_single_noc_designs(g, 8, seed=2)]
+    handles = jb.evaluate_candidates(cands)
+    fits = [h.fitness for h in handles]
+    assert all(np.isfinite(f) for f in fits)
+    assert all(h._res is None for h in handles), "fitness access must not decode"
+    j = int(np.argmin(fits))
+    res = handles[j].result()
+    ref = PythonBackend(g, db).evaluate([cands[j].base])[0]
+    assert abs(res.latency_s - ref.latency_s) / ref.latency_s < 1e-4
+    assert sum(1 for h in handles if h._res is not None) == 1
+    s = jb.stats()
+    assert s.encode_s > 0.0 and s.dispatch_s > 0.0 and s.decode_s > 0.0
+    # scalar PPA columns come from the same shared batch pull, no decode
+    sc = handles[(j + 1) % len(handles)].scalars()
+    assert set(sc) == {"latency_s", "power_w", "area_mm2"}
+    assert handles[(j + 1) % len(handles)]._res is None
+
+
+def test_jit_shape_bucket_stays_bounded_over_long_exploration():
+    """200 search iterations must stay within ≤4 compiled shapes (pow-2
+    padded slot/batch/link buckets) — recompiles are the throughput killer."""
+    db = HardwareDatabase()
+    g = ar_complex()
+    bud = calibrated_budget(db).scaled(0.25)  # tight: keeps the search running
+    ex = Explorer(g, db, bud, ExplorerConfig(max_iterations=200, seed=9, backend="jax"))
+    res = ex.run()
+    s = ex.backend.stats()
+    assert res.iterations >= 150, "exploration ended too early to exercise shapes"
+    assert s.n_compiles <= 4, s
+    assert s.n_batched > 0
+
+
+def test_noc_links_beyond_eight_segment_regression():
+    """A design with >8 NoC links must price identically through both
+    backends. The old kernel segment-summed link shares over a hardcoded 8
+    segments: links 8+ lost their bandwidth attribution and their tasks
+    arbitrated against link 7's burst total (out-of-bounds gather clamp) —
+    on this scenario that mis-prices NoC-bound finish times by ~2x (97%
+    relative error). The rank-residue striping formulation is exact for any
+    link count.
+
+    Scenario: 12 independent NoC-bound tasks (own 800 MHz GPP each, fat
+    memory, narrow 16-link NoC) with small bursts on stripe orders 0–7 and
+    large bursts on 8–11, so the clamped share would be ≫1."""
+    from repro.core.blocks import make_gpp
+    from repro.core.tdg import Task, TaskGraph
+
+    db = HardwareDatabase()
+    g = TaskGraph("wide")
+    for k in range(12):
+        burst = 64.0 if k < 8 else 4096.0
+        g.add_task(Task(f"t{k:02d}", work_ops=1e6, i_read=0.1, i_write=1e6,
+                        burst_bytes=burst))
+    g.validate()
+
+    d = Design.base(g)
+    noc = d.blocks[d.noc_chain[0]]
+    noc.n_links = 16
+    noc.width_bytes = 4
+    mem = d.blocks[d.mems()[0]]
+    mem.freq_mhz, mem.width_bytes = 800, 256
+    for k, t in enumerate(sorted(g.tasks)):
+        if k:
+            d.task_pe[t] = d.add_block(make_gpp(800), attach_to=noc.name).name
+
+    ref = PythonBackend(g, db).evaluate([d])[0]
+    got = JaxBatchedBackend(g, db).evaluate([d])[0]
+    assert abs(got.latency_s - ref.latency_s) / ref.latency_s < 1e-4
+    for t, f in ref.task_finish_s.items():
+        assert abs(got.task_finish_s[t] - f) / max(f, 1e-12) < 1e-4, t
