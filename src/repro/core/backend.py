@@ -61,13 +61,20 @@ class BackendStats:
     delta encoding into the batch buffers, XLA dispatch submission (async —
     device time is hidden behind it), and lazy ``SimResult`` reconstruction
     (paid per *accessed* handle, possibly after the dispatch returns, so
-    ``decode_s`` is not a subset of ``wall_s``)."""
+    ``decode_s`` is not a subset of ``wall_s``).
+
+    ``n_inflight_max`` is the deepest the dispatch pipeline ever got: the
+    number of dispatches simultaneously un-consumed on device. ≥ 2 means a
+    later batch was encoded+submitted while an earlier one was still being
+    scored — the host-encode/device-compute overlap the pipelined explorer
+    exists for (asserted by the bench smoke stall guard)."""
 
     n_sims: int = 0  # designs evaluated
     n_dispatches: int = 0  # evaluate() calls
     n_batched: int = 0  # designs through the vectorized path
     n_fallback: int = 0  # designs through the scalar Python path
     n_compiles: int = 0  # distinct padded shapes seen by the jit cache
+    n_inflight_max: int = 0  # deepest concurrent-dispatch pipeline seen
     wall_s: float = 0.0  # total time inside evaluate()
     encode_s: float = 0.0  # incremental encoding into batch buffers
     dispatch_s: float = 0.0  # XLA dispatch submission
@@ -174,8 +181,18 @@ class SimulatorBackend(Protocol):
         ...
 
     def evaluate_candidates(self, cands: Sequence[Candidate]) -> List[SimHandle]:
-        """Price a batch of candidates, returning lazy handles (the DSE hot
-        path: one dispatch, scores consumable without decoding)."""
+        """Price a batch of candidates, returning lazy handles — the DSE hot
+        path. The call is NON-BLOCKING on asynchronous backends (it returns
+        once the dispatch is submitted; nothing crosses the device boundary
+        until a handle is read), so several batches may be in flight at
+        once. ``flush()`` is the only way to wait without consuming."""
+        ...
+
+    def flush(self) -> None:
+        """Block until every in-flight dispatch has finished scoring.
+        Synchronous backends are already drained — no-op. Call it before
+        tearing a backend down or timing device work; reading any handle of
+        a batch also implicitly completes that batch."""
         ...
 
     def supports(self, design: Design) -> bool:
@@ -188,13 +205,18 @@ class SimulatorBackend(Protocol):
 
 
 class _ReadyHandle:
-    """Handle over an already-decoded SimResult (python path / fallbacks)."""
+    """Handle over an already-decoded SimResult (python path / fallbacks).
 
-    __slots__ = ("_res", "_fitness")
+    Carries its candidate so ``adopt_encoding`` can tell WHOSE cached base
+    encoding to invalidate when a fallback-priced move gets accepted."""
 
-    def __init__(self, res: SimResult, fitness: float) -> None:
+    __slots__ = ("_res", "_fitness", "_cand")
+
+    def __init__(self, res: SimResult, fitness: float,
+                 cand: Optional[Candidate] = None) -> None:
         self._res = res
         self._fitness = fitness
+        self._cand = cand
 
     @property
     def fitness(self) -> float:
@@ -221,6 +243,7 @@ class PythonBackend:
     """Scalar reference path: `phase_sim.simulate` per design."""
 
     name = "python"
+    async_dispatch = False  # evaluates inline: nothing to pipeline behind
 
     def __init__(self, tdg: TaskGraph, db: HardwareDatabase) -> None:
         self.tdg = tdg
@@ -229,6 +252,9 @@ class PythonBackend:
 
     def supports(self, design: Design) -> bool:
         return True
+
+    def flush(self) -> None:
+        """Synchronous backend: every evaluate() already returned results."""
 
     def evaluate(self, designs: Sequence[Design]) -> List[SimResult]:
         t0 = time.perf_counter()
@@ -244,7 +270,7 @@ class PythonBackend:
         for c in cands:
             with c.materialized(self.tdg) as d:
                 res = simulate(d, self.tdg, self.db)
-            out.append(_ReadyHandle(res, _host_fitness(res, c)))
+            out.append(_ReadyHandle(res, _host_fitness(res, c), c))
         self._stats.n_sims += len(out)
         self._stats.n_dispatches += 1
         self._stats.wall_s += time.perf_counter() - t0
@@ -259,58 +285,72 @@ def _pow2(n: int) -> int:
 
 
 def _bucket(n: int) -> int:
-    """Padded-size bucket: power of two, floored at 8. Compile time per shape
+    """Padded-size bucket: power of two, floored at 4. Compile time per shape
     dwarfs the padded FLOPs on these tiny kernels, so we buy a near-constant
-    shape space (slots and batch rarely leave {8, 16, 32, 64}) with padding."""
-    return max(8, _pow2(n))
+    shape space (slots and batch rarely leave {4, 8, 16, 32, 64}) with
+    padding — but the floor matters on the batch axis: the explorer's
+    neighbour batches are ≤ 4 candidates, and padding them to 8 doubled the
+    device time the serial loop stalls on."""
+    return max(4, _pow2(n))
+
+
+# layout of the device-packed scalar column block: the jit wrapper stacks
+# every per-design scalar into ONE (B, 12) matrix, so a batch crosses the
+# device boundary as 3 leaves (scal, finish_s, bneck_code) instead of 13 —
+# per-leaf transfer + pytree overhead was a measurable slice of the
+# explorer's serial iteration. Column order mirrors
+# kernels/phase_sim/kernel.SCAL_COLS (the Pallas kernel's own packed
+# block), so on the kernel path the ops-layer unpack and this repack fold
+# to a no-op under jit and a future column lands identically in both.
+_SCAL_COLS = (
+    "latency_s", "energy_j", "power_w", "area_mm2", "fitness",
+    "alp_time_s", "traffic_bytes", "n_phases", "all_done",
+)  # cols 9:12 are bneck_kind_s
 
 
 class _JaxBatch:
-    """Shared state of one dispatch: device outputs + memoized host pulls.
+    """Shared state of one dispatch: device outputs + one memoized host pull.
 
     The dispatch is non-blocking — nothing transfers until a handle asks.
-    Consuming scores costs one small (B,)-shaped pull for the whole batch;
-    full decode pulls the per-task rows of that one handle only."""
+    The first consumer (any handle's ``fitness``) triggers exactly ONE
+    stacked ``device_get`` of the packed output dict: one host↔device sync
+    per batch, total. Padded-bucket batches are a few tens of KB, so the
+    stacked transfer costs less than a single per-column ``np.asarray``
+    used to (each of those paid jit-slicing overhead plus its own sync);
+    per-task *dicts* are still only materialized by ``result()``, per
+    accessed handle. ``consumed`` flips on the pull — the backend uses it
+    to retire the batch from its in-flight pipeline accounting (a completed
+    transfer implies the dispatch finished computing)."""
 
-    __slots__ = ("out", "stats", "_fitness", "_scalars", "_host", "_n_decodes")
+    __slots__ = ("out", "stats", "eds", "_host", "consumed")
 
-    def __init__(self, out, stats: BackendStats) -> None:
+    def __init__(self, out, stats: BackendStats, eds) -> None:
         self.out = out
         self.stats = stats
-        self._fitness: Optional[np.ndarray] = None
-        self._scalars: Optional[Dict[str, np.ndarray]] = None
+        self.eds = eds  # per-row EncodedDesign (for adopt_encoding)
         self._host: Optional[Dict[str, np.ndarray]] = None
-        self._n_decodes = 0
+        self.consumed = False
 
-    def fitness(self) -> np.ndarray:
-        if self._fitness is None:
-            t0 = time.perf_counter()
-            self._fitness = np.asarray(self.out["fitness"])
-            self.stats.decode_s += time.perf_counter() - t0
-        return self._fitness
-
-    def scalars(self) -> Dict[str, np.ndarray]:
-        if self._scalars is None:
-            t0 = time.perf_counter()
-            self._scalars = {
-                k: np.asarray(self.out[k])
-                for k in ("latency_s", "power_w", "area_mm2")
-            }
-            self.stats.decode_s += time.perf_counter() - t0
-        return self._scalars
-
-    def decode_source(self):
-        """Arrays to decode a handle's row from. The explorer decodes one
-        winner per batch — per-row pulls are right for that. A second decode
-        means an eager consumer (``evaluate()``) is walking the whole batch,
-        so pull everything across the device boundary once instead of ~8
-        small syncs per handle."""
-        self._n_decodes += 1
-        if self._host is None and self._n_decodes > 1:
+    def host(self) -> Dict[str, np.ndarray]:
+        """The whole batch output on host: one stacked device_get, unpacked
+        into the standard output keys as zero-copy column views."""
+        if self._host is None:
             import jax
 
-            self._host = jax.device_get(self.out)
-        return self._host if self._host is not None else self.out
+            t0 = time.perf_counter()
+            raw = jax.device_get(self.out)
+            scal = raw["scal"]
+            host = {name: scal[:, i] for i, name in enumerate(_SCAL_COLS)}
+            host["bneck_kind_s"] = scal[:, 9:12]
+            host["finish_s"] = raw["finish_s"]
+            host["bneck_code"] = raw["bneck_code"]
+            self._host = host
+            self.consumed = True
+            self.stats.decode_s += time.perf_counter() - t0
+        return self._host
+
+    def fitness(self) -> np.ndarray:
+        return self.host()["fitness"]
 
 
 class _JaxHandle:
@@ -330,20 +370,20 @@ class _JaxHandle:
         return float(self._batch.fitness()[self._j])
 
     def scalars(self) -> Dict[str, float]:
-        s = self._batch.scalars()
-        return {k: float(v[self._j]) for k, v in s.items()}
+        s = self._batch.host()
+        return {k: float(s[k][self._j]) for k in ("latency_s", "power_w", "area_mm2")}
 
     def result(self) -> SimResult:
         if self._res is None:
             t0 = time.perf_counter()
-            out, j = self._batch.decode_source(), self._j
+            out, j = self._batch.host(), self._j
             with self._cand.materialized(self._backend.tdg) as design:
                 self._res = self._backend._decode(
                     design,
                     float(out["latency_s"][j]),
-                    np.asarray(out["finish_s"][j]),
-                    np.asarray(out["bneck_code"][j]),
-                    np.asarray(out["bneck_kind_s"][j]),
+                    out["finish_s"][j],
+                    out["bneck_code"][j],
+                    out["bneck_kind_s"][j],
                     float(out["alp_time_s"][j]),
                     float(out["traffic_bytes"][j]),
                     int(out["n_phases"][j]),
@@ -353,7 +393,7 @@ class _JaxHandle:
 
 
 class JaxBatchedBackend:
-    """One `vmap` dispatch per batch of single-NoC candidates.
+    """One batched dispatch per batch of single-NoC candidates.
 
     Latency/finish times and the Eq.-7 fitness come from the vectorized
     phase+scoring kernel; the rest of ``SimResult`` is reconstructed exactly
@@ -361,18 +401,71 @@ class JaxBatchedBackend:
     dynamic energy depends only on total drained work (every task runs to
     completion), not on phase rates. Candidates outside the single-NoC
     regime fall back to the Python simulator per design, inside the same
-    ``evaluate_candidates`` call."""
+    ``evaluate_candidates`` call.
+
+    Two device formulations of the same math sit behind the jit cache:
+
+      * ``use_kernel=False`` — `phase_sim_jax.simulate_batch`, the `vmap`-of-
+        `fori_loop` XLA reference;
+      * ``use_kernel=True`` — the fused Pallas launch
+        (`repro.kernels.phase_sim`): one kernel over the (B, T) grid with
+        the co-residency masks in VMEM scratch (Mosaic on TPU, interpret
+        mode elsewhere — interpret trades speed for exercising the real
+        kernel path, which is why CPU defaults to the XLA reference).
+
+    ``use_kernel=None`` resolves from ``REPRO_PHASE_SIM_KERNEL`` (``1``
+    forces the kernel, ``0`` forbids it) and otherwise turns it on exactly
+    when running on TPU.
+
+    Dispatch is a two-deep-capable pipeline: ``evaluate_candidates`` returns
+    after submission, host batch buffers are double-buffered per shape
+    bucket (on CPU, XLA may alias the numpy input rather than copy — the
+    *next* encode must not scribble over a buffer an in-flight dispatch is
+    still reading), and ``flush()`` drains whatever is outstanding."""
 
     name = "jax"
+    async_dispatch = True  # dispatch returns before the device scores it
 
-    def __init__(self, tdg: TaskGraph, db: HardwareDatabase) -> None:
+    def __init__(
+        self, tdg: TaskGraph, db: HardwareDatabase,
+        use_kernel: Optional[bool] = None,
+    ) -> None:
+        import os
+
+        import jax
+
         from .phase_sim_jax import EncodedWorkload
 
         self.tdg = tdg
         self.db = db
         self._enc = EncodedWorkload.of(tdg)
+        if use_kernel is None:
+            env = os.environ.get("REPRO_PHASE_SIM_KERNEL", "").lower()
+            if env in ("1", "true"):
+                use_kernel = True
+            elif env in ("0", "false"):
+                use_kernel = False
+            else:
+                use_kernel = jax.default_backend() == "tpu"
+        self._use_kernel = bool(use_kernel)
+        self._interpret = jax.default_backend() != "tpu"
+        if self._use_kernel:
+            self.name = "jax_pallas"
         self._jit = None  # single kernel: shapes vary only via padded buckets
-        self._buffers: Dict[tuple, Dict[str, np.ndarray]] = {}  # shape bucket -> rows
+        # shape bucket -> two alternating host rows buffers (double-buffered
+        # so a pipelined encode never mutates what the device may still read)
+        self._buffers: Dict[tuple, List[Optional[Dict[str, np.ndarray]]]] = {}
+        self._bufsel: Dict[tuple, int] = {}
+        # (bucket, buffer-slot) -> (base_ed, budget, dirty cells) enabling the
+        # steady-state restore-only refill (see _evaluate_batch)
+        self._buf_state: Dict[tuple, tuple] = {}
+        # (bucket, buffer-slot) -> the _JaxBatch that last read the slot
+        # (reuse guard against >2-deep callers overwriting aliased inputs)
+        self._buf_owner: Dict[tuple, _JaxBatch] = {}
+        self._inflight: List[_JaxBatch] = []
+        # id(design) -> (design, EncodedDesign) adopted via adopt_encoding;
+        # the design ref doubles as an identity guard against id() reuse
+        self._adopted: Dict[int, tuple] = {}
         self._shapes: set = set()
         self._stats = BackendStats()
         # static per-task tables for host-side SimResult reconstruction:
@@ -393,13 +486,110 @@ class JaxBatchedBackend:
     def stats(self) -> BackendStats:
         return self._stats
 
+    def flush(self) -> None:
+        """Drain the dispatch pipeline: block until every outstanding batch
+        has been scored (e.g. speculative batches the explorer abandoned)."""
+        import jax
+
+        for batch in self._inflight:
+            if not batch.consumed:
+                jax.block_until_ready(batch.out["scal"])
+                batch.consumed = True
+        self._inflight.clear()
+
+    def adopt_encoding(self, handle: SimHandle) -> None:
+        """Promote ``handle``'s row encoding to be its base design's cached
+        encoding for future dispatches. The explorer calls this right after
+        accepting a move (`Candidate.accept` has just mutated the base to
+        exactly the state the row's delta-encoding describes —
+        ``apply_delta`` is bit-identical to a from-scratch encode), so the
+        per-dispatch ``EncodedDesign.of`` walk disappears from the steady
+        state: rejected iterations reuse the adopted base, accepted ones
+        adopt the winner. Only the caller may mutate the design afterwards,
+        and only through another accept+adopt.
+
+        A winner priced through the Python FALLBACK (e.g. a topology move)
+        has no row encoding — accepting it still mutates the base, so the
+        call must *invalidate* any previously adopted encoding for that
+        design instead of silently keeping a stale one (that exact staleness
+        produced phantom missing-block KeyErrors in multi-hundred-iteration
+        campaigns before the invalidation existed)."""
+        cand = getattr(handle, "_cand", None)
+        if cand is None:
+            return  # foreign handle: no candidate, nothing to (in)validate
+        if not isinstance(handle, _JaxHandle) or handle._batch.eds is None:
+            self._adopted.pop(id(cand.base), None)
+            return
+        if len(self._adopted) > 512:  # bound design refs kept alive
+            self._adopted.clear()
+        self._adopted[id(cand.base)] = (cand.base, handle._batch.eds[handle._j])
+
+    def _track_inflight(self, batch: _JaxBatch) -> None:
+        # in-flight = dispatched, not yet consumed by the host. The device
+        # may already have finished — the pipeline claim is about SUBMISSION
+        # overlapping an un-consumed predecessor, which is what hides host
+        # encode behind device scoring, so readiness does not retire a batch
+        # from the depth metric while the list stays short. Mis-speculated
+        # batches are never consumed; to bound the list WITHOUT voiding the
+        # flush() drain guarantee, overflow first sheds batches whose
+        # compute already finished (nothing left to drain) and only then
+        # applies backpressure (blocks) on the oldest stragglers.
+        alive = [b for b in self._inflight if not b.consumed]
+        if len(alive) > 7:
+            import jax
+
+            still = []
+            for b in alive:
+                ready = getattr(b.out["scal"], "is_ready", None)
+                if ready is not None and ready():
+                    continue  # finished: safe to untrack, flush owes it nothing
+                still.append(b)
+            for b in still[:-7]:
+                jax.block_until_ready(b.out["scal"])
+            alive = still[-7:]
+        self._inflight = alive
+        self._inflight.append(batch)
+        self._stats.n_inflight_max = max(
+            self._stats.n_inflight_max, len(self._inflight)
+        )
+
     def _fn(self):
         if self._jit is None:
             import jax
+            import jax.numpy as jnp
 
-            from .phase_sim_jax import simulate_batch
+            if self._use_kernel:
+                from ..kernels.phase_sim import phase_sim
 
-            self._jit = jax.jit(lambda rows: simulate_batch(self._enc, rows))
+                sim = lambda rows: phase_sim(self._enc, rows, interpret=self._interpret)
+            else:
+                from .phase_sim_jax import simulate_batch
+
+                sim = lambda rows: simulate_batch(self._enc, rows)
+
+            def packed(rows):
+                # pack the per-design scalars into one (B, 12) matrix on
+                # device (_SCAL_COLS + bneck_kind_s): 3 output leaves per
+                # dispatch instead of 13 (wl_latency_s is dropped — the
+                # lazy decode recomputes per-workload latency from finish
+                # times on host). Free under jit: XLA fuses the stack.
+                out = sim(rows)
+                scal = jnp.stack(
+                    [
+                        out[k] if out[k].dtype == jnp.float32
+                        else out[k].astype(jnp.float32)
+                        for k in _SCAL_COLS
+                    ],
+                    axis=1,
+                )
+                scal = jnp.concatenate([scal, out["bneck_kind_s"]], axis=1)
+                return {
+                    "scal": scal,
+                    "finish_s": out["finish_s"],
+                    "bneck_code": out["bneck_code"],
+                }
+
+            self._jit = jax.jit(packed)
         return self._jit
 
     # ------------------------------------------------------------------
@@ -417,7 +607,7 @@ class JaxBatchedBackend:
             if i not in fast_set:
                 with c.materialized(self.tdg) as d:
                     res = simulate(d, self.tdg, self.db)
-                results[i] = _ReadyHandle(res, _host_fitness(res, c))
+                results[i] = _ReadyHandle(res, _host_fitness(res, c), c)
                 self._stats.n_fallback += 1
         if fast:
             self._evaluate_batch([cands[i] for i in fast], fast, results)
@@ -447,7 +637,16 @@ class JaxBatchedBackend:
             key = id(c.base)
             ed = base_encs.get(key)
             if ed is None:
-                ed = base_encs[key] = EncodedDesign.of(c.base, self.tdg, self.db, self._enc)
+                # adopted encodings first: the explorer promotes the accepted
+                # winner's delta-encoding (bit-identical to a from-scratch
+                # encode of the mutated design), so steady-state dispatches
+                # never re-walk the base design's object graph at all
+                adopted = self._adopted.get(key)
+                if adopted is not None and adopted[0] is c.base:
+                    ed = adopted[1]
+                else:
+                    ed = EncodedDesign.of(c.base, self.tdg, self.db, self._enc)
+                base_encs[key] = ed
             if c.spec is not None:
                 ed = apply_delta(ed, c.delta, c.base, self.tdg, self.db, self._enc)
             eds.append(ed)
@@ -463,53 +662,131 @@ class JaxBatchedBackend:
         b = len(batch)
         b_pad = _bucket(b)
         key = (b_pad, slots)
-        rows = self._buffers.get(key)
+        # double-buffered per bucket: the previous dispatch of this shape may
+        # still be reading its (possibly zero-copy-aliased) host buffer, so a
+        # pipelined encode flips to the other one. Two suffice for the
+        # explorer's two-deep pipeline; a deeper pipeline would flush first.
+        pair = self._buffers.get(key)
+        if pair is None:
+            pair = self._buffers[key] = [None, None]
+        sel = self._bufsel.get(key, 0)
+        self._bufsel[key] = 1 - sel
+        rows = pair[sel]
         if rows is None:
-            rows = self._buffers[key] = alloc_rows(
+            rows = pair[sel] = alloc_rows(
                 b_pad, len(self._enc.names), slots, slots, len(self._enc.wl_names)
             )
+        # reuse guard: two buffers cover the explorer's two-deep pipeline,
+        # but the protocol lets callers keep MORE dispatches un-consumed. If
+        # the dispatch that last encoded into this slot might still be
+        # reading it (CPU XLA may alias the numpy buffer zero-copy), wait
+        # for its compute to finish before scribbling over its inputs.
+        owner = self._buf_owner.get((key, sel))
+        if owner is not None and not owner.consumed:
+            ready = getattr(owner.out["scal"], "is_ready", None)
+            if ready is None or not ready():
+                import jax
 
-        # fill per base-group: write the base encoding + budget once,
-        # broadcast it across the group's rows, then apply per-candidate diffs
-        j = 0
-        while j < b:
-            c0 = batch[j]
-            base_ed = base_encs[id(c0.base)]
-            end = j + 1
-            while end < b and batch[end].base is c0.base:
-                end += 1
-            fill_row(rows, j, base_ed)
-            bud = c0.budget
-            if bud is not None:
-                fill_budget(rows, j, self._enc, bud.latency_s, bud.power_w,
-                            bud.area_mm2, c0.alpha)
-            else:  # neutral scoring row (buffers are reused across dispatches)
-                fill_budget(rows, j, self._enc, {}, 1e30, 1e30, 0.0)
-            if end - j > 1:
-                for arr in rows.values():
-                    arr[j + 1:end] = arr[j]
-            for k in range(j, end):
-                ed, c = eds[k], batch[k]
+                jax.block_until_ready(owner.out["scal"])
+
+        # steady-state fast path (the explorer regime: one adopted base, one
+        # budget, full bucket): the buffer already holds base-row content
+        # everywhere except the cells last dispatch's diffs touched — restore
+        # just those from the base instead of refilling every row
+        bufkey = (key, sel)
+        prev = self._buf_state.get(bufkey)
+        c0 = batch[0]
+        uniform = all(
+            c.budget is c0.budget and c.alpha == c0.alpha for c in batch[1:]
+        )
+        state0 = len(base_encs) == 1 and b == b_pad and uniform
+        fast = (
+            state0 and prev is not None
+            and prev[0] is base_encs[id(c0.base)]
+            and prev[1] is c0.budget
+            and prev[2] == c0.alpha
+        )
+        dirty: List[tuple] = []
+        if fast:
+            base_ed = prev[0]
+            for k, f in prev[3]:
+                if f == "noc":
+                    rows["noc_bw"][k] = base_ed.noc_bw
+                    rows["noc_links"][k] = base_ed.noc_links
+                    rows["noc_leak"][k] = base_ed.noc_leak
+                    rows["noc_area"][k] = base_ed.noc_area
+                else:
+                    fill_row_fields(rows, k, base_ed, (f,))
+            for k in range(b):
+                ed = eds[k]
                 if ed is not base_ed:
                     changed = [
                         f for f in ENCODED_FIELDS
                         if getattr(ed, f) is not getattr(base_ed, f)
                     ]
                     fill_row_fields(rows, k, ed, changed)
+                    dirty.extend((k, f) for f in changed)
                     if ed.noc_bw != base_ed.noc_bw or ed.noc_links != base_ed.noc_links:
                         rows["noc_bw"][k] = ed.noc_bw
                         rows["noc_links"][k] = ed.noc_links
                         rows["noc_leak"][k] = ed.noc_leak
                         rows["noc_area"][k] = ed.noc_area
-                if k > j and c.budget is not bud:
-                    if c.budget is not None:
-                        fill_budget(rows, k, self._enc, c.budget.latency_s,
-                                    c.budget.power_w, c.budget.area_mm2, c.alpha)
-                    else:
-                        fill_budget(rows, k, self._enc, {}, 1e30, 1e30, 0.0)
-            j = end
-        for arr in rows.values():  # pad the batch axis with copies of row 0
-            arr[b:b_pad] = arr[0]
+                        dirty.append((k, "noc"))
+            self._buf_state[bufkey] = (base_ed, c0.budget, c0.alpha, dirty)
+        else:
+            # fill per base-group: write the base encoding + budget once,
+            # broadcast across the group's rows, then apply per-candidate diffs
+            j = 0
+            while j < b:
+                cg = batch[j]
+                base_ed = base_encs[id(cg.base)]
+                end = j + 1
+                while end < b and batch[end].base is cg.base:
+                    end += 1
+                fill_row(rows, j, base_ed)
+                bud = cg.budget
+                if bud is not None:
+                    fill_budget(rows, j, self._enc, bud.latency_s, bud.power_w,
+                                bud.area_mm2, cg.alpha)
+                else:  # neutral scoring row (buffers are reused across dispatches)
+                    fill_budget(rows, j, self._enc, {}, 1e30, 1e30, 0.0)
+                if end - j > 1:
+                    for arr in rows.values():
+                        arr[j + 1:end] = arr[j]
+                for k in range(j, end):
+                    ed, c = eds[k], batch[k]
+                    if ed is not base_ed:
+                        changed = [
+                            f for f in ENCODED_FIELDS
+                            if getattr(ed, f) is not getattr(base_ed, f)
+                        ]
+                        fill_row_fields(rows, k, ed, changed)
+                        dirty.extend((k, f) for f in changed)
+                        if ed.noc_bw != base_ed.noc_bw or ed.noc_links != base_ed.noc_links:
+                            rows["noc_bw"][k] = ed.noc_bw
+                            rows["noc_links"][k] = ed.noc_links
+                            rows["noc_leak"][k] = ed.noc_leak
+                            rows["noc_area"][k] = ed.noc_area
+                            dirty.append((k, "noc"))
+                    if k > j and c.budget is not bud:
+                        if c.budget is not None:
+                            fill_budget(rows, k, self._enc, c.budget.latency_s,
+                                        c.budget.power_w, c.budget.area_mm2, c.alpha)
+                        else:
+                            fill_budget(rows, k, self._enc, {}, 1e30, 1e30, 0.0)
+                j = end
+            if b < b_pad:  # pad the batch axis with copies of row 0
+                for arr in rows.values():
+                    arr[b:b_pad] = arr[0]
+            # the invariant the fast path needs: every row holds base+budget
+            # content except `dirty` — only true for single-group, uniform-
+            # budget, full-bucket dispatches
+            if state0:
+                self._buf_state[bufkey] = (
+                    base_encs[id(c0.base)], c0.budget, c0.alpha, dirty
+                )
+            else:
+                self._buf_state.pop(bufkey, None)
         if key not in self._shapes:
             self._shapes.add(key)
             self._stats.n_compiles += 1
@@ -518,7 +795,9 @@ class JaxBatchedBackend:
         tD = time.perf_counter()
         out = self._fn()(rows)  # non-blocking: no host transfer here
         self._stats.dispatch_s += time.perf_counter() - tD
-        shared = _JaxBatch(out, self._stats)
+        shared = _JaxBatch(out, self._stats, eds)
+        self._buf_owner[(key, sel)] = shared
+        self._track_inflight(shared)
         for j, i in enumerate(idx):
             results[i] = _JaxHandle(shared, j, batch[j], self)
             self._stats.n_batched += 1
@@ -591,10 +870,18 @@ class JaxBatchedBackend:
         )
 
 
+def _jax_pallas_backend(tdg: TaskGraph, db: HardwareDatabase) -> "JaxBatchedBackend":
+    return JaxBatchedBackend(tdg, db, use_kernel=True)
+
+
 BACKENDS = {
     "python": PythonBackend,
     "jax": JaxBatchedBackend,
     "jax_batched": JaxBatchedBackend,
+    # fused Pallas phase-sim kernel (Mosaic on TPU; interpret mode elsewhere,
+    # so on CPU prefer "jax" for speed and this for kernel-path coverage)
+    "pallas": _jax_pallas_backend,
+    "jax_pallas": _jax_pallas_backend,
 }
 
 

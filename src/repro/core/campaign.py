@@ -6,11 +6,21 @@ Fig. 9b sweeps the awareness ladder, §6 sweeps budgets and workloads. A
 exploration's :meth:`Explorer.run_steps` coroutine in lockstep: each round it
 gathers the pending candidate batches of *all* live explorers on a workload
 and prices them through **one** ``backend.evaluate_candidates`` dispatch.
-With `JaxBatchedBackend` that turns N concurrent searches into single `vmap`
-dispatches of N×neighbours delta-encoded candidates — the batching the
-vectorized simulator was built for — while `PythonBackend` campaigns still
-benefit from the shared accounting. One backend is shared per distinct task graph (the encoding is
-workload-specific); per-run ``n_sims`` stays with each explorer.
+With `JaxBatchedBackend` that turns N concurrent searches into single
+batched dispatches of N×neighbours delta-encoded candidates — the batching
+the vectorized simulator was built for — while `PythonBackend` campaigns
+still benefit from the shared accounting. One backend is shared per distinct
+task graph (the encoding is workload-specific); per-run ``n_sims`` stays
+with each explorer.
+
+The draining is itself pipelined: ``evaluate_candidates`` is non-blocking,
+and pipelined explorer coroutines answer a ``send`` with their next —
+possibly speculative — batch without forcing the one just dispatched, so
+round *k+1*'s host-side encode overlaps the device scoring of round *k*.
+Mis-speculated batches surface in ``ExplorationResult.n_sims_wasted`` (the
+shared backend's ``n_sims`` counts them; per-run ``n_sims`` does not), and
+``run()`` flushes every backend before reporting so no abandoned dispatch
+outlives the campaign.
 """
 from __future__ import annotations
 
@@ -179,6 +189,12 @@ class Campaign:
                         done[st.spec.name] = res
                         del live[st.spec.name]
 
+        # drain: abandoned speculative dispatches must not outlive the run
+        for backend in self._backends.values():
+            flush = getattr(backend, "flush", None)
+            if flush is not None:
+                flush()
+
         runs = {spec.name: done[spec.name] for spec in self.specs}
         labels = self._backend_labels()
         backend_stats = {
@@ -222,5 +238,7 @@ class Campaign:
             "best_distance_mean": statistics.mean(dists),
             "best_distance_max": max(dists),
             "n_sims_total": sum(r.n_sims for r in runs.values()),
+            "n_sims_wasted_total": sum(r.n_sims_wasted for r in runs.values()),
+            "n_spec_hits_total": sum(r.n_spec_hits for r in runs.values()),
             "sim_wall_s_total": sum(r.sim_wall_s for r in runs.values()),
         }

@@ -44,6 +44,20 @@ AWARENESS_LEVELS = ("sa", "task", "task_block", "farsi")
 
 
 @dataclasses.dataclass
+class _Sel:
+    """One dispatched iteration's selection context (the 5-tuple choices a
+    resolution needs back after its batch was scored — possibly one full
+    iteration later, when the batch was dispatched speculatively)."""
+
+    it: int
+    metric: str
+    task: str
+    block: str
+    bneck: str
+    neighbors: List["Candidate"]
+
+
+@dataclasses.dataclass
 class ExplorerConfig:
     awareness: str = "farsi"
     neighbors_per_iter: int = 4
@@ -56,6 +70,17 @@ class ExplorerConfig:
     codesign: bool = True  # False => fixate focus until the focused metric is met
     taboo_ttl: int = 5
     backend: str = "python"  # SimulatorBackend registry name (backend.BACKENDS)
+    # two-deep speculative dispatch pipeline: generate + encode batch i+1
+    # (assuming batch i is rejected) while the device scores batch i.
+    #   None  — auto: on async backends, speculate ADAPTIVELY (only while a
+    #           running estimate says rejection is the likely outcome — in
+    #           accept-heavy phases a speculative batch is almost always
+    #           thrown away, so speculating there is pure overhead);
+    #   True  — always speculate (the stall-guard / identity-test mode);
+    #   False — off.
+    # Every mode produces the same accepted-move sequence under a fixed
+    # seed — speculation rolls its rng/taboo state back on a miss.
+    pipeline: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -65,12 +90,15 @@ class ExplorationResult:
     best_distance: Distance
     converged: bool
     iterations: int
-    n_sims: int
+    n_sims: int  # committed evaluations (mis-speculated batches excluded)
     wall_s: float
     history: List[dict]
     ledger: CodesignLedger
     backend_name: str = "python"
     sim_wall_s: float = 0.0  # time inside backend.evaluate for this run
+    pipelined: bool = False  # ran with the speculative dispatch pipeline
+    n_spec_hits: int = 0  # speculative batches that became the next iteration
+    n_sims_wasted: int = 0  # speculated evaluations discarded on accept
 
 
 def _task_duration(result: SimResult, tdg: TaskGraph, t: str) -> float:
@@ -114,8 +142,18 @@ class Explorer:
         assert config.awareness in AWARENESS_LEVELS
         self.rng = random.Random(config.seed)
         self.backend = backend or make_backend(config.backend, tdg, db)
-        self.n_sims = 0  # designs this run submitted (backend stats aggregate
-        # across sharers; this stays per-exploration under Campaign)
+        self.n_sims = 0  # committed designs this run submitted (backend stats
+        # aggregate across sharers AND count mis-speculated batches; this
+        # stays per-exploration — and per-commit — under Campaign)
+        self.n_sims_wasted = 0  # speculated evaluations discarded on accept
+        self.n_spec_hits = 0
+        if config.pipeline is None:  # auto: needs an asynchronous dispatch
+            self._pipeline = (
+                "adaptive" if getattr(self.backend, "async_dispatch", False) else "off"
+            )
+        else:
+            self._pipeline = "always" if config.pipeline else "off"
+        self._p_rej = 0.0  # EW estimate of the rejection rate (adaptive gate)
         self._taboo: Dict[Tuple[str, str], int] = {}
         self._sticky_focus: Optional[str] = None  # codesign-off fixation
 
@@ -270,63 +308,101 @@ class Explorer:
         :class:`SimHandle` list. The winner is picked from the handles'
         fitness column (device-computed on the JAX backend); only that one
         handle is decoded into a full ``SimResult``, and only on acceptance
-        is its move materialized onto the current design. ``run()`` drives
-        it against ``self.backend``; `Campaign` drives many explorers'
-        generators in lockstep so one dispatch prices the pending neighbours
-        of *all* live explorations. The ``StopIteration`` value is the
-        :class:`ExplorationResult`."""
+        is its move materialized onto the current design.
+
+        With ``pipeline`` on (auto-enabled on async backends) the coroutine
+        runs a TWO-DEEP SPECULATIVE PIPELINE: after receiving batch *i*'s
+        (lazy) handles it does NOT touch them — it first speculates that
+        batch *i* will be *rejected* (the steady-state outcome of a cooling
+        anneal), generates + yields batch *i+1* under that assumption, and
+        only then forces batch *i*'s one ``(B,)`` fitness pull. The driver
+        encodes and dispatches batch *i+1* while the device is still scoring
+        batch *i*, so host work hides behind device compute. On a miss (the
+        move was accepted) the speculated rng/taboo/focus state is rolled
+        back and batch *i+1* is regenerated from the true state — the
+        accepted-move sequence is therefore IDENTICAL to the unpipelined
+        coroutine under a fixed seed (asserted in tests); the only cost is
+        the discarded device batch, accounted in ``n_sims_wasted``.
+
+        ``run()`` drives it against ``self.backend``; `Campaign` drives many
+        explorers' generators in lockstep so one dispatch prices the pending
+        neighbours of *all* live explorations (speculative or not). The
+        ``StopIteration`` value is the :class:`ExplorationResult`."""
         t0 = time.perf_counter()
         cur = initial or Design.base(self.tdg)
+        adopt = getattr(self.backend, "adopt_encoding", None)
         self.n_sims += 1
         (h0,) = yield [Candidate.of_design(cur, self.budget, self.cfg.alpha_met)]
         cur_res = h0.result()
         cur_dist = distance(cur_res, self.budget)
-        # best keeps a stable-name snapshot: cur mutates in place hereafter
-        best = (cur.clone(rename=False), cur_res, cur_dist)
+        if adopt is not None:
+            adopt(h0)
+        # best keeps a stable-name snapshot: cur mutates in place hereafter.
+        # The snapshot CLONE is deferred (best_stale) until right after the
+        # next dispatch is submitted, so its dict-copy cost hides behind the
+        # device scoring that batch — cur cannot mutate again before then.
+        best_design, best_res, best_dist = cur.clone(rename=False), cur_res, cur_dist
+        best_stale = False
         history: List[dict] = []
         ledger = CodesignLedger()
+        max_it = self.cfg.max_iterations
 
-        for it in range(self.cfg.max_iterations):
-            if cur_dist.converged():
-                break
-            self._taboo = {k: v - 1 for k, v in self._taboo.items() if v > 1}
-
-            metric = self._select_metric(cur_dist)
-            task = self._select_task(cur, metric, cur_dist, cur_res)
-            block = self._select_block(cur, metric, task, cur_res)
-            bneck = cur_res.task_bottleneck.get(task, "pe")
-            moves = self._select_moves(cur, metric, task, block)
-
-            neighbors = self._make_neighbors(
-                cur, metric, task, block, moves, bneck, self.cfg.neighbors_per_iter
-            )
-            if not neighbors:
+        def select_from(it: int) -> Optional[_Sel]:
+            """The head of one serial iteration, from the CURRENT search
+            state: taboo decrement → 5-tuple selection → neighbour
+            generation; iterations yielding no neighbours are taboo'd and
+            skipped exactly as the serial loop's ``continue`` did. Returns
+            None once the iteration budget is spent or the search converged
+            (convergence only moves on accept, so a reject-speculated call
+            sees the truth)."""
+            while it < max_it and not cur_dist.converged():
+                self._taboo = {k: v - 1 for k, v in self._taboo.items() if v > 1}
+                metric = self._select_metric(cur_dist)
+                task = self._select_task(cur, metric, cur_dist, cur_res)
+                block = self._select_block(cur, metric, task, cur_res)
+                bneck = cur_res.task_bottleneck.get(task, "pe")
+                moves = self._select_moves(cur, metric, task, block)
+                neighbors = self._make_neighbors(
+                    cur, metric, task, block, moves, bneck, self.cfg.neighbors_per_iter
+                )
+                if neighbors:
+                    return _Sel(it, metric, task, block, bneck, neighbors)
                 self._taboo[(task, block)] = self.cfg.taboo_ttl
-                continue
-            # one evaluation request per iteration: the whole neighbour set
-            self.n_sims += len(neighbors)
-            handles = yield neighbors
-            assert len(handles) == len(neighbors)
-            # rank from the batch's (B,) fitness column — no decode; stable
-            # argmin preserves the precedence order on ties like the old sort
+                it += 1
+            return None
+
+        def resolve(sel: _Sel, handles: List[SimHandle], u: float) -> bool:
+            """Rank batch ``sel`` from its fitness column (the one host pull
+            that forces the dispatch) and run the SA accept test with the
+            pre-drawn uniform ``u`` — directly on that column: the backend's
+            fitness IS Eq.-7 (device-computed on JAX, `budgets.distance` on
+            Python), so a rejected iteration never decodes anything. Only an
+            accepted winner is decoded into the ``SimResult`` the next
+            selection reasons over. Commits the accept-path state change;
+            the reject-path taboo add is the caller's (it is part of the
+            speculated continuation)."""
+            nonlocal cur_res, cur_dist, best_design, best_res, best_dist, best_stale
+            assert len(handles) == len(sel.neighbors)
+            # stable argmin preserves the precedence order on ties
             fits = [h.fitness for h in handles]
             j = min(range(len(fits)), key=fits.__getitem__)
-            cand, move = neighbors[j], neighbors[j].spec.move
-            res = handles[j].result()  # lazy: only the winner pays decode
-            dist_after = distance(res, self.budget)
+            cand, move = sel.neighbors[j], sel.neighbors[j].spec.move
             d_before = cur_dist.fitness(self.cfg.alpha_met)
-            d_after = dist_after.fitness(self.cfg.alpha_met)
-            temp = self.cfg.temperature0 * self.cfg.temp_decay**it
+            d_after = fits[j]
+            temp = self.cfg.temperature0 * self.cfg.temp_decay**sel.it
             accept = d_after < d_before or (
-                temp > 0
-                and self.rng.random() < math.exp(-(d_after - d_before) / max(temp, 1e-9))
+                temp > 0 and u < math.exp(-(d_after - d_before) / max(temp, 1e-9))
             )
+            dist_after = None
+            if accept:
+                res = handles[j].result()  # lazy: only the winner pays decode
+                dist_after = distance(res, self.budget)
             ledger.log(
                 FocusRecord(
-                    iteration=it,
-                    metric=metric,
-                    workload=workload_of(task),
-                    comm_comp="comp" if bneck == "pe" else "comm",
+                    iteration=sel.it,
+                    metric=sel.metric,
+                    workload=workload_of(sel.task),
+                    comm_comp="comp" if sel.bneck == "pe" else "comm",
                     move=move,
                     distance_before=cur_dist.city_block(),
                     distance_after=dist_after.city_block() if accept else cur_dist.city_block(),
@@ -334,42 +410,102 @@ class Explorer:
             )
             if accept:
                 cand.accept(self.tdg)  # materialize the move onto cur
+                if adopt is not None:
+                    adopt(handles[j])  # cur's encoding == the winner's row
                 cur_res, cur_dist = res, dist_after
-                if cur_dist.city_block() < best[2].city_block():
-                    best = (cur.clone(rename=False), cur_res, cur_dist)
-            else:
-                self._taboo[(task, block)] = self.cfg.taboo_ttl
-
+                if cur_dist.city_block() < best_dist.city_block():
+                    best_res, best_dist, best_stale = cur_res, cur_dist, True
             history.append(
                 {
-                    "iteration": it,
+                    "iteration": sel.it,
                     "n_sims": self.n_sims,
-                    "distance": best[2].city_block(),
-                    "fitness": best[2].fitness(self.cfg.alpha_met),
-                    "metric": metric,
+                    "distance": best_dist.city_block(),
+                    "fitness": best_dist.fitness(self.cfg.alpha_met),
+                    "metric": sel.metric,
                     "move": move,
                     "accepted": accept,
                     "wall_s": time.perf_counter() - t0,
                 }
             )
+            return accept
 
+        mode = self._pipeline
+        sel = select_from(0)
+        if sel is not None:
+            self.n_sims += len(sel.neighbors)
+            handles = yield sel.neighbors
+        while sel is not None:
+            # the SA accept draw: consumed unconditionally and BEFORE the
+            # next iteration's selection draws, so the rng stream is the
+            # same whether that selection happens now (speculation) or
+            # after resolution (serial)
+            u = self.rng.random()
+
+            # ---- speculate REJECT: select + dispatch batch i+1 while the
+            # device is still scoring batch i. The adaptive gate only
+            # speculates when rejection is the likely outcome — a wasted
+            # speculative batch costs real encode + device time, so in
+            # accept-heavy (early, improving) phases the serial path wins.
+            speculate = mode == "always" or (mode == "adaptive" and self._p_rej >= 0.5)
+            spec = spec_handles = None
+            if speculate:
+                ck = (self.rng.getstate(), dict(self._taboo), self._sticky_focus)
+                self._taboo[(sel.task, sel.block)] = self.cfg.taboo_ttl
+                spec = select_from(sel.it + 1)
+                if spec is not None:
+                    spec_handles = yield spec.neighbors  # in flight behind batch i
+
+            accepted = resolve(sel, handles, u)  # first host pull forces batch i
+            self._p_rej = 0.75 * self._p_rej + (0.0 if accepted else 0.25)
+            if speculate and not accepted:
+                # hit: batch i+1 was encoded while batch i was scored and is
+                # (likely) already scored itself — commit the speculation
+                if spec is None:
+                    break
+                self.n_spec_hits += 1
+                self.n_sims += len(spec.neighbors)
+                sel, handles = spec, spec_handles
+                continue
+            if speculate:
+                # miss: the accepted move invalidated the speculated state —
+                # roll back rng/taboo/focus and regenerate from the truth
+                self.rng.setstate(ck[0])
+                self._taboo, self._sticky_focus = ck[1], ck[2]
+                if spec is not None:
+                    self.n_sims_wasted += len(spec.neighbors)
+            elif not accepted:
+                self._taboo[(sel.task, sel.block)] = self.cfg.taboo_ttl
+            sel = select_from(sel.it + 1)
+            if sel is None:
+                break
+            self.n_sims += len(sel.neighbors)
+            handles = yield sel.neighbors
+            if best_stale:  # deferred snapshot: hides behind the dispatch
+                best_design, best_stale = cur.clone(rename=False), False
+
+        if best_stale:
+            best_design = cur.clone(rename=False)
         return ExplorationResult(
-            best_design=best[0],
-            best_result=best[1],
-            best_distance=best[2],
-            converged=best[2].converged(),
+            best_design=best_design,
+            best_result=best_res,
+            best_distance=best_dist,
+            converged=best_dist.converged(),
             iterations=len(history),
             n_sims=self.n_sims,
             wall_s=time.perf_counter() - t0,
             history=history,
             ledger=ledger,
             backend_name=self.backend.name,
+            pipelined=self._pipeline != "off",
+            n_spec_hits=self.n_spec_hits,
+            n_sims_wasted=self.n_sims_wasted,
         )
 
     def run(self, initial: Optional[Design] = None) -> ExplorationResult:
         """Drive :meth:`run_steps` against ``self.backend`` — exactly one
         ``backend.evaluate_candidates`` call per search iteration (plus one
-        for the initial design)."""
+        for the initial design, plus any mis-speculated batches when the
+        pipeline is on). Drains abandoned speculative dispatches on exit."""
         gen = self.run_steps(initial)
         sim_wall = 0.0
         try:
@@ -380,6 +516,9 @@ class Explorer:
                 sim_wall += time.perf_counter() - t0
                 pending = gen.send(handles)
         except StopIteration as stop:
+            flush = getattr(self.backend, "flush", None)
+            if flush is not None:
+                flush()
             result: ExplorationResult = stop.value
             result.sim_wall_s = sim_wall
             return result

@@ -423,6 +423,166 @@ def fill_budget(
     rows["alpha"][j] = alpha
 
 
+def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Phase simulation + device-side scoring of ONE candidate row.
+
+    This is the single-candidate oracle shared by :func:`simulate_batch`
+    (``vmap`` over the row axis — the XLA reference path) and by
+    ``repro.kernels.phase_sim`` (the fused Pallas kernel reimplements this
+    math per grid program; parity ≤ 1e-5 is asserted in
+    tests/test_phase_sim_kernel.py). See :func:`simulate_batch` for the
+    contract and the co-residency-matvec formulation notes.
+    """
+    t = enc.work_ops.shape[0]
+    n_wl = len(enc.wl_names)
+    idx3 = jnp.arange(3)
+
+    task_pe, task_mem = row["task_pe"], row["task_mem"]
+    n_mem = row["mem_bw"].shape[-1]
+    noc_bw, noc_links = row["noc_bw"], row["noc_links"]
+    # loop-invariant hoists: effective peak rates per task and the
+    # same-slot co-residency masks behind Eq. 1/2 (PE share) and Eq. 4
+    # (burst-proportional memory share)
+    peak_eff = row["pe_peak"][task_pe] * row["pe_accel"]
+    mem_peak = row["mem_bw"][task_mem]
+    same_pe = (task_pe[:, None] == task_pe[None, :]).astype(jnp.float32)
+    same_mem = (task_mem[:, None] == task_mem[None, :]).astype(jnp.float32)
+    links = jnp.maximum(noc_links, 1)
+
+    def phase(_, state):
+        rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, alp_t, traffic, nph = state
+        running = (~completed) & jnp.all(~enc.parent_mask | completed[None, :], axis=1)
+        runf = jnp.where(running, 1.0, 0.0)
+        burst_run = enc.burst * runf
+
+        # Eq. 1/2: preemptive equal share per PE slot
+        load_t = same_pe @ runf  # running tasks sharing my PE (incl. me)
+        compute = peak_eff / jnp.maximum(load_t, 1.0)
+
+        # Eq. 4: burst-proportional memory share (read/write channels
+        # split, but they see identical shares — one bandwidth suffices)
+        mem_t = same_mem @ burst_run
+        m_bw = mem_peak * enc.burst / jnp.maximum(mem_t, 1e-30)
+
+        # Eq. 3: round-robin link striping, burst arbitration within
+        # link; same link ⟺ running ranks congruent mod n_links
+        order = jnp.cumsum(runf)
+        same_link = (runf[:, None] * runf[None, :]) * jnp.where(
+            (order[:, None] - order[None, :]) % links == 0, 1.0, 0.0
+        )
+        link_t = same_link @ enc.burst
+        n_bw = noc_bw * enc.burst / jnp.maximum(link_t, 1e-30)
+
+        bw = jnp.minimum(m_bw, n_bw)
+        comp_t = rem_ops / compute
+        comm_t = jnp.maximum(rem_rd, rem_wr) / bw
+        c_t = jnp.where(running, jnp.maximum(comp_t, comm_t), BIG)
+        phi_raw = jnp.min(c_t)  # Eq. 6
+        any_run = phi_raw < BIG * 0.5
+        phi = jnp.where(any_run, phi_raw, 0.0)
+        phi_run = jnp.where(running, phi, 0.0)
+
+        # binding resource per running task (gables.bottleneck_of — note:
+        # attribution uses the task's *total* work over current rates, not
+        # the remaining work; compute wins ties, then mem vs noc by the
+        # tighter pipe)
+        tot_comp_t = enc.work_ops / compute
+        tot_comm_t = jnp.maximum(enc.read_bytes, enc.write_bytes) / bw
+        code = jnp.where(tot_comp_t >= tot_comm_t, 0, jnp.where(m_bw <= n_bw, 1, 2))
+        kind_s = kind_s + jnp.sum(
+            jnp.where(code[:, None] == idx3[None, :], phi_run[:, None], 0.0), axis=0
+        )
+
+        # mask rates BEFORE the phi multiply: slots hosting no running
+        # task price as inf bandwidth, and inf · 0 would poison the
+        # remain columns with NaN
+        d_ops = jnp.where(running, compute, 0.0) * phi
+        d_bw = jnp.where(running, bw, 0.0) * phi
+        dr_ops = jnp.maximum(rem_ops - d_ops, 0.0)  # post-drain, pre-retire
+        dr_rd = jnp.maximum(rem_rd - d_bw, 0.0)
+        dr_wr = jnp.maximum(rem_wr - d_bw, 0.0)
+        newly_done = running & (c_t <= phi * (1 + 1e-9))
+        keep = ~newly_done
+        now = now + phi
+        finish = jnp.where(newly_done, now, finish)
+        bneck = jnp.where(newly_done, code, bneck)
+        # busy-PE count: each PE with k running tasks contributes k · 1/k
+        alp_t = alp_t + phi * jnp.sum(runf / jnp.maximum(load_t, 1.0))
+        # phase_sim accumulates min(post-drain bytes, bw·phi) per running
+        # task — mirror it exactly so the backends agree on this field too
+        traffic = traffic + jnp.sum(
+            jnp.where(running, jnp.minimum(dr_rd + dr_wr, d_bw + d_bw), 0.0)
+        )
+        nph = nph + jnp.where(any_run, 1, 0)
+        return (
+            jnp.where(keep, dr_ops, 0.0), jnp.where(keep, dr_rd, 0.0),
+            jnp.where(keep, dr_wr, 0.0), completed | newly_done, now, finish,
+            bneck, kind_s, alp_t, traffic, nph,
+        )
+
+    state = (
+        enc.work_ops,
+        enc.read_bytes,
+        enc.write_bytes,
+        jnp.zeros((t,), bool),
+        jnp.float32(0.0),
+        jnp.zeros((t,), jnp.float32),
+        jnp.zeros((t,), jnp.int32),
+        jnp.zeros((3,), jnp.float32),
+        jnp.float32(0.0),
+        jnp.float32(0.0),
+        jnp.int32(0),
+    )
+    (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, alp_t, traffic, nph) = (
+        jax.lax.fori_loop(0, t, phase, state)
+    )
+
+    # ---- device-side PPA rollup + Eq.-7 fitness ----------------------
+    # dynamic energy is rate-independent (every task drains its totals;
+    # hops == 1 in the single-NoC regime), so it is a coefficient dot
+    wl_lat = jax.ops.segment_max(finish, enc.wl_id, num_segments=n_wl)
+    dyn_pj = jnp.sum(
+        row["pe_pj"][task_pe] * enc.work_ops
+        + (row["mem_pj"][task_mem] + row["noc_pj"]) * (enc.read_bytes + enc.write_bytes)
+    )
+    leak_w = jnp.sum(row["pe_leak"]) + jnp.sum(row["mem_leak"]) + row["noc_leak"]
+    energy = dyn_pj * 1e-12 + leak_w * now
+    power = jnp.where(now > 0, energy / jnp.maximum(now, 1e-30), 0.0)
+    onehot_mem = (task_mem[:, None] == jnp.arange(n_mem)[None, :]).astype(jnp.float32)
+    cap = enc.write_bytes @ onehot_mem
+    area = (
+        jnp.sum(row["pe_area"])
+        + jnp.sum(
+            row["mem_area_fixed"]
+            + row["mem_area_per_mb"] * jnp.maximum(cap, 1.0) / 1e6
+        )
+        + row["noc_area"]
+    )
+    dists = jnp.stack(
+        [
+            jnp.max((wl_lat - row["wl_budget"]) / row["wl_budget"]),
+            (power - row["power_budget"]) / row["power_budget"],
+            (area - row["area_budget"]) / row["area_budget"],
+        ]
+    )
+    fitness = jnp.sum(jnp.where(dists > 0, dists, row["alpha"] * dists))
+    return {
+        "latency_s": now,
+        "finish_s": finish,
+        "all_done": jnp.all(completed),
+        "bneck_code": bneck,
+        "bneck_kind_s": kind_s,
+        "alp_time_s": alp_t,
+        "traffic_bytes": traffic,
+        "n_phases": nph,
+        "wl_latency_s": wl_lat,
+        "energy_j": energy,
+        "power_w": power,
+        "area_mm2": area,
+        "fitness": fitness,
+    }
+
+
 def simulate_batch(
     enc: EncodedWorkload,
     rows: Dict[str, jnp.ndarray],
@@ -449,159 +609,13 @@ def simulate_batch(
     are congruent mod ``n_links`` — which is exact for *any* link count
     (the old segment-bucketed formulation silently dropped the bandwidth
     attribution of links ≥ its hardcoded segment count).
+
+    This is the XLA *reference* path; ``repro.kernels.phase_sim`` provides
+    the fused Pallas formulation of the same math (one launch over the
+    (B, T) grid, Mosaic on TPU / interpret elsewhere) selected via
+    ``JaxBatchedBackend(use_kernel=True)``.
     """
-
-    t = enc.work_ops.shape[0]
-    n_wl = len(enc.wl_names)
-    idx3 = jnp.arange(3)
-
-    def one(row: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
-        task_pe, task_mem = row["task_pe"], row["task_mem"]
-        n_mem = row["mem_bw"].shape[-1]
-        noc_bw, noc_links = row["noc_bw"], row["noc_links"]
-        # loop-invariant hoists: effective peak rates per task and the
-        # same-slot co-residency masks behind Eq. 1/2 (PE share) and Eq. 4
-        # (burst-proportional memory share)
-        peak_eff = row["pe_peak"][task_pe] * row["pe_accel"]
-        mem_peak = row["mem_bw"][task_mem]
-        same_pe = (task_pe[:, None] == task_pe[None, :]).astype(jnp.float32)
-        same_mem = (task_mem[:, None] == task_mem[None, :]).astype(jnp.float32)
-        links = jnp.maximum(noc_links, 1)
-
-        def phase(_, state):
-            rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, alp_t, traffic, nph = state
-            running = (~completed) & jnp.all(~enc.parent_mask | completed[None, :], axis=1)
-            runf = jnp.where(running, 1.0, 0.0)
-            burst_run = enc.burst * runf
-
-            # Eq. 1/2: preemptive equal share per PE slot
-            load_t = same_pe @ runf  # running tasks sharing my PE (incl. me)
-            compute = peak_eff / jnp.maximum(load_t, 1.0)
-
-            # Eq. 4: burst-proportional memory share (read/write channels
-            # split, but they see identical shares — one bandwidth suffices)
-            mem_t = same_mem @ burst_run
-            m_bw = mem_peak * enc.burst / jnp.maximum(mem_t, 1e-30)
-
-            # Eq. 3: round-robin link striping, burst arbitration within
-            # link; same link ⟺ running ranks congruent mod n_links
-            order = jnp.cumsum(runf)
-            same_link = (runf[:, None] * runf[None, :]) * jnp.where(
-                (order[:, None] - order[None, :]) % links == 0, 1.0, 0.0
-            )
-            link_t = same_link @ enc.burst
-            n_bw = noc_bw * enc.burst / jnp.maximum(link_t, 1e-30)
-
-            bw = jnp.minimum(m_bw, n_bw)
-            comp_t = rem_ops / compute
-            comm_t = jnp.maximum(rem_rd, rem_wr) / bw
-            c_t = jnp.where(running, jnp.maximum(comp_t, comm_t), BIG)
-            phi_raw = jnp.min(c_t)  # Eq. 6
-            any_run = phi_raw < BIG * 0.5
-            phi = jnp.where(any_run, phi_raw, 0.0)
-            phi_run = jnp.where(running, phi, 0.0)
-
-            # binding resource per running task (gables.bottleneck_of — note:
-            # attribution uses the task's *total* work over current rates, not
-            # the remaining work; compute wins ties, then mem vs noc by the
-            # tighter pipe)
-            tot_comp_t = enc.work_ops / compute
-            tot_comm_t = jnp.maximum(enc.read_bytes, enc.write_bytes) / bw
-            code = jnp.where(tot_comp_t >= tot_comm_t, 0, jnp.where(m_bw <= n_bw, 1, 2))
-            kind_s = kind_s + jnp.sum(
-                jnp.where(code[:, None] == idx3[None, :], phi_run[:, None], 0.0), axis=0
-            )
-
-            # mask rates BEFORE the phi multiply: slots hosting no running
-            # task price as inf bandwidth, and inf · 0 would poison the
-            # remain columns with NaN
-            d_ops = jnp.where(running, compute, 0.0) * phi
-            d_bw = jnp.where(running, bw, 0.0) * phi
-            dr_ops = jnp.maximum(rem_ops - d_ops, 0.0)  # post-drain, pre-retire
-            dr_rd = jnp.maximum(rem_rd - d_bw, 0.0)
-            dr_wr = jnp.maximum(rem_wr - d_bw, 0.0)
-            newly_done = running & (c_t <= phi * (1 + 1e-9))
-            keep = ~newly_done
-            now = now + phi
-            finish = jnp.where(newly_done, now, finish)
-            bneck = jnp.where(newly_done, code, bneck)
-            # busy-PE count: each PE with k running tasks contributes k · 1/k
-            alp_t = alp_t + phi * jnp.sum(runf / jnp.maximum(load_t, 1.0))
-            # phase_sim accumulates min(post-drain bytes, bw·phi) per running
-            # task — mirror it exactly so the backends agree on this field too
-            traffic = traffic + jnp.sum(
-                jnp.where(running, jnp.minimum(dr_rd + dr_wr, d_bw + d_bw), 0.0)
-            )
-            nph = nph + jnp.where(any_run, 1, 0)
-            return (
-                jnp.where(keep, dr_ops, 0.0), jnp.where(keep, dr_rd, 0.0),
-                jnp.where(keep, dr_wr, 0.0), completed | newly_done, now, finish,
-                bneck, kind_s, alp_t, traffic, nph,
-            )
-
-        state = (
-            enc.work_ops,
-            enc.read_bytes,
-            enc.write_bytes,
-            jnp.zeros((t,), bool),
-            jnp.float32(0.0),
-            jnp.zeros((t,), jnp.float32),
-            jnp.zeros((t,), jnp.int32),
-            jnp.zeros((3,), jnp.float32),
-            jnp.float32(0.0),
-            jnp.float32(0.0),
-            jnp.int32(0),
-        )
-        (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, alp_t, traffic, nph) = (
-            jax.lax.fori_loop(0, t, phase, state)
-        )
-
-        # ---- device-side PPA rollup + Eq.-7 fitness ----------------------
-        # dynamic energy is rate-independent (every task drains its totals;
-        # hops == 1 in the single-NoC regime), so it is a coefficient dot
-        wl_lat = jax.ops.segment_max(finish, enc.wl_id, num_segments=n_wl)
-        dyn_pj = jnp.sum(
-            row["pe_pj"][task_pe] * enc.work_ops
-            + (row["mem_pj"][task_mem] + row["noc_pj"]) * (enc.read_bytes + enc.write_bytes)
-        )
-        leak_w = jnp.sum(row["pe_leak"]) + jnp.sum(row["mem_leak"]) + row["noc_leak"]
-        energy = dyn_pj * 1e-12 + leak_w * now
-        power = jnp.where(now > 0, energy / jnp.maximum(now, 1e-30), 0.0)
-        onehot_mem = (task_mem[:, None] == jnp.arange(n_mem)[None, :]).astype(jnp.float32)
-        cap = enc.write_bytes @ onehot_mem
-        area = (
-            jnp.sum(row["pe_area"])
-            + jnp.sum(
-                row["mem_area_fixed"]
-                + row["mem_area_per_mb"] * jnp.maximum(cap, 1.0) / 1e6
-            )
-            + row["noc_area"]
-        )
-        dists = jnp.stack(
-            [
-                jnp.max((wl_lat - row["wl_budget"]) / row["wl_budget"]),
-                (power - row["power_budget"]) / row["power_budget"],
-                (area - row["area_budget"]) / row["area_budget"],
-            ]
-        )
-        fitness = jnp.sum(jnp.where(dists > 0, dists, row["alpha"] * dists))
-        return {
-            "latency_s": now,
-            "finish_s": finish,
-            "all_done": jnp.all(completed),
-            "bneck_code": bneck,
-            "bneck_kind_s": kind_s,
-            "alp_time_s": alp_t,
-            "traffic_bytes": traffic,
-            "n_phases": nph,
-            "wl_latency_s": wl_lat,
-            "energy_j": energy,
-            "power_w": power,
-            "area_mm2": area,
-            "fitness": fitness,
-        }
-
-    return jax.vmap(one)(rows)
+    return jax.vmap(lambda row: simulate_one(enc, row))(rows)
 
 
 def encode_batch(

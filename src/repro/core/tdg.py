@@ -44,12 +44,14 @@ class TaskGraph:
         self.parents: Dict[str, List[str]] = {}
         self.children: Dict[str, List[str]] = {}
         self.edge_bytes: Dict[Tuple[str, str], float] = {}
+        self._par_cache: Dict[str, List[str]] = {}  # parallel_tasks_of memo
 
     def add_task(self, task: Task) -> Task:
         assert task.name not in self.tasks, task.name
         self.tasks[task.name] = task
         self.parents.setdefault(task.name, [])
         self.children.setdefault(task.name, [])
+        self._par_cache.clear()
         return task
 
     def add_edge(self, src: str, dst: str, nbytes: float = 0.0) -> None:
@@ -57,6 +59,7 @@ class TaskGraph:
         self.children[src].append(dst)
         self.parents[dst].append(src)
         self.edge_bytes[(src, dst)] = nbytes
+        self._par_cache.clear()
 
     # ---- structural queries -------------------------------------------
     def roots(self) -> List[str]:
@@ -121,9 +124,17 @@ class TaskGraph:
         return float(len(self.concurrent_pairs()) + 1) if len(self.tasks) > 1 else 1.0
 
     def parallel_tasks_of(self, name: str) -> List[str]:
-        anc = self.ancestors(name)
-        desc = {n for n in self.tasks if name in self.ancestors(n)}
-        return [n for n in self.tasks if n != name and n not in anc and n not in desc]
+        # memoized: the explorer's Algorithm-1 move selection asks this every
+        # iteration, and the O(T²) ancestor walks dominated its host time.
+        # The cache clears on any graph edit (add_task/add_edge).
+        hit = self._par_cache.get(name)
+        if hit is None:
+            anc = self.ancestors(name)
+            desc = {n for n in self.tasks if name in self.ancestors(n)}
+            hit = self._par_cache[name] = [
+                n for n in self.tasks if n != name and n not in anc and n not in desc
+            ]
+        return hit
 
 
 def merge_graphs(graphs: Iterable[TaskGraph], name: str = "combined") -> TaskGraph:

@@ -1,0 +1,303 @@
+"""Pallas kernel for the FARSI phase-driven simulator (fused batch pricing).
+
+Grid: ``(B,)`` — one program per candidate design, each owning one ``(1, T)``
+tile row of every per-design input and running the full phase loop for its
+candidate. The per-phase work is the same co-residency formulation as the
+XLA reference (`phase_sim_jax.simulate_one`): same-slot (T, T) matvecs for
+the PE/MEM shares (Eq. 1/2/4), rank-residue link striping for the NoC
+(Eq. 3), Eq.-6 phase length, then the Eq.-7 fitness/energy/area rollup —
+fused into ONE launch instead of a `vmap` of `fori_loop`, so every
+per-phase intermediate lives on-chip for the whole candidate instead of
+round-tripping through XLA's loop-carried HLO buffers.
+
+VMEM scratch holds the loop-invariant stage: the one-hot task→slot maps
+(T, S) and the same-PE / same-MEM co-residency masks (T, T), computed once
+per program and re-read every phase. Working set at (T=128, S=64):
+4·(T·S + T·T) ≈ 0.3 MB — far under the ~16 MB VMEM budget; T is padded to
+the lane width by ``ops.phase_sim``, with padded tasks born *completed* so
+they never run, never join a share, and contribute zero to every rollup.
+
+Gathers are expressed as one-hot matmuls (``onehot_pe @ pe_coeffs``) rather
+than vector-indexed loads — MXU-shaped on TPU and exact in f32 for the
+0/1 masks involved. Interpret mode (CPU) is bit-compatible with Mosaic
+compilation up to f32 reassociation; parity ≤ 1e-5 against the oracle is
+asserted in tests/test_phase_sim_kernel.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 1e30
+
+# scal output column layout (see _phase_sim_kernel rollup). The first 9
+# columns + the kind triple mirror backend._SCAL_COLS — keep them in sync so
+# the backend's device-side repack of the ops-layer dict folds to a no-op.
+SCAL_COLS = (
+    "latency_s", "energy_j", "power_w", "area_mm2", "fitness",
+    "alp_time_s", "traffic_bytes", "n_phases", "all_done",
+    "kind_pe_s", "kind_mem_s", "kind_noc_s",
+)
+N_SCAL = len(SCAL_COLS)
+
+# nocs input column layout (packed per-candidate scalars)
+NOCS_COLS = (
+    "noc_bw", "noc_links", "noc_leak", "noc_area", "noc_pj",
+    "power_budget", "area_budget", "alpha",
+)
+N_NOCS = len(NOCS_COLS)
+
+
+def _phase_sim_kernel(
+    # --- static workload tensors (shared by every program) ---------------
+    work_ref,   # (1, T) f32  total ops per task
+    rd_ref,     # (1, T) f32  read bytes
+    wr_ref,     # (1, T) f32  write bytes
+    burst_ref,  # (1, T) f32  burst bytes
+    pmask_ref,  # (T, T) f32  [i, j] = 1 iff j is a parent of i
+    wlhot_ref,  # (T, NW) f32 one-hot of the task's workload id
+    # --- per-candidate rows (one (1, X) tile per program) ----------------
+    task_pe_ref,   # (1, T) i32
+    task_mem_ref,  # (1, T) i32
+    accel_ref,     # (1, T) f32
+    pe_peak_ref,   # (1, S) f32
+    pe_pj_ref,     # (1, S) f32
+    pe_leak_ref,   # (1, S) f32
+    pe_area_ref,   # (1, S) f32
+    mem_bw_ref,    # (1, S) f32
+    mem_pj_ref,    # (1, S) f32
+    mem_leak_ref,  # (1, S) f32
+    mem_af_ref,    # (1, S) f32  fixed area
+    mem_amb_ref,   # (1, S) f32  area per MB
+    nocs_ref,      # (1, N_NOCS) f32 packed scalars (NOCS_COLS order)
+    wlbud_ref,     # (1, NW) f32 per-workload latency budget
+    # --- outputs ----------------------------------------------------------
+    finish_ref,  # (1, T) f32
+    bneck_ref,   # (1, T) i32
+    wllat_ref,   # (1, NW) f32
+    scal_ref,    # (1, N_SCAL) f32 (SCAL_COLS order)
+    # --- VMEM scratch (loop-invariant stage, reused across phases) -------
+    ohp_ref,       # (T, S) f32 one-hot task→PE-slot
+    ohm_ref,       # (T, S) f32 one-hot task→MEM-slot
+    same_pe_ref,   # (T, T) f32 co-residency on the same PE slot
+    same_mem_ref,  # (T, T) f32 co-residency on the same MEM slot
+    *,
+    t_real: int,
+):
+    t = work_ref.shape[1]
+    s_pe = pe_peak_ref.shape[1]
+    s_mem = mem_bw_ref.shape[1]  # PE/MEM slot axes pad independently
+    f32 = jnp.float32
+
+    work = work_ref[0]
+    rd_b = rd_ref[0]
+    wr_b = wr_ref[0]
+    burst = burst_ref[0]
+    pmask = pmask_ref[...]
+    task_pe = task_pe_ref[0]
+    task_mem = task_mem_ref[0]
+
+    # ---- loop-invariant stage into VMEM scratch -------------------------
+    ohp_ref[...] = (
+        task_pe[:, None] == jax.lax.broadcasted_iota(jnp.int32, (t, s_pe), 1)
+    ).astype(f32)
+    ohm_ref[...] = (
+        task_mem[:, None] == jax.lax.broadcasted_iota(jnp.int32, (t, s_mem), 1)
+    ).astype(f32)
+    dot = functools.partial(jnp.dot, preferred_element_type=f32)
+    same_pe_ref[...] = dot(ohp_ref[...], ohp_ref[...].T)
+    same_mem_ref[...] = dot(ohm_ref[...], ohm_ref[...].T)
+
+    peak_eff = dot(ohp_ref[...], pe_peak_ref[0]) * accel_ref[0]
+    mem_peak = dot(ohm_ref[...], mem_bw_ref[0])
+    links = jnp.maximum(nocs_ref[0, 1], 1.0)
+    noc_bw = nocs_ref[0, 0]
+
+    # padded tasks (index ≥ t_real) are born completed: they never run,
+    # never enter a share, and their zero work/bytes vanish in every sum
+    task_ids = jax.lax.broadcasted_iota(jnp.int32, (t, 1), 0)[:, 0]
+    completed0 = task_ids >= t_real
+    kind_ids = jax.lax.broadcasted_iota(jnp.int32, (t, 3), 1)
+
+    def phase(_, state):
+        rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, alp_t, traffic, nph = state
+        same_pe = same_pe_ref[...]
+        same_mem = same_mem_ref[...]
+        # ready ⟺ zero incomplete parents (counts are exact small ints)
+        pending = dot(pmask, jnp.where(completed, 0.0, 1.0))
+        running = (~completed) & (pending < 0.5)
+        runf = jnp.where(running, 1.0, 0.0)
+        burst_run = burst * runf
+
+        # Eq. 1/2: preemptive equal share per PE slot
+        load_t = dot(same_pe, runf)
+        compute = peak_eff / jnp.maximum(load_t, 1.0)
+
+        # Eq. 4: burst-proportional memory share
+        mem_t = dot(same_mem, burst_run)
+        m_bw = mem_peak * burst / jnp.maximum(mem_t, 1e-30)
+
+        # Eq. 3: round-robin link striping — same link ⟺ running ranks
+        # congruent mod n_links (rank differences are exact ints in f32)
+        order = jnp.cumsum(runf)
+        same_link = (runf[:, None] * runf[None, :]) * jnp.where(
+            (order[:, None] - order[None, :]) % links == 0, 1.0, 0.0
+        )
+        link_t = dot(same_link, burst)
+        n_bw = noc_bw * burst / jnp.maximum(link_t, 1e-30)
+
+        bw = jnp.minimum(m_bw, n_bw)
+        comp_t = rem_ops / compute
+        comm_t = jnp.maximum(rem_rd, rem_wr) / bw
+        c_t = jnp.where(running, jnp.maximum(comp_t, comm_t), BIG)
+        phi_raw = jnp.min(c_t)  # Eq. 6
+        any_run = phi_raw < BIG * 0.5
+        phi = jnp.where(any_run, phi_raw, 0.0)
+        phi_run = jnp.where(running, phi, 0.0)
+
+        # binding resource per running task (total work over current rates;
+        # compute wins ties, then mem vs noc by the tighter pipe)
+        tot_comp_t = work / compute
+        tot_comm_t = jnp.maximum(rd_b, wr_b) / bw
+        code = jnp.where(tot_comp_t >= tot_comm_t, 0, jnp.where(m_bw <= n_bw, 1, 2))
+        kind_s = kind_s + jnp.sum(
+            jnp.where(code[:, None] == kind_ids, phi_run[:, None], 0.0), axis=0
+        )
+
+        # mask rates BEFORE the phi multiply (inf · 0 would poison remains)
+        d_ops = jnp.where(running, compute, 0.0) * phi
+        d_bw = jnp.where(running, bw, 0.0) * phi
+        dr_ops = jnp.maximum(rem_ops - d_ops, 0.0)
+        dr_rd = jnp.maximum(rem_rd - d_bw, 0.0)
+        dr_wr = jnp.maximum(rem_wr - d_bw, 0.0)
+        newly_done = running & (c_t <= phi * (1 + 1e-9))
+        keep = ~newly_done
+        now = now + phi
+        finish = jnp.where(newly_done, now, finish)
+        bneck = jnp.where(newly_done, code, bneck)
+        alp_t = alp_t + phi * jnp.sum(runf / jnp.maximum(load_t, 1.0))
+        traffic = traffic + jnp.sum(
+            jnp.where(running, jnp.minimum(dr_rd + dr_wr, d_bw + d_bw), 0.0)
+        )
+        nph = nph + jnp.where(any_run, 1.0, 0.0)
+        return (
+            jnp.where(keep, dr_ops, 0.0), jnp.where(keep, dr_rd, 0.0),
+            jnp.where(keep, dr_wr, 0.0), completed | newly_done, now, finish,
+            bneck, kind_s, alp_t, traffic, nph,
+        )
+
+    state = (
+        work, rd_b, wr_b, completed0,
+        f32(0.0), jnp.zeros((t,), f32), jnp.zeros((t,), jnp.int32),
+        jnp.zeros((3,), f32), f32(0.0), f32(0.0), f32(0.0),
+    )
+    # every phase retires ≥ 1 of the t_real live tasks, so t_real iterations
+    # suffice; once all are done, phases are zero-length no-ops
+    (_, _, _, completed, now, finish, bneck, kind_s, alp_t, traffic, nph) = (
+        jax.lax.fori_loop(0, t_real, phase, state)
+    )
+
+    # ---- device-side PPA rollup + Eq.-7 fitness -------------------------
+    wlhot = wlhot_ref[...]
+    wl_lat = jnp.max(jnp.where(wlhot > 0.5, finish[:, None], 0.0), axis=0)
+    dyn_pj = jnp.sum(
+        dot(ohp_ref[...], pe_pj_ref[0]) * work
+        + (dot(ohm_ref[...], mem_pj_ref[0]) + nocs_ref[0, 4]) * (rd_b + wr_b)
+    )
+    leak_w = jnp.sum(pe_leak_ref[0]) + jnp.sum(mem_leak_ref[0]) + nocs_ref[0, 2]
+    energy = dyn_pj * 1e-12 + leak_w * now
+    power = jnp.where(now > 0, energy / jnp.maximum(now, 1e-30), 0.0)
+    cap = dot(wr_b, ohm_ref[...])  # per-MEM-slot resident bytes
+    area = (
+        jnp.sum(pe_area_ref[0])
+        + jnp.sum(mem_af_ref[0] + mem_amb_ref[0] * jnp.maximum(cap, 1.0) / 1e6)
+        + nocs_ref[0, 3]
+    )
+    wlbud = wlbud_ref[0]
+    alpha = nocs_ref[0, 7]
+    dists = jnp.stack([
+        jnp.max((wl_lat - wlbud) / wlbud),
+        (power - nocs_ref[0, 5]) / nocs_ref[0, 5],
+        (area - nocs_ref[0, 6]) / nocs_ref[0, 6],
+    ])
+    fitness = jnp.sum(jnp.where(dists > 0, dists, alpha * dists))
+
+    finish_ref[0] = finish
+    bneck_ref[0] = bneck
+    wllat_ref[0] = wl_lat
+    scal_ref[0] = jnp.stack([
+        now, energy, power, area, fitness, alp_t, traffic, nph,
+        jnp.where(jnp.all(completed), 1.0, 0.0),
+        kind_s[0], kind_s[1], kind_s[2],
+    ])
+
+
+def phase_sim_batch(
+    work: jax.Array,      # (1, T) f32, T padded
+    rd: jax.Array,        # (1, T)
+    wr: jax.Array,        # (1, T)
+    burst: jax.Array,     # (1, T)
+    pmask: jax.Array,     # (T, T)
+    wlhot: jax.Array,     # (T, NW)
+    task_pe: jax.Array,   # (B, T) i32
+    task_mem: jax.Array,  # (B, T) i32
+    accel: jax.Array,     # (B, T)
+    pe_coeffs: Dict[str, jax.Array],   # 4 × (B, S)
+    mem_coeffs: Dict[str, jax.Array],  # 5 × (B, S)
+    nocs: jax.Array,      # (B, N_NOCS)
+    wlbud: jax.Array,     # (B, NW)
+    *,
+    t_real: int,
+    interpret: bool = False,
+):
+    """One fused launch over the (B, T) grid; returns (finish, bneck,
+    wl_latency, scal) with the scal columns laid out as ``SCAL_COLS``."""
+    b, t = task_pe.shape
+    s_pe = pe_coeffs["pe_peak"].shape[1]
+    s_mem = mem_coeffs["mem_bw"].shape[1]
+    n_wl = wlhot.shape[1]
+
+    shared = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+    perb = lambda w: pl.BlockSpec((1, w), lambda i: (i, 0))
+
+    kernel = functools.partial(_phase_sim_kernel, t_real=t_real)
+    finish, bneck, wllat, scal = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            shared((1, t)), shared((1, t)), shared((1, t)), shared((1, t)),
+            shared((t, t)), shared((t, n_wl)),
+            perb(t), perb(t), perb(t),
+            perb(s_pe), perb(s_pe), perb(s_pe), perb(s_pe),
+            perb(s_mem), perb(s_mem), perb(s_mem), perb(s_mem), perb(s_mem),
+            perb(N_NOCS), perb(n_wl),
+        ],
+        out_specs=[perb(t), perb(t), perb(n_wl), perb(N_SCAL)],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t), jnp.float32),
+            jax.ShapeDtypeStruct((b, t), jnp.int32),
+            jax.ShapeDtypeStruct((b, n_wl), jnp.float32),
+            jax.ShapeDtypeStruct((b, N_SCAL), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((t, s_pe), jnp.float32),
+            pltpu.VMEM((t, s_mem), jnp.float32),
+            pltpu.VMEM((t, t), jnp.float32),
+            pltpu.VMEM((t, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        work, rd, wr, burst, pmask, wlhot,
+        task_pe, task_mem, accel,
+        pe_coeffs["pe_peak"], pe_coeffs["pe_pj"],
+        pe_coeffs["pe_leak"], pe_coeffs["pe_area"],
+        mem_coeffs["mem_bw"], mem_coeffs["mem_pj"], mem_coeffs["mem_leak"],
+        mem_coeffs["mem_area_fixed"], mem_coeffs["mem_area_per_mb"],
+        nocs, wlbud,
+    )
+    return finish, bneck, wllat, scal

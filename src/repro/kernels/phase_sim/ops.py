@@ -1,0 +1,120 @@
+"""Drop-in wrapper for the fused phase-sim kernel.
+
+``phase_sim(enc, rows)`` accepts exactly what
+``repro.core.phase_sim_jax.simulate_batch`` accepts (an
+:class:`EncodedWorkload` plus the padded per-design rows dict) and returns
+the same output dict, so ``JaxBatchedBackend`` can swap the two via its
+``use_kernel`` knob without touching buffers or decode.
+
+The wrapper owns the layout differences:
+
+  * the task axis is padded to the kernel tile width — a multiple of 128
+    (the TPU lane count) under Mosaic, a multiple of 8 in interpret mode so
+    CPU CI exercises the padded-task masking on every run;
+  * per-candidate scalars (NoC knobs + Eq.-7 budgets) are packed into one
+    ``(B, 8)`` array, and scalar outputs come back as one ``(B, 12)``
+    column block (``kernel.SCAL_COLS``) that is unpacked here;
+  * the workload one-hot used for the per-workload latency max is built
+    host-side once per trace.
+
+Call it under ``jax.jit`` (the backend does): tracing folds all the
+marshalling into the launch, so none of it reruns per dispatch.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.phase_sim_jax import EncodedWorkload
+
+from .kernel import N_NOCS, SCAL_COLS, phase_sim_batch
+
+# kernel tile width of the task axis: TPU lanes under Mosaic, one VPU
+# sublane row in interpret mode (still > 1 so padded-task masking is
+# exercised by CPU CI, without inflating the tiny interpret grids)
+LANE = 128
+INTERPRET_LANE = 8
+
+
+def _pad_axis(a: jnp.ndarray, width: int, value) -> jnp.ndarray:
+    pad = width - a.shape[-1]
+    if pad == 0:
+        return a
+    return jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)], constant_values=value)
+
+
+def phase_sim(
+    enc: EncodedWorkload,
+    rows: Dict[str, jnp.ndarray],
+    *,
+    interpret: bool = False,
+) -> Dict[str, jnp.ndarray]:
+    """Fused-kernel counterpart of ``simulate_batch`` (same contract)."""
+    t_real = enc.work_ops.shape[0]
+    n_wl = len(enc.wl_names)
+    lane = INTERPRET_LANE if interpret else LANE
+    t = ((t_real + lane - 1) // lane) * lane
+
+    f32 = jnp.float32
+    row1 = lambda a: _pad_axis(jnp.asarray(a, f32)[None, :], t, 0.0)
+    work, rd, wr, burst = (
+        row1(enc.work_ops), row1(enc.read_bytes), row1(enc.write_bytes), row1(enc.burst)
+    )
+    pmask = jnp.zeros((t, t), f32).at[:t_real, :t_real].set(
+        jnp.asarray(enc.parent_mask, f32)
+    )
+    wlhot = jnp.zeros((t, n_wl), f32).at[:t_real].set(
+        jnp.asarray(np.asarray(enc.wl_id)[:, None] == np.arange(n_wl)[None, :], np.float32)
+    )
+
+    task_pe = _pad_axis(jnp.asarray(rows["task_pe"], jnp.int32), t, 0)
+    task_mem = _pad_axis(jnp.asarray(rows["task_mem"], jnp.int32), t, 0)
+    accel = _pad_axis(jnp.asarray(rows["pe_accel"], f32), t, 1.0)
+
+    pe_coeffs = {k: jnp.asarray(rows[k], f32)
+                 for k in ("pe_peak", "pe_pj", "pe_leak", "pe_area")}
+    mem_coeffs = {k: jnp.asarray(rows[k], f32)
+                  for k in ("mem_bw", "mem_pj", "mem_leak",
+                            "mem_area_fixed", "mem_area_per_mb")}
+    nocs = jnp.stack(
+        [
+            jnp.asarray(rows["noc_bw"], f32),
+            jnp.asarray(rows["noc_links"], f32),
+            jnp.asarray(rows["noc_leak"], f32),
+            jnp.asarray(rows["noc_area"], f32),
+            jnp.asarray(rows["noc_pj"], f32),
+            jnp.asarray(rows["power_budget"], f32),
+            jnp.asarray(rows["area_budget"], f32),
+            jnp.asarray(rows["alpha"], f32),
+        ],
+        axis=1,
+    )
+    assert nocs.shape[1] == N_NOCS
+    wlbud = jnp.asarray(rows["wl_budget"], f32)
+
+    finish, bneck, wllat, scal = phase_sim_batch(
+        work, rd, wr, burst, pmask, wlhot,
+        task_pe, task_mem, accel, pe_coeffs, mem_coeffs, nocs, wlbud,
+        t_real=t_real, interpret=interpret,
+    )
+
+    col = {name: scal[:, i] for i, name in enumerate(SCAL_COLS)}
+    return {
+        "latency_s": col["latency_s"],
+        "finish_s": finish[:, :t_real],
+        "all_done": col["all_done"] > 0.5,
+        "bneck_code": bneck[:, :t_real],
+        "bneck_kind_s": jnp.stack(
+            [col["kind_pe_s"], col["kind_mem_s"], col["kind_noc_s"]], axis=1
+        ),
+        "alp_time_s": col["alp_time_s"],
+        "traffic_bytes": col["traffic_bytes"],
+        "n_phases": col["n_phases"].astype(jnp.int32),
+        "wl_latency_s": wllat,
+        "energy_j": col["energy_j"],
+        "power_w": col["power_w"],
+        "area_mm2": col["area_mm2"],
+        "fitness": col["fitness"],
+    }

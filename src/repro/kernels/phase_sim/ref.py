@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused phase-sim kernel.
+
+The oracle *is* the production XLA path — ``vmap`` of
+``repro.core.phase_sim_jax.simulate_one`` — re-exported here so the kernel
+package follows the repo's ``{kernel,ops,ref}`` convention without forking
+the simulator physics into a second copy. ``simulate_one`` is already
+asserted equivalent to the scalar Python simulator
+(tests/test_phase_sim_jax.py, tests/test_backend_campaign.py); the Pallas
+kernel is asserted ≤ 1e-5 against *this* function, so the chain
+
+    phase_sim (Pallas) ≡ phase_sim_ref ≡ simulate_batch ≡ phase_sim.simulate
+
+is closed by tests at every link.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.phase_sim_jax import EncodedWorkload, simulate_one
+
+
+def phase_sim_ref(
+    enc: EncodedWorkload, rows: Dict[str, jnp.ndarray]
+) -> Dict[str, jnp.ndarray]:
+    """Batched phase simulation + Eq.-7 scoring: the vmap'd reference."""
+    return jax.vmap(lambda row: simulate_one(enc, row))(rows)

@@ -18,6 +18,7 @@ from repro.core import (
     random_single_noc_designs,
 )
 from repro.core.backend import BackendStats
+from repro.core.backend import Candidate as JaxCandidate
 from repro.core.blocks import make_gpp, make_noc
 
 REL_TOL = 1e-4  # acceptance bar: backends agree on latency within 1e-4
@@ -144,6 +145,96 @@ def test_explorer_backend_config_selection():
         make_backend("nope", g, db)
 
 
+# ---- speculative dispatch pipeline ---------------------------------------
+def test_pipelined_explorer_identical_move_sequence():
+    """Acceptance bar: the two-deep speculative pipeline must replay the
+    EXACT search — same (iteration, move, accepted) sequence, same committed
+    n_sims, same best distance — as the unpipelined coroutine under a fixed
+    seed, in every mode (off / adaptive-auto / always-speculate)."""
+    db = HardwareDatabase()
+    g = audio()
+    bud = calibrated_budget(db)
+    results = []
+    for pipe in (False, None, True):
+        jx = JaxBatchedBackend(g, db)
+        res = Explorer(
+            g, db, bud,
+            ExplorerConfig(max_iterations=60, seed=7, pipeline=pipe),
+            backend=jx,
+        ).run()
+        results.append(res)
+    seqs = [
+        [(h["iteration"], h["move"], h["accepted"]) for h in r.history]
+        for r in results
+    ]
+    assert seqs[0] == seqs[1] == seqs[2]
+    assert results[0].n_sims == results[1].n_sims == results[2].n_sims
+    assert not results[0].pipelined and results[1].pipelined and results[2].pipelined
+    assert results[0].n_sims_wasted == 0 and results[0].n_spec_hits == 0
+    d0 = results[0].best_distance.city_block()
+    for r in results[1:]:
+        assert abs(r.best_distance.city_block() - d0) <= 1e-12 * max(abs(d0), 1.0)
+
+
+def test_pipeline_overlaps_dispatches_and_flush_drains():
+    """With speculation forced on, a second batch must be submitted while the
+    first is still un-consumed (n_inflight_max ≥ 2 — the host-encode/device-
+    compute overlap the pipeline exists for), and flush() must drain
+    abandoned speculative dispatches."""
+    db = HardwareDatabase()
+    g = audio()
+    bud = calibrated_budget(db)
+    jx = JaxBatchedBackend(g, db)
+    res = Explorer(
+        g, db, bud,
+        ExplorerConfig(max_iterations=40, seed=5, pipeline=True),
+        backend=jx,
+    ).run()
+    stats = jx.stats()
+    assert stats.n_inflight_max >= 2, stats
+    # run() flushed on exit: nothing left in flight
+    assert not jx._inflight
+    # speculation happened (hits or misses — seed-dependent mix)
+    assert res.n_spec_hits + res.n_sims_wasted > 0
+    # handles issued before an explicit flush stay readable after it
+    designs = random_single_noc_designs(g, 3, seed=2)
+    cands = [JaxCandidate.of_design(d) for d in designs]
+    handles = jx.evaluate_candidates(cands)
+    jx.flush()
+    assert all(h.result().latency_s > 0 for h in handles)
+
+
+def test_adopt_encoding_invalidates_on_fallback_winner():
+    """Accepting a fallback-priced (e.g. topology) move mutates the base
+    design without producing a row encoding — adopt_encoding must DROP the
+    previously adopted encoding rather than leave a stale one (regression:
+    phantom missing-block KeyErrors deep into multi-seed campaigns)."""
+    from repro.core.backend import _ReadyHandle
+    from repro.core.phase_sim_jax import EncodedDesign
+
+    db = HardwareDatabase()
+    g = edge_detection()
+    jx = JaxBatchedBackend(g, db)
+    d = random_single_noc_designs(g, 1, seed=3)[0]
+    cand = JaxCandidate.of_design(d)
+    (h,) = jx.evaluate_candidates([cand])
+    h.result()
+    jx.adopt_encoding(h)
+    assert id(d) in jx._adopted
+    # same design comes back priced by the fallback path and gets accepted
+    ready = _ReadyHandle(h.result(), 0.0, cand)
+    jx.adopt_encoding(ready)
+    assert id(d) not in jx._adopted
+    # and a subsequent dispatch re-encodes from the real object graph
+    (h2,) = jx.evaluate_candidates([JaxCandidate.of_design(d)])
+    assert abs(h2.result().latency_s - h.result().latency_s) < 1e-12
+    # re-adopting the fresh row matches a from-scratch encode of the design
+    jx.adopt_encoding(h2)
+    fresh = EncodedDesign.of(d, g, db, jx._enc)
+    assert set(jx._adopted[id(d)][1].pe_slot) == set(fresh.pe_slot)
+    assert set(jx._adopted[id(d)][1].mem_slot) == set(fresh.mem_slot)
+
+
 # ---- campaign ------------------------------------------------------------
 def test_campaign_smoke_two_seeds_two_workloads():
     """2 seeds × 2 workloads: per-run results come back, n_sims aggregates
@@ -166,10 +257,19 @@ def test_campaign_smoke_two_seeds_two_workloads():
     assert set(res.backend_stats) == {"ed", "audio"}
     assert isinstance(res.backend_stats["ed"], BackendStats)
     for wl, prefix in (("ed", "ed."), ("audio", "audio.")):
-        per_run = sum(r.n_sims for n, r in res.runs.items() if n.startswith(prefix))
+        # backend counts every dispatched candidate, including batches the
+        # pipelined explorers speculated and threw away; per-run n_sims is
+        # committed-only — together they account for the backend exactly
+        per_run = sum(
+            r.n_sims + r.n_sims_wasted
+            for n, r in res.runs.items() if n.startswith(prefix)
+        )
         assert res.backend_stats[wl].n_sims == per_run
         # cross-batched: far fewer dispatches than sims (≥2 runs per dispatch)
         assert res.backend_stats[wl].n_dispatches < per_run
+    assert res.aggregate["n_sims_total"] + res.aggregate["n_sims_wasted_total"] == sum(
+        s.n_sims for s in res.backend_stats.values()
+    )
     assert res.aggregate["sim_wall_s_total"] > 0.0
     assert res.converged_runs()
 

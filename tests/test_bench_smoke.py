@@ -1,9 +1,16 @@
 """Perf-regression guard: `python -m benchmarks.run --smoke` must pass in
 tier-1 CI. The smoke mode prices one neighbour-candidate batch through both
 backends at tiny sizes and *asserts* (1) the JAX array-native path is at
-least as fast as the scalar Python path and (2) both agree on the winning
-candidate's latency — so a regression in the incremental-encoding / lazy-
-decode hot path fails fast instead of silently eroding the BENCH numbers."""
+least as fast as the scalar Python path, (2) both agree on the winning
+candidate's latency, (3) the fused Pallas phase-sim kernel matches the XLA
+reference path ≤ 1e-5 on the fitness column, and (4) the pipeline stall
+guard: with speculation forced on, a second dispatch is submitted while the
+first is still un-consumed (``n_inflight_max ≥ 2`` — host encode
+overlapping device scoring), the pipelined search replays the unpipelined
+accepted-move sequence exactly, and the jit cache stays at ``n_compiles ≤
+4``. A regression in the incremental-encoding / lazy-decode / speculative-
+dispatch hot path fails fast instead of silently eroding the BENCH
+numbers."""
 import os
 import subprocess
 import sys
@@ -19,5 +26,6 @@ def test_benchmarks_smoke_cli():
     )
     assert out.returncode == 0, out.stdout + out.stderr
     assert "simbackend.smoke" in out.stdout, out.stdout
-    # smoke must never touch the tracked trajectory file
+    # smoke must never touch the tracked trajectory file nor its root mirror
     assert "wrote" not in out.stdout
+    assert "mirror" not in out.stdout
