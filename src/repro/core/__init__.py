@@ -8,6 +8,7 @@ from .backend import (
     JaxBatchedBackend,
     PythonBackend,
     SimHandle,
+    SimTelemetry,
     SimulatorBackend,
     make_backend,
 )
@@ -22,8 +23,19 @@ from .event_sim import simulate_events
 from .explorer import AWARENESS_LEVELS, ExplorationResult, Explorer, ExplorerConfig
 from .gables import TaskRates, bottleneck_of, completion_time, phase_rates
 from .phase_sim import SimResult, simulate
+from .policy import (
+    POLICIES,
+    BottleneckRelaxation,
+    FarsiPolicy,
+    Focus,
+    HeuristicPolicy,
+    LocalityExploitation,
+    NaiveSA,
+    make_policy,
+)
 from .tdg import Task, TaskGraph, merge_graphs, workload_of
 from .workloads import (
+    Scenario,
     all_workloads,
     ar_complex,
     audio,
@@ -31,6 +43,7 @@ from .workloads import (
     cava,
     edge_detection,
     paper_budget,
+    synthetic_family,
 )
 
 __all__ = [
@@ -60,6 +73,15 @@ __all__ = [
     "TaskGraph",
     "TaskRates",
     "AWARENESS_LEVELS",
+    "POLICIES",
+    "BottleneckRelaxation",
+    "FarsiPolicy",
+    "Focus",
+    "HeuristicPolicy",
+    "LocalityExploitation",
+    "NaiveSA",
+    "Scenario",
+    "SimTelemetry",
     "all_workloads",
     "ar_complex",
     "audio",
@@ -71,6 +93,8 @@ __all__ = [
     "edge_detection",
     "make_accelerator",
     "make_backend",
+    "make_policy",
+    "synthetic_family",
     "make_gpp",
     "make_mem",
     "make_noc",

@@ -41,7 +41,7 @@ from typing import Dict, Iterator, List, Optional, Protocol, Sequence, runtime_c
 import numpy as np
 
 from .blocks import BlockKind
-from .budgets import Budget, distance
+from .budgets import Budget, Distance, distance
 from .database import HardwareDatabase
 from .design import Design
 from .moves import MoveDelta, MoveSpec, apply_spec
@@ -167,6 +167,19 @@ class SimHandle(Protocol):
         """Full SimResult; reconstructed on first access."""
         ...
 
+    def telemetry(self) -> "SimTelemetry":
+        """Selection-grade view (device bottleneck columns + Eq.-7
+        distance) — what the heuristic-policy layer reasons over instead of
+        a full decode. Same validity contract as ``result()``: the
+        candidate's base design must be in its priced (pre-accept) state."""
+        ...
+
+    def result_for(self, design: Design) -> SimResult:
+        """Decode against an explicitly provided materialized design — for
+        consumers (the explorer's final best-design decode) that read a
+        handle long after the candidate's base has mutated past it."""
+        ...
+
 
 @runtime_checkable
 class SimulatorBackend(Protocol):
@@ -210,13 +223,15 @@ class _ReadyHandle:
     Carries its candidate so ``adopt_encoding`` can tell WHOSE cached base
     encoding to invalidate when a fallback-priced move gets accepted."""
 
-    __slots__ = ("_res", "_fitness", "_cand")
+    __slots__ = ("_res", "_fitness", "_cand", "_tdg")
 
     def __init__(self, res: SimResult, fitness: float,
-                 cand: Optional[Candidate] = None) -> None:
+                 cand: Optional[Candidate] = None,
+                 tdg: Optional[TaskGraph] = None) -> None:
         self._res = res
         self._fitness = fitness
         self._cand = cand
+        self._tdg = tdg
 
     @property
     def fitness(self) -> float:
@@ -232,11 +247,212 @@ class _ReadyHandle:
     def result(self) -> SimResult:
         return self._res
 
+    def result_for(self, design: Design) -> SimResult:
+        return self._res  # already decoded; the design played no further part
+
+    def telemetry(self) -> "SimTelemetry":
+        assert self._tdg is not None, "handle was built without its TaskGraph"
+        design = self._cand.base if self._cand is not None else None
+        return SimTelemetry.of_result(self._res, self._tdg, design)
+
 
 def _host_fitness(res: SimResult, cand: Candidate) -> float:
     if cand.budget is None:
         return float("nan")
     return distance(res, cand.budget).fitness(cand.alpha)
+
+
+class _PPAView:
+    """Duck-typed stand-in for the three SimResult fields `budgets.distance`
+    reads — lets a telemetry view reuse the one true Eq.-7 distance code."""
+
+    __slots__ = ("workload_latency_s", "power_w", "area_mm2")
+
+    def __init__(self, wl: Dict[str, float], power: float, area: float) -> None:
+        self.workload_latency_s = wl
+        self.power_w = power
+        self.area_mm2 = area
+
+
+class SimTelemetry:
+    """Selection-grade view of one priced candidate — the input the
+    heuristic-policy layer (`repro.core.policy`) reasons over.
+
+    It exposes (a) the device-side bottleneck telemetry columns — per-block
+    binding-bottleneck seconds, the argmax ("top bottleneck") PE/MEM block,
+    and the comp-vs-comm attribution split — and (b) the per-task /
+    per-metric accessors FARSI's selection reasoning needs (task durations,
+    per-task dynamic energy, memory residency, per-task binding resource),
+    plus the Eq.-7 ``Distance``. What it does NOT do is materialize the full
+    ``SimResult`` dict set: on the JAX backend a view is a handful of
+    zero-copy column reads plus an O(T) host scalar rollup, which is what
+    makes the winner's full ``_decode`` policy-optional.
+
+    Built either over an already-decoded ``SimResult`` (`of_result` — the
+    Python backend and fallback-priced candidates; every accessor proxies
+    the result, so policies see bit-identical floats on either backend) or
+    over one row of a JAX batch's host columns (`of_row`). Row-backed
+    construction snapshots the task→block maps and recomputes the
+    design-dependent scalars (energy, power, area, capacities) exactly as
+    the lazy decode would — shared backend helpers — so telemetry-driven
+    searches take the same decisions as decode-driven ones (asserted by the
+    golden-sequence policy-equivalence tests). Construction has the same
+    contract as ``SimHandle.result()``: the candidate's base design must
+    still be in its priced state."""
+
+    __slots__ = (
+        "_tdg", "_res", "_design",
+        "latency_s", "power_w", "area_mm2",
+        "_wl_lat", "_tep", "_cap",
+        "_fin", "_index", "_codes", "_task_pe", "_task_mem", "_noc",
+        "_pe_names", "_mem_names", "_pe_busy", "_mem_busy", "_kind",
+        "_top_pe", "_top_mem",
+    )
+
+    # ---- births ----------------------------------------------------------
+    @staticmethod
+    def of_result(res: SimResult, tdg: TaskGraph,
+                  design: Optional[Design] = None) -> "SimTelemetry":
+        t = SimTelemetry()
+        t._tdg, t._res, t._design = tdg, res, design
+        t.latency_s = res.latency_s
+        t.power_w = res.power_w
+        t.area_mm2 = res.area_mm2
+        t._top_pe = t._top_mem = None  # resolved lazily through the design
+        return t
+
+    @staticmethod
+    def of_row(batch: "_JaxBatch", j: int, cand: Candidate,
+               backend: "JaxBatchedBackend") -> "SimTelemetry":
+        out = batch.host()  # forces the batch, like any first handle read
+        t = SimTelemetry()
+        t._tdg, t._res, t._design = backend.tdg, None, cand.base
+        t._index = backend._enc.index
+        t._fin = out["finish_s"][j].tolist()
+        t._codes = out["bneck_code"][j]
+        t._kind = out["bneck_kind_s"][j]
+        t._pe_busy = out["pe_bneck_s"][j]
+        t._mem_busy = out["mem_bneck_s"][j]
+        t.latency_s = float(out["latency_s"][j])
+        # design-dependent snapshot: the base design is only guaranteed to be
+        # in the priced state NOW, so task→block maps and the host-exact
+        # scalar rollup (the same floats the lazy decode would produce) are
+        # captured at construction; everything else indexes device columns
+        with cand.materialized(backend.tdg) as design:
+            t._tep = backend._task_energy_pj(design)
+            t._cap = backend._mem_caps(design)
+            t.area_mm2 = backend._area_mm2(design, t._cap)
+            energy = sum(t._tep.values()) * 1e-12 + total_leakage_w(
+                design, backend.db
+            ) * t.latency_s
+            t.power_w = energy / t.latency_s if t.latency_s > 0 else 0.0
+            t._task_pe = dict(design.task_pe)
+            t._task_mem = dict(design.task_mem)
+            t._noc = design.noc_chain[0]
+            t._pe_names = [n for n, b in design.blocks.items()
+                           if b.kind == BlockKind.PE]
+            t._mem_names = [n for n, b in design.blocks.items()
+                            if b.kind == BlockKind.MEM]
+        t._wl_lat = backend._wl_latency(t._fin)
+        t._top_pe = t._pe_names[
+            min(int(out["top_bneck_pe"][j]), len(t._pe_names) - 1)]
+        t._top_mem = t._mem_names[
+            min(int(out["top_bneck_mem"][j]), len(t._mem_names) - 1)]
+        return t
+
+    # ---- Eq.-7 distance --------------------------------------------------
+    def dist(self, budget: Budget) -> Distance:
+        if self._res is not None:
+            return distance(self._res, budget)
+        return distance(_PPAView(self._wl_lat, self.power_w, self.area_mm2),
+                        budget)
+
+    # ---- per-task selection accessors ------------------------------------
+    def task_finish_s(self, t: str) -> float:
+        if self._res is not None:
+            return self._res.task_finish_s.get(t, 0.0)
+        return self._fin[self._index[t]]
+
+    def task_duration(self, t: str) -> float:
+        """Critical-path duration contribution: finish − latest parent
+        finish (what `_task_duration` computed from a decoded result)."""
+        start = max(
+            (self.task_finish_s(p) for p in self._tdg.parents[t]), default=0.0
+        )
+        return self.task_finish_s(t) - start
+
+    def task_energy_j(self, t: str) -> float:
+        if self._res is not None:
+            return self._res.task_energy_j.get(t, 0.0)
+        return self._tep.get(t, 0.0) * 1e-12
+
+    def mem_capacity(self, m: str) -> float:
+        if self._res is not None:
+            return self._res.mem_capacity_bytes.get(m, 0.0)
+        return self._cap.get(m, 0.0)
+
+    def task_bneck(self, t: str) -> str:
+        if self._res is not None:
+            return self._res.task_bottleneck.get(t, "pe")
+        return _BNECK_KINDS[int(self._codes[self._index[t]])]
+
+    def task_bneck_block(self, t: str) -> Optional[str]:
+        if self._res is not None:
+            return self._res.task_bottleneck_block.get(t)
+        c = int(self._codes[self._index[t]])
+        return self._task_pe[t] if c == 0 else (
+            self._task_mem[t] if c == 1 else self._noc
+        )
+
+    # ---- device bottleneck telemetry -------------------------------------
+    @property
+    def comp_s(self) -> float:
+        """Seconds some running task was compute-bound (kind column 'pe')."""
+        if self._res is not None:
+            return self._res.bottleneck_s.get("pe", 0.0)
+        return float(self._kind[0])
+
+    @property
+    def comm_s(self) -> float:
+        """Seconds some running task was communication-bound (mem + noc)."""
+        if self._res is not None:
+            b = self._res.bottleneck_s
+            return b.get("mem", 0.0) + b.get("noc", 0.0)
+        return float(self._kind[1] + self._kind[2])
+
+    def _top_of_kind(self, kind: BlockKind) -> Optional[str]:
+        if self._design is None:
+            return None
+        best, best_s = None, -1.0
+        for n, b in self._design.blocks.items():
+            if b.kind == kind:
+                s = self._res.block_bottleneck_s.get(n, 0.0)
+                if s > best_s:
+                    best, best_s = n, s
+        return best
+
+    def top_bneck_pe(self) -> Optional[str]:
+        """The PE accumulating the most binding-bottleneck seconds — the
+        device argmax column on JAX, the host attribution otherwise."""
+        if self._top_pe is None and self._res is not None:
+            self._top_pe = self._top_of_kind(BlockKind.PE)
+        return self._top_pe
+
+    def top_bneck_mem(self) -> Optional[str]:
+        if self._top_mem is None and self._res is not None:
+            self._top_mem = self._top_of_kind(BlockKind.MEM)
+        return self._top_mem
+
+    def block_bneck_s(self) -> Dict[str, float]:
+        """Per-block binding-bottleneck seconds (name-resolved)."""
+        if self._res is not None:
+            return dict(self._res.block_bottleneck_s)
+        out = {n: float(self._pe_busy[i]) for i, n in enumerate(self._pe_names)}
+        out.update(
+            (n, float(self._mem_busy[i])) for i, n in enumerate(self._mem_names)
+        )
+        out[self._noc] = float(self._kind[2])
+        return out
 
 
 class PythonBackend:
@@ -270,7 +486,7 @@ class PythonBackend:
         for c in cands:
             with c.materialized(self.tdg) as d:
                 res = simulate(d, self.tdg, self.db)
-            out.append(_ReadyHandle(res, _host_fitness(res, c), c))
+            out.append(_ReadyHandle(res, _host_fitness(res, c), c, self.tdg))
         self._stats.n_sims += len(out)
         self._stats.n_dispatches += 1
         self._stats.wall_s += time.perf_counter() - t0
@@ -295,17 +511,22 @@ def _bucket(n: int) -> int:
 
 
 # layout of the device-packed scalar column block: the jit wrapper stacks
-# every per-design scalar into ONE (B, 12) matrix, so a batch crosses the
-# device boundary as 3 leaves (scal, finish_s, bneck_code) instead of 13 —
+# every per-design scalar into ONE (B, 14 + 2·S) matrix, so a batch crosses
+# the device boundary as 3 leaves (scal, finish_s, bneck_code) —
 # per-leaf transfer + pytree overhead was a measurable slice of the
 # explorer's serial iteration. Column order mirrors
 # kernels/phase_sim/kernel.SCAL_COLS (the Pallas kernel's own packed
 # block), so on the kernel path the ops-layer unpack and this repack fold
 # to a no-op under jit and a future column lands identically in both.
+# Fixed columns first: the 9 named below, then bneck_kind_s at 9:12 and the
+# top-bottleneck slot indices at 12:14; the per-block bottleneck-seconds
+# telemetry (pe_bneck_s then mem_bneck_s, S padded slots each) rides in the
+# variable-width tail, split on host from the leaf's total width.
 _SCAL_COLS = (
     "latency_s", "energy_j", "power_w", "area_mm2", "fitness",
     "alp_time_s", "traffic_bytes", "n_phases", "all_done",
-)  # cols 9:12 are bneck_kind_s
+)
+_N_FIXED_SCAL = len(_SCAL_COLS) + 3 + 2  # + bneck_kind_s + top_bneck pair
 
 
 class _JaxBatch:
@@ -342,6 +563,11 @@ class _JaxBatch:
             scal = raw["scal"]
             host = {name: scal[:, i] for i, name in enumerate(_SCAL_COLS)}
             host["bneck_kind_s"] = scal[:, 9:12]
+            host["top_bneck_pe"] = scal[:, 12]
+            host["top_bneck_mem"] = scal[:, 13]
+            s_busy = (scal.shape[1] - _N_FIXED_SCAL) // 2
+            host["pe_bneck_s"] = scal[:, _N_FIXED_SCAL:_N_FIXED_SCAL + s_busy]
+            host["mem_bneck_s"] = scal[:, _N_FIXED_SCAL + s_busy:]
             host["finish_s"] = raw["finish_s"]
             host["bneck_code"] = raw["bneck_code"]
             self._host = host
@@ -376,20 +602,41 @@ class _JaxHandle:
     def result(self) -> SimResult:
         if self._res is None:
             t0 = time.perf_counter()
-            out, j = self._batch.host(), self._j
             with self._cand.materialized(self._backend.tdg) as design:
-                self._res = self._backend._decode(
-                    design,
-                    float(out["latency_s"][j]),
-                    out["finish_s"][j],
-                    out["bneck_code"][j],
-                    out["bneck_kind_s"][j],
-                    float(out["alp_time_s"][j]),
-                    float(out["traffic_bytes"][j]),
-                    int(out["n_phases"][j]),
-                )
+                self._res = self._decode_against(design)
             self._batch.stats.decode_s += time.perf_counter() - t0
         return self._res
+
+    def result_for(self, design: Design) -> SimResult:
+        """Decode against a caller-provided materialized design (e.g. the
+        explorer's best-design snapshot, long after the candidate's base
+        moved on). Bypasses — and does not populate — the memoized
+        ``result()``."""
+        t0 = time.perf_counter()
+        res = self._decode_against(design)
+        self._batch.stats.decode_s += time.perf_counter() - t0
+        return res
+
+    def _decode_against(self, design: Design) -> SimResult:
+        out, j = self._batch.host(), self._j
+        return self._backend._decode(
+            design,
+            float(out["latency_s"][j]),
+            out["finish_s"][j],
+            out["bneck_code"][j],
+            out["bneck_kind_s"][j],
+            out["pe_bneck_s"][j],
+            out["mem_bneck_s"][j],
+            float(out["alp_time_s"][j]),
+            float(out["traffic_bytes"][j]),
+            int(out["n_phases"][j]),
+        )
+
+    def telemetry(self) -> SimTelemetry:
+        t0 = time.perf_counter()
+        tel = SimTelemetry.of_row(self._batch, self._j, self._cand, self._backend)
+        self._batch.stats.decode_s += time.perf_counter() - t0
+        return tel
 
 
 class JaxBatchedBackend:
@@ -568,11 +815,12 @@ class JaxBatchedBackend:
                 sim = lambda rows: simulate_batch(self._enc, rows)
 
             def packed(rows):
-                # pack the per-design scalars into one (B, 12) matrix on
-                # device (_SCAL_COLS + bneck_kind_s): 3 output leaves per
-                # dispatch instead of 13 (wl_latency_s is dropped — the
-                # lazy decode recomputes per-workload latency from finish
-                # times on host). Free under jit: XLA fuses the stack.
+                # pack the per-design scalars into one (B, 14 + 2·S) matrix
+                # on device (_SCAL_COLS + bneck_kind_s + top-bottleneck slot
+                # pair + the per-slot bottleneck telemetry): 3 output leaves
+                # per dispatch (wl_latency_s is dropped — the lazy decode
+                # recomputes per-workload latency from finish times on
+                # host). Free under jit: XLA fuses the stack.
                 out = sim(rows)
                 scal = jnp.stack(
                     [
@@ -582,7 +830,18 @@ class JaxBatchedBackend:
                     ],
                     axis=1,
                 )
-                scal = jnp.concatenate([scal, out["bneck_kind_s"]], axis=1)
+                tops = jnp.stack(
+                    [
+                        out["top_bneck_pe"].astype(jnp.float32),
+                        out["top_bneck_mem"].astype(jnp.float32),
+                    ],
+                    axis=1,
+                )
+                scal = jnp.concatenate(
+                    [scal, out["bneck_kind_s"], tops,
+                     out["pe_bneck_s"], out["mem_bneck_s"]],
+                    axis=1,
+                )
                 return {
                     "scal": scal,
                     "finish_s": out["finish_s"],
@@ -607,7 +866,7 @@ class JaxBatchedBackend:
             if i not in fast_set:
                 with c.materialized(self.tdg) as d:
                     res = simulate(d, self.tdg, self.db)
-                results[i] = _ReadyHandle(res, _host_fitness(res, c), c)
+                results[i] = _ReadyHandle(res, _host_fitness(res, c), c, self.tdg)
                 self._stats.n_fallback += 1
         if fast:
             self._evaluate_batch([cands[i] for i in fast], fast, results)
@@ -803,6 +1062,43 @@ class JaxBatchedBackend:
             self._stats.n_batched += 1
 
     # ------------------------------------------------------------------
+    # host-exact scalar rollups, shared between the lazy ``_decode`` and the
+    # policy-layer ``SimTelemetry`` so both produce bit-identical floats
+    def _task_energy_pj(self, design: Design) -> Dict[str, float]:
+        """Per-task dynamic energy: rate-independent (every task drains its
+        full (ops, read, write) totals; hops == 1 in the single-NoC regime)."""
+        blocks, d_pe, d_mem = design.blocks, design.task_pe, design.task_mem
+        pe_pj, mem_pj, noc_pj = self._pe_pj, self._mem_pj, self._noc_pj
+        return {
+            n: pe_pj[blocks[d_pe[n]].subtype] * self._ops[k]
+            + (mem_pj[blocks[d_mem[n]].subtype] + noc_pj) * self._rw[k]
+            for k, n in enumerate(self._enc.names)
+        }
+
+    def _mem_caps(self, design: Design) -> Dict[str, float]:
+        cap: Dict[str, float] = {m: 0.0 for m in design.mems()}
+        d_mem = design.task_mem
+        for k, n in enumerate(self._enc.names):
+            cap[d_mem[n]] += self._wbytes[k]
+        return cap
+
+    def _area_mm2(self, design: Design, cap: Dict[str, float]) -> float:
+        db = self.db
+        area = 0.0
+        for bname, blk in design.blocks.items():
+            if blk.kind == BlockKind.MEM and blk.subtype == "sram":
+                area += db.area.sram_mm2_per_mb * max(cap[bname], 1.0) / 1e6
+            else:
+                area += db.block_area_mm2(blk)
+        return area
+
+    def _wl_latency(self, fin: List[float]) -> Dict[str, float]:
+        wl_latency: Dict[str, float] = {}
+        for w, f in zip(self._wl_of, fin):
+            if f > wl_latency.get(w, 0.0):
+                wl_latency[w] = f
+        return wl_latency
+
     def _decode(
         self,
         design: Design,
@@ -810,11 +1106,13 @@ class JaxBatchedBackend:
         finish: np.ndarray,
         bneck: np.ndarray,
         kind_s: np.ndarray,
+        pe_busy: np.ndarray,
+        mem_busy: np.ndarray,
         alp_time: float,
         traffic: float,
         n_phases: int,
     ) -> SimResult:
-        tdg, db = self.tdg, self.db
+        db = self.db
         names = self._enc.names
         blocks, d_pe, d_mem = design.blocks, design.task_pe, design.task_mem
         noc = design.noc_chain[0]
@@ -826,32 +1124,27 @@ class JaxBatchedBackend:
             n: d_pe[n] if c == 0 else (d_mem[n] if c == 1 else noc)
             for n, c in zip(names, codes)
         }
-        # dynamic energy is rate-independent: every task drains its full
-        # (ops, read, write) totals, and hops == 1 in the single-NoC regime
-        pe_pj, mem_pj, noc_pj = self._pe_pj, self._mem_pj, self._noc_pj
-        task_energy_pj = {
-            n: pe_pj[blocks[d_pe[n]].subtype] * self._ops[k]
-            + (mem_pj[blocks[d_mem[n]].subtype] + noc_pj) * self._rw[k]
-            for k, n in enumerate(names)
-        }
+        task_energy_pj = self._task_energy_pj(design)
         energy_j = sum(task_energy_pj.values()) * 1e-12 + total_leakage_w(
             design, db
         ) * latency
-        wl_latency: Dict[str, float] = {}
-        for w, f in zip(self._wl_of, fin):
-            if f > wl_latency.get(w, 0.0):
-                wl_latency[w] = f
+        wl_latency = self._wl_latency(fin)
         # fused mem-capacity + area rollup (ppa.mem_capacities/total_area_mm2
         # recomputed here with the precomputed write-bytes table)
-        cap: Dict[str, float] = {m: 0.0 for m in design.mems()}
-        for k, n in enumerate(names):
-            cap[d_mem[n]] += self._wbytes[k]
-        area = 0.0
+        cap = self._mem_caps(design)
+        area = self._area_mm2(design, cap)
+        # per-block bottleneck seconds: device telemetry columns resolved to
+        # block names via the encoding slot order (= block insertion order)
+        block_bneck_s: Dict[str, float] = {}
+        ipe = imem = 0
         for bname, blk in blocks.items():
-            if blk.kind == BlockKind.MEM and blk.subtype == "sram":
-                area += db.area.sram_mm2_per_mb * max(cap[bname], 1.0) / 1e6
-            else:
-                area += db.block_area_mm2(blk)
+            if blk.kind == BlockKind.PE:
+                block_bneck_s[bname] = float(pe_busy[ipe])
+                ipe += 1
+            elif blk.kind == BlockKind.MEM:
+                block_bneck_s[bname] = float(mem_busy[imem])
+                imem += 1
+        block_bneck_s[noc] = float(kind_s[2])
         return SimResult(
             latency_s=latency,
             workload_latency_s=wl_latency,
@@ -865,6 +1158,7 @@ class JaxBatchedBackend:
             mem_capacity_bytes=cap,
             task_bottleneck_block=task_bneck_block,
             task_energy_j={n: e * 1e-12 for n, e in task_energy_pj.items()},
+            block_bottleneck_s=block_bneck_s,
             avg_accel_parallelism=alp_time / latency if latency > 0 else 1.0,
             total_traffic_bytes=traffic,
         )

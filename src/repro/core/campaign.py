@@ -31,6 +31,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Union
 
 from .backend import BackendStats, Candidate, SimulatorBackend, make_backend
 from .budgets import Budget
+from .codesign import aggregate_ledgers
 from .database import HardwareDatabase
 from .design import Design
 from .explorer import ExplorationResult, Explorer, ExplorerConfig
@@ -57,6 +58,19 @@ class CampaignResult:
 
     def converged_runs(self) -> List[str]:
         return [n for n, r in self.runs.items() if r.converged]
+
+    def iterations_to_budget(self, cap: Optional[int] = None) -> Dict[str, float]:
+        """Per-run iterations-to-budget (censored at ``cap`` / the run's own
+        iteration count when not converged) — the policy-comparison metric."""
+        return {n: r.iterations_to_budget(cap) for n, r in self.runs.items()}
+
+    def policy_iterations(self, cap: Optional[int] = None) -> Dict[str, float]:
+        """Mean iterations-to-budget per policy, read from each run's
+        ``policy_name`` — the summary a policy × scenario sweep reports."""
+        acc: Dict[str, List[float]] = {}
+        for r in self.runs.values():
+            acc.setdefault(r.policy_name, []).append(r.iterations_to_budget(cap))
+        return {p: statistics.mean(v) for p, v in acc.items()}
 
 
 class Campaign:
@@ -128,6 +142,35 @@ class Campaign:
                         tdg,
                         bud,
                         ExplorerConfig(awareness=level, seed=seed, **config_kw),
+                    )
+        return camp
+
+    @classmethod
+    def policy_sweep(
+        cls,
+        db: HardwareDatabase,
+        scenarios: Sequence,  # Iterable[workloads.Scenario]
+        policies: Sequence[str] = ("naive_sa", "farsi"),
+        seeds: Iterable[int] = (0,),
+        backend: Union[str, Callable] = "python",
+        **config_kw,
+    ) -> "Campaign":
+        """Policy × scenario grid over a generated workload family
+        (`workloads.synthetic_family`): every scenario carries its own graph
+        and calibrated budget, every policy runs under every seed, and all
+        runs of one scenario share one backend. Summarize with
+        ``CampaignResult.policy_iterations()``."""
+        camp = cls(db, backend=backend)
+        if isinstance(backend, str):
+            config_kw.setdefault("backend", backend)
+        for scen in scenarios:
+            for pol in policies:
+                for seed in seeds:
+                    camp.add(
+                        f"{scen.name}.{pol}.s{seed}",
+                        scen.tdg,
+                        scen.budget,
+                        ExplorerConfig(policy=pol, seed=seed, **config_kw),
                     )
         return camp
 
@@ -226,7 +269,12 @@ class Campaign:
         iters = [r.iterations for r in runs.values()]
         dists = [r.best_distance.city_block() for r in runs.values()]
         conv_iters = [r.iterations for r in runs.values() if r.converged]
+        # Fig.-10 co-design aggregates: per-run ledgers used to be dropped on
+        # aggregation — surface the grid-level switch-rate / convergence-
+        # contribution means alongside the convergence statistics
+        codesign = aggregate_ledgers([r.ledger for r in runs.values()])
         return {
+            **codesign,
             "n_runs": len(runs),
             "n_converged": sum(r.converged for r in runs.values()),
             "convergence_rate": statistics.mean(

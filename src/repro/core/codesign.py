@@ -92,3 +92,21 @@ class CodesignLedger:
         for r in self.records:
             out[r.move] = out.get(r.move, 0) + 1
         return out
+
+
+def aggregate_ledgers(ledgers: List["CodesignLedger"]) -> Dict[str, float]:
+    """Campaign-level Fig.-10 aggregates: mean switch rate and convergence
+    contribution per co-design vector over a grid of runs (runs with too few
+    records contribute their zeros, like the per-run summaries do). Keys are
+    flat (``codesign_switch_rate_<vector>`` / ``codesign_contribution_
+    <vector>``) so they merge into `Campaign`'s scalar aggregate dict."""
+    out: Dict[str, float] = {}
+    n = max(len(ledgers), 1)
+    for v in VECTORS:
+        out[f"codesign_switch_rate_{v}"] = (
+            sum(l.switch_rate(v) for l in ledgers) / n
+        )
+        out[f"codesign_contribution_{v}"] = (
+            sum(l.convergence_contribution(v) for l in ledgers) / n
+        )
+    return out

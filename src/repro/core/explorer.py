@@ -1,4 +1,4 @@
-"""Exploration heuristic (paper §3.3–3.4, Algorithm 1).
+"""Exploration engine (paper §3.3–3.4, Algorithm 1).
 
 Simulated annealing is the base search; FARSI augments its neighbour
 generation with architectural reasoning. A neighbour is produced by choosing
@@ -13,31 +13,39 @@ the 5-tuple (Metric, Direction, Task, Block, Move):
               (join > migrate > fork > swap > fork_swap), sampled
               probabilistically by precedence weight
 
-Awareness ladder (paper Fig. 9b): ``sa`` picks all five at random;
-``task`` adds bottleneck-driven task selection; ``task_block`` adds block
-selection; ``farsi`` adds Algorithm-1 move selection + precedence.
+All of that reasoning lives in the pluggable **policy layer**
+(`repro.core.policy`): the Explorer owns the mechanics — neighbour
+materialization, the speculative dispatch pipeline, bookkeeping — and
+delegates every selection and accept decision to the
+:class:`~repro.core.policy.HeuristicPolicy` named by
+``ExplorerConfig.policy`` (default: derived from the historical
+``awareness`` ladder — ``sa``/``task``/``task_block``/``farsi``, paper
+Fig. 9b). Policies reason over :class:`~repro.core.backend.SimTelemetry`
+views fed from the device-side bottleneck telemetry columns, so the
+winner's full ``SimResult`` decode is paid ONCE per exploration (for the
+returned best design), not per accepted move.
 
-If no neighbour improves, the failed (task, block) target goes on a short
-taboo list so the next iteration targets "the task/block with the next
-highest distance" (§3.4), and classic SA temperature occasionally accepts a
-worse design.
+If no neighbour improves, the failed (task, block) target goes on the
+policy's short taboo list so the next iteration targets "the task/block
+with the next highest distance" (§3.4), and classic SA temperature
+occasionally accepts a worse design.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-import random
 import time
-from typing import Dict, Generator, List, Optional, Tuple
+from typing import Generator, List, Optional
 
-from .backend import Candidate, SimHandle, SimulatorBackend, make_backend
-from .blocks import BlockKind
-from .budgets import Budget, Distance, distance
+import random
+
+from .backend import Candidate, SimHandle, SimTelemetry, SimulatorBackend, make_backend
+from .budgets import Budget, Distance
 from .codesign import CodesignLedger, FocusRecord
 from .database import HardwareDatabase
 from .design import Design
-from .moves import MOVE_KINDS, MOVE_PRECEDENCE, MoveDelta, MoveSpec, apply_move
+from .moves import MoveDelta, MoveSpec, apply_move
 from .phase_sim import SimResult
+from .policy import AWARENESS_POLICY, Focus, HeuristicPolicy, make_policy
 from .tdg import TaskGraph, workload_of
 
 AWARENESS_LEVELS = ("sa", "task", "task_block", "farsi")
@@ -45,21 +53,23 @@ AWARENESS_LEVELS = ("sa", "task", "task_block", "farsi")
 
 @dataclasses.dataclass
 class _Sel:
-    """One dispatched iteration's selection context (the 5-tuple choices a
-    resolution needs back after its batch was scored — possibly one full
-    iteration later, when the batch was dispatched speculatively)."""
+    """One dispatched iteration's selection context (the focus and the
+    candidates a resolution needs back after its batch was scored — possibly
+    one full iteration later, when the batch was dispatched speculatively)."""
 
     it: int
-    metric: str
-    task: str
-    block: str
-    bneck: str
+    focus: Focus
     neighbors: List["Candidate"]
 
 
 @dataclasses.dataclass
 class ExplorerConfig:
     awareness: str = "farsi"
+    # HeuristicPolicy registry name (policy.POLICIES). Empty string — the
+    # default — derives the policy from ``awareness`` (sa → naive_sa, … ,
+    # farsi → farsi) so the historical knob keeps working; naming a policy
+    # explicitly overrides the ladder (e.g. "bottleneck", "locality").
+    policy: str = ""
     neighbors_per_iter: int = 4
     max_iterations: int = 1500
     seed: int = 0
@@ -79,7 +89,7 @@ class ExplorerConfig:
     #   True  — always speculate (the stall-guard / identity-test mode);
     #   False — off.
     # Every mode produces the same accepted-move sequence under a fixed
-    # seed — speculation rolls its rng/taboo state back on a miss.
+    # seed — speculation rolls its rng/policy state back on a miss.
     pipeline: Optional[bool] = None
 
 
@@ -95,35 +105,19 @@ class ExplorationResult:
     history: List[dict]
     ledger: CodesignLedger
     backend_name: str = "python"
+    policy_name: str = "farsi"
     sim_wall_s: float = 0.0  # time inside backend.evaluate for this run
     pipelined: bool = False  # ran with the speculative dispatch pipeline
     n_spec_hits: int = 0  # speculative batches that became the next iteration
     n_sims_wasted: int = 0  # speculated evaluations discarded on accept
 
-
-def _task_duration(result: SimResult, tdg: TaskGraph, t: str) -> float:
-    start = max((result.task_finish_s[p] for p in tdg.parents[t]), default=0.0)
-    return result.task_finish_s[t] - start
-
-
-def _block_has_parallel_tasks(design: Design, tdg: TaskGraph, block: str) -> bool:
-    kind = design.blocks[block].kind
-    if kind == BlockKind.PE:
-        hosted = design.tasks_on_pe(block)
-    elif kind == BlockKind.MEM:
-        hosted = design.buffers_on_mem(block)
-    else:
-        hosted = design.tasks_via_noc(block)
-    for i, a in enumerate(hosted):
-        par = set(tdg.parallel_tasks_of(a))
-        if par & set(hosted[i + 1:]):
-            return True
-    return False
-
-
-def _task_parallel_other_blocks(design: Design, tdg: TaskGraph, t: str) -> bool:
-    mine = design.task_pe[t]
-    return any(design.task_pe[p] != mine for p in tdg.parallel_tasks_of(t))
+    def iterations_to_budget(self, cap: Optional[int] = None) -> float:
+        """Iterations this run needed to reach budget — the policy-comparison
+        metric (paper Fig. 9b): the iteration count when converged, else
+        ``cap`` (default: the iterations actually run) as a censored floor."""
+        if self.converged:
+            return float(self.iterations)
+        return float(cap if cap is not None else self.iterations)
 
 
 class Explorer:
@@ -142,6 +136,10 @@ class Explorer:
         assert config.awareness in AWARENESS_LEVELS
         self.rng = random.Random(config.seed)
         self.backend = backend or make_backend(config.backend, tdg, db)
+        self.policy: HeuristicPolicy = make_policy(
+            config.policy or AWARENESS_POLICY[config.awareness]
+        )
+        self.policy.bind(tdg, db, budget, config, self.rng)
         self.n_sims = 0  # committed designs this run submitted (backend stats
         # aggregate across sharers AND count mis-speculated batches; this
         # stays per-exploration — and per-commit — under Campaign)
@@ -154,121 +152,12 @@ class Explorer:
         else:
             self._pipeline = "always" if config.pipeline else "off"
         self._p_rej = 0.0  # EW estimate of the rejection rate (adaptive gate)
-        self._taboo: Dict[Tuple[str, str], int] = {}
-        self._sticky_focus: Optional[str] = None  # codesign-off fixation
-
-    # ---- 5-tuple selection ----------------------------------------------
-    def _select_metric(self, dist: Distance) -> str:
-        if self.cfg.awareness == "sa":
-            return self.rng.choice(("latency", "power", "area"))
-        if not self.cfg.codesign:
-            # fixation ablation: stick to one metric until it meets budget
-            if self._sticky_focus and dist.per_metric[self._sticky_focus] > 0:
-                return self._sticky_focus
-            unmet = [m for m, d in dist.per_metric.items() if d > 0]
-            self._sticky_focus = unmet[0] if unmet else "latency"
-            return self._sticky_focus
-        return dist.farthest_metric()
-
-    def _select_task(
-        self, design: Design, metric: str, dist: Distance, result: SimResult
-    ) -> str:
-        tasks = list(self.tdg.tasks)
-        if self.cfg.awareness == "sa":
-            return self.rng.choice(tasks)
-        # domain/architecture awareness: rank by contribution to the metric
-        if metric == "latency":
-            wl = max(
-                dist.per_workload_latency,
-                key=lambda w: dist.per_workload_latency[w],
-            )
-            pool = [t for t in tasks if workload_of(t) == wl] or tasks
-            ranked = sorted(
-                pool, key=lambda t: _task_duration(result, self.tdg, t), reverse=True
-            )
-        elif metric == "power":
-            ranked = sorted(
-                tasks, key=lambda t: result.task_energy_j.get(t, 0.0), reverse=True
-            )
-        else:  # area: tasks whose buffers sit on the largest memories first
-            # (capacity is keyed by *memory* name — resolve through the task's
-            # mapped memory; own write bytes break ties within one memory)
-            ranked = sorted(
-                tasks,
-                key=lambda t: (
-                    result.mem_capacity_bytes.get(design.task_mem.get(t, ""), 0.0),
-                    self.tdg.tasks[t].write_bytes,
-                ),
-                reverse=True,
-            )
-        for t in ranked:
-            if not any(k[0] == t for k in self._taboo):
-                return t
-        return ranked[0]
-
-    def _select_block(self, design: Design, metric: str, task: str, result: SimResult) -> str:
-        if self.cfg.awareness in ("sa", "task"):
-            return self.rng.choice(list(design.blocks))
-        if metric in ("power", "area"):
-            # dead hardware first: an idle block is pure leakage/area, and
-            # join removes it for free (the cheapest possible move)
-            for n, b in design.blocks.items():
-                if b.kind == BlockKind.PE and not design.tasks_on_pe(n):
-                    return n
-                if b.kind == BlockKind.MEM and not design.buffers_on_mem(n):
-                    return n
-        if metric == "area":
-            return max(design.blocks, key=lambda b: self.db.block_area_mm2(design.blocks[b]))
-        blk = result.task_bottleneck_block.get(task)
-        if blk in design.blocks:
-            return blk
-        return design.task_pe[task]
-
-    def _select_moves(self, design: Design, metric: str, task: str, block: str) -> List[str]:
-        """Algorithm 1, steps I + II."""
-        if self.cfg.awareness != "farsi":
-            moves = list(MOVE_KINDS)
-            self.rng.shuffle(moves)
-            return moves
-        if metric == "latency":
-            if _block_has_parallel_tasks(design, self.tdg, block):
-                allowed = ["migrate", "fork"]
-            else:
-                allowed = ["swap", "fork_swap"]
-        elif metric == "power":
-            if _task_parallel_other_blocks(design, self.tdg, task):
-                if not _block_has_parallel_tasks(design, self.tdg, block):
-                    allowed = ["migrate"]
-                else:
-                    allowed = ["join"]
-            else:
-                allowed = ["swap", "fork_swap"]
-        else:  # area
-            if design.blocks[block].kind == BlockKind.PE:
-                allowed = ["join", "swap"]
-            else:
-                allowed = ["migrate", "join", "swap"]
-        # step II/III: precedence-weighted probabilistic ordering
-        if self.cfg.dev_cost_aware:
-            weights = [MOVE_PRECEDENCE[m] for m in allowed]
-        else:
-            weights = [1.0] * len(allowed)
-        ordered: List[str] = []
-        pool, w = list(allowed), list(weights)
-        while pool:
-            pick = self.rng.choices(range(len(pool)), weights=w)[0]
-            ordered.append(pool.pop(pick))
-            w.pop(pick)
-        # graceful fallback to the rest of the move set
-        ordered += [m for m in MOVE_KINDS if m not in ordered]
-        return ordered
 
     # ---- neighbour generation --------------------------------------------
     def _make_neighbors(
-        self, design: Design, metric: str, task: str, block: str, moves: List[str],
-        bottleneck: str, n: int,
+        self, design: Design, focus: Focus, moves: List[str], n: int
     ) -> List[Candidate]:
-        """Up to ``n`` *distinct* neighbours: one per move of the precedence-
+        """Up to ``n`` *distinct* neighbours: one per move of the policy's
         ordered list (candidate generation in SA, §3.4).
 
         Clone-free: each move is trialled in place on ``design`` (checkpoint
@@ -276,7 +165,7 @@ class Explorer:
         is shipped to the backend as a lightweight :class:`Candidate` — the
         paper's Fig.-8b design-duplication hot-spot never runs. Only the
         accepted candidate is ever materialized (``Candidate.accept``)."""
-        direction = +1 if metric == "latency" else -1
+        direction = +1 if focus.metric == "latency" else -1
         out: List[Candidate] = []
         ck = design.checkpoint()
         for move in moves:
@@ -284,12 +173,15 @@ class Explorer:
                 break
             delta = MoveDelta()
             ok = apply_move(
-                design, self.tdg, move, block, task, direction, bottleneck,
-                metric, self.rng, delta,
+                design, self.tdg, move, focus.block, focus.task, direction,
+                focus.bneck, focus.metric, self.rng, delta,
             )
             design.restore(ck)
             if ok:
-                spec = MoveSpec(move, block, task, direction, bottleneck, metric)
+                spec = MoveSpec(
+                    move, focus.block, focus.task, direction, focus.bneck,
+                    focus.metric,
+                )
                 out.append(
                     Candidate(
                         base=design, spec=spec, delta=delta,
@@ -306,9 +198,11 @@ class Explorer:
         batch (lightweight :class:`Candidate` records sharing the current
         design — no clones) and is resumed (``gen.send``) with the matching
         :class:`SimHandle` list. The winner is picked from the handles'
-        fitness column (device-computed on the JAX backend); only that one
-        handle is decoded into a full ``SimResult``, and only on acceptance
-        is its move materialized onto the current design.
+        fitness column (device-computed on the JAX backend); an accepted
+        winner yields only a :class:`SimTelemetry` view (device bottleneck
+        columns + host-exact scalars) for the policy's next selection — the
+        full ``SimResult`` decode is paid once, at exploration end, for the
+        returned best design.
 
         With ``pipeline`` on (auto-enabled on async backends) the coroutine
         runs a TWO-DEEP SPECULATIVE PIPELINE: after receiving batch *i*'s
@@ -318,8 +212,8 @@ class Explorer:
         only then forces batch *i*'s one ``(B,)`` fitness pull. The driver
         encodes and dispatches batch *i+1* while the device is still scoring
         batch *i*, so host work hides behind device compute. On a miss (the
-        move was accepted) the speculated rng/taboo/focus state is rolled
-        back and batch *i+1* is regenerated from the true state — the
+        move was accepted) the speculated rng/policy state is rolled back
+        and batch *i+1* is regenerated from the true state — the
         accepted-move sequence is therefore IDENTICAL to the unpipelined
         coroutine under a fixed seed (asserted in tests); the only cost is
         the discarded device batch, accounted in ``n_sims_wasted``.
@@ -330,79 +224,81 @@ class Explorer:
         ``StopIteration`` value is the :class:`ExplorationResult`."""
         t0 = time.perf_counter()
         cur = initial or Design.base(self.tdg)
+        pol = self.policy
         adopt = getattr(self.backend, "adopt_encoding", None)
         self.n_sims += 1
         (h0,) = yield [Candidate.of_design(cur, self.budget, self.cfg.alpha_met)]
-        cur_res = h0.result()
-        cur_dist = distance(cur_res, self.budget)
+        cur_view: SimTelemetry = h0.telemetry()
+        cur_dist = cur_view.dist(self.budget)
         if adopt is not None:
             adopt(h0)
-        # best keeps a stable-name snapshot: cur mutates in place hereafter.
-        # The snapshot CLONE is deferred (best_stale) until right after the
-        # next dispatch is submitted, so its dict-copy cost hides behind the
-        # device scoring that batch — cur cannot mutate again before then.
-        best_design, best_res, best_dist = cur.clone(rename=False), cur_res, cur_dist
+        # best keeps (handle, stable-name design snapshot): cur mutates in
+        # place hereafter. The snapshot CLONE is deferred (best_stale) until
+        # right after the next dispatch is submitted, so its dict-copy cost
+        # hides behind the device scoring that batch — cur cannot mutate
+        # again before then. The handle is decoded into the best SimResult
+        # only at exploration end (the one decode the search pays).
+        best_design, best_handle, best_dist = cur.clone(rename=False), h0, cur_dist
         best_stale = False
         history: List[dict] = []
-        ledger = CodesignLedger()
         max_it = self.cfg.max_iterations
 
         def select_from(it: int) -> Optional[_Sel]:
             """The head of one serial iteration, from the CURRENT search
-            state: taboo decrement → 5-tuple selection → neighbour
-            generation; iterations yielding no neighbours are taboo'd and
-            skipped exactly as the serial loop's ``continue`` did. Returns
-            None once the iteration budget is spent or the search converged
-            (convergence only moves on accept, so a reject-speculated call
-            sees the truth)."""
+            state: policy taboo decay → focus selection → move proposal →
+            neighbour generation; iterations yielding no neighbours are
+            taboo'd and skipped exactly as the serial loop's ``continue``
+            did. Returns None once the iteration budget is spent or the
+            search converged (convergence only moves on accept, so a
+            reject-speculated call sees the truth)."""
             while it < max_it and not cur_dist.converged():
-                self._taboo = {k: v - 1 for k, v in self._taboo.items() if v > 1}
-                metric = self._select_metric(cur_dist)
-                task = self._select_task(cur, metric, cur_dist, cur_res)
-                block = self._select_block(cur, metric, task, cur_res)
-                bneck = cur_res.task_bottleneck.get(task, "pe")
-                moves = self._select_moves(cur, metric, task, block)
+                pol.tick()
+                focus = pol.select_focus(cur, cur_dist, cur_view)
+                moves = pol.propose_moves(cur, focus)
                 neighbors = self._make_neighbors(
-                    cur, metric, task, block, moves, bneck, self.cfg.neighbors_per_iter
+                    cur, focus, moves, self.cfg.neighbors_per_iter
                 )
                 if neighbors:
-                    return _Sel(it, metric, task, block, bneck, neighbors)
-                self._taboo[(task, block)] = self.cfg.taboo_ttl
+                    return _Sel(it, focus, neighbors)
+                pol.mark_failed(focus.task, focus.block)
                 it += 1
             return None
 
         def resolve(sel: _Sel, handles: List[SimHandle], u: float) -> bool:
             """Rank batch ``sel`` from its fitness column (the one host pull
-            that forces the dispatch) and run the SA accept test with the
-            pre-drawn uniform ``u`` — directly on that column: the backend's
-            fitness IS Eq.-7 (device-computed on JAX, `budgets.distance` on
-            Python), so a rejected iteration never decodes anything. Only an
-            accepted winner is decoded into the ``SimResult`` the next
-            selection reasons over. Commits the accept-path state change;
-            the reject-path taboo add is the caller's (it is part of the
-            speculated continuation)."""
-            nonlocal cur_res, cur_dist, best_design, best_res, best_dist, best_stale
+            that forces the dispatch) and run the policy's accept test with
+            the pre-drawn uniform ``u`` — directly on that column: the
+            backend's fitness IS Eq.-7 (device-computed on JAX,
+            `budgets.distance` on Python), so a rejected iteration never
+            reads anything else. Only an accepted winner yields its
+            telemetry view for the next selection. Commits the accept-path
+            state change; the reject-path taboo add is the caller's (it is
+            part of the speculated continuation)."""
+            nonlocal cur_view, cur_dist, best_design, best_handle, best_dist, best_stale
             assert len(handles) == len(sel.neighbors)
             # stable argmin preserves the precedence order on ties
             fits = [h.fitness for h in handles]
             j = min(range(len(fits)), key=fits.__getitem__)
             cand, move = sel.neighbors[j], sel.neighbors[j].spec.move
             d_before = cur_dist.fitness(self.cfg.alpha_met)
-            d_after = fits[j]
-            temp = self.cfg.temperature0 * self.cfg.temp_decay**sel.it
-            accept = d_after < d_before or (
-                temp > 0 and u < math.exp(-(d_after - d_before) / max(temp, 1e-9))
-            )
+            accept = pol.accept(sel.it, d_before, fits[j], u)
             dist_after = None
             if accept:
-                res = handles[j].result()  # lazy: only the winner pays decode
-                dist_after = distance(res, self.budget)
-            ledger.log(
+                # telemetry view, not a decode: device bottleneck columns +
+                # the host-exact scalar rollup the next selection needs
+                if pol.needs_result:
+                    view = SimTelemetry.of_result(
+                        handles[j].result(), self.tdg, cand.base
+                    )
+                else:
+                    view = handles[j].telemetry()
+                dist_after = view.dist(self.budget)
+            pol.record(
                 FocusRecord(
                     iteration=sel.it,
-                    metric=sel.metric,
-                    workload=workload_of(sel.task),
-                    comm_comp="comp" if sel.bneck == "pe" else "comm",
+                    metric=sel.focus.metric,
+                    workload=workload_of(sel.focus.task),
+                    comm_comp="comp" if sel.focus.bneck == "pe" else "comm",
                     move=move,
                     distance_before=cur_dist.city_block(),
                     distance_after=dist_after.city_block() if accept else cur_dist.city_block(),
@@ -412,16 +308,16 @@ class Explorer:
                 cand.accept(self.tdg)  # materialize the move onto cur
                 if adopt is not None:
                     adopt(handles[j])  # cur's encoding == the winner's row
-                cur_res, cur_dist = res, dist_after
+                cur_view, cur_dist = view, dist_after
                 if cur_dist.city_block() < best_dist.city_block():
-                    best_res, best_dist, best_stale = cur_res, cur_dist, True
+                    best_handle, best_dist, best_stale = handles[j], cur_dist, True
             history.append(
                 {
                     "iteration": sel.it,
                     "n_sims": self.n_sims,
                     "distance": best_dist.city_block(),
                     "fitness": best_dist.fitness(self.cfg.alpha_met),
-                    "metric": sel.metric,
+                    "metric": sel.focus.metric,
                     "move": move,
                     "accepted": accept,
                     "wall_s": time.perf_counter() - t0,
@@ -449,8 +345,8 @@ class Explorer:
             speculate = mode == "always" or (mode == "adaptive" and self._p_rej >= 0.5)
             spec = spec_handles = None
             if speculate:
-                ck = (self.rng.getstate(), dict(self._taboo), self._sticky_focus)
-                self._taboo[(sel.task, sel.block)] = self.cfg.taboo_ttl
+                ck = (self.rng.getstate(), pol.checkpoint())
+                pol.mark_failed(sel.focus.task, sel.focus.block)
                 spec = select_from(sel.it + 1)
                 if spec is not None:
                     spec_handles = yield spec.neighbors  # in flight behind batch i
@@ -468,13 +364,13 @@ class Explorer:
                 continue
             if speculate:
                 # miss: the accepted move invalidated the speculated state —
-                # roll back rng/taboo/focus and regenerate from the truth
+                # roll back rng/policy state and regenerate from the truth
                 self.rng.setstate(ck[0])
-                self._taboo, self._sticky_focus = ck[1], ck[2]
+                pol.restore(ck[1])
                 if spec is not None:
                     self.n_sims_wasted += len(spec.neighbors)
             elif not accepted:
-                self._taboo[(sel.task, sel.block)] = self.cfg.taboo_ttl
+                pol.mark_failed(sel.focus.task, sel.focus.block)
             sel = select_from(sel.it + 1)
             if sel is None:
                 break
@@ -485,6 +381,10 @@ class Explorer:
 
         if best_stale:
             best_design = cur.clone(rename=False)
+        # the exploration's ONE full decode: the returned best result, read
+        # against the stable best-design snapshot (the winner's own base has
+        # long since mutated past the priced state)
+        best_res = best_handle.result_for(best_design)
         return ExplorationResult(
             best_design=best_design,
             best_result=best_res,
@@ -494,8 +394,9 @@ class Explorer:
             n_sims=self.n_sims,
             wall_s=time.perf_counter() - t0,
             history=history,
-            ledger=ledger,
+            ledger=pol.ledger,
             backend_name=self.backend.name,
+            policy_name=pol.name,
             pipelined=self._pipeline != "off",
             n_spec_hits=self.n_spec_hits,
             n_sims_wasted=self.n_sims_wasted,

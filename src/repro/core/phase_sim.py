@@ -44,6 +44,11 @@ class SimResult:
     # concrete bottleneck block instance per task + per-task dynamic energy
     task_bottleneck_block: Dict[str, str] = dataclasses.field(default_factory=dict)
     task_energy_j: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # bottleneck_s resolved to concrete block instances: seconds each block
+    # was the binding bottleneck of some running task (Σ over blocks of one
+    # kind == bottleneck_s[kind]). This is the host reference the device-side
+    # telemetry columns (pe_bneck_s / mem_bneck_s) are validated against.
+    block_bottleneck_s: Dict[str, float] = dataclasses.field(default_factory=dict)
     # Fig-16 system dynamics: time-weighted avg of concurrently-busy PEs
     # (accelerator-level parallelism, Hill & Reddi ALP) and total bytes moved
     avg_accel_parallelism: float = 1.0
@@ -83,6 +88,7 @@ def simulate(
     task_bneck_block: Dict[str, str] = {}
     task_energy_pj: Dict[str, float] = {t: 0.0 for t in tdg.tasks}
     bneck_s: Dict[str, float] = {"pe": 0.0, "mem": 0.0, "noc": 0.0}
+    block_bneck_s: Dict[str, float] = {b: 0.0 for b in design.blocks}
     energy_pj = 0.0
     now = 0.0
     n_phases = 0
@@ -131,7 +137,10 @@ def simulate(
             )
             energy_pj += e
             task_energy_pj[t] += e
-            bneck_s[bottleneck_of(tdg.tasks[t], r)] += phi
+            kind = bottleneck_of(tdg.tasks[t], r)
+            bneck_s[kind] += phi
+            blk = binding_block(design, t, r, kind)
+            block_bneck_s[blk] = block_bneck_s.get(blk, 0.0) + phi
 
         now += phi
         alp_time += len({design.task_pe[t] for t in running}) * phi
@@ -174,6 +183,7 @@ def simulate(
         mem_capacity_bytes=mem_cap,
         task_bottleneck_block=task_bneck_block,
         task_energy_j={t: e * 1e-12 for t, e in task_energy_pj.items()},
+        block_bottleneck_s=block_bneck_s,
         avg_accel_parallelism=alp_time / now if now > 0 else 1.0,
         total_traffic_bytes=traffic_bytes,
     )

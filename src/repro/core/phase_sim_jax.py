@@ -438,6 +438,7 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
     idx3 = jnp.arange(3)
 
     task_pe, task_mem = row["task_pe"], row["task_mem"]
+    n_pe = row["pe_peak"].shape[-1]
     n_mem = row["mem_bw"].shape[-1]
     noc_bw, noc_links = row["noc_bw"], row["noc_links"]
     # loop-invariant hoists: effective peak rates per task and the
@@ -447,10 +448,15 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
     mem_peak = row["mem_bw"][task_mem]
     same_pe = (task_pe[:, None] == task_pe[None, :]).astype(jnp.float32)
     same_mem = (task_mem[:, None] == task_mem[None, :]).astype(jnp.float32)
+    # one-hot task→slot maps: cap rollup and the per-slot bottleneck
+    # telemetry accumulate through these instead of segment_sum scatters
+    onehot_pe = (task_pe[:, None] == jnp.arange(n_pe)[None, :]).astype(jnp.float32)
+    onehot_mem = (task_mem[:, None] == jnp.arange(n_mem)[None, :]).astype(jnp.float32)
     links = jnp.maximum(noc_links, 1)
 
     def phase(_, state):
-        rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, alp_t, traffic, nph = state
+        (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s,
+         pe_bt, mem_bt, alp_t, traffic, nph) = state
         running = (~completed) & jnp.all(~enc.parent_mask | completed[None, :], axis=1)
         runf = jnp.where(running, 1.0, 0.0)
         burst_run = enc.burst * runf
@@ -492,6 +498,12 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         kind_s = kind_s + jnp.sum(
             jnp.where(code[:, None] == idx3[None, :], phi_run[:, None], 0.0), axis=0
         )
+        # per-TASK bottleneck-time accumulators for the block telemetry:
+        # task→slot maps are phase-invariant, so the slot resolution (one
+        # (T,S) matvec each) happens once AFTER the loop — in-loop this is
+        # just two (T,) masked adds, keeping the phase critical path flat
+        pe_bt = pe_bt + jnp.where(code == 0, phi_run, 0.0)
+        mem_bt = mem_bt + jnp.where(code == 1, phi_run, 0.0)
 
         # mask rates BEFORE the phi multiply: slots hosting no running
         # task price as inf bandwidth, and inf · 0 would poison the
@@ -517,7 +529,7 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         return (
             jnp.where(keep, dr_ops, 0.0), jnp.where(keep, dr_rd, 0.0),
             jnp.where(keep, dr_wr, 0.0), completed | newly_done, now, finish,
-            bneck, kind_s, alp_t, traffic, nph,
+            bneck, kind_s, pe_bt, mem_bt, alp_t, traffic, nph,
         )
 
     state = (
@@ -529,13 +541,19 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         jnp.zeros((t,), jnp.float32),
         jnp.zeros((t,), jnp.int32),
         jnp.zeros((3,), jnp.float32),
+        jnp.zeros((t,), jnp.float32),
+        jnp.zeros((t,), jnp.float32),
         jnp.float32(0.0),
         jnp.float32(0.0),
         jnp.int32(0),
     )
-    (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, alp_t, traffic, nph) = (
-        jax.lax.fori_loop(0, t, phase, state)
-    )
+    (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, pe_bt,
+     mem_bt, alp_t, traffic, nph) = jax.lax.fori_loop(0, t, phase, state)
+    # per-BLOCK bottleneck telemetry: phi attribution resolved to the
+    # binding slot (task_pe for compute-bound, task_mem for memory-bound;
+    # NoC-bound seconds are kind_s[2] — one NoC in this regime)
+    pe_b = pe_bt @ onehot_pe
+    mem_b = mem_bt @ onehot_mem
 
     # ---- device-side PPA rollup + Eq.-7 fitness ----------------------
     # dynamic energy is rate-independent (every task drains its totals;
@@ -548,7 +566,6 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
     leak_w = jnp.sum(row["pe_leak"]) + jnp.sum(row["mem_leak"]) + row["noc_leak"]
     energy = dyn_pj * 1e-12 + leak_w * now
     power = jnp.where(now > 0, energy / jnp.maximum(now, 1e-30), 0.0)
-    onehot_mem = (task_mem[:, None] == jnp.arange(n_mem)[None, :]).astype(jnp.float32)
     cap = enc.write_bytes @ onehot_mem
     area = (
         jnp.sum(row["pe_area"])
@@ -572,6 +589,14 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         "all_done": jnp.all(completed),
         "bneck_code": bneck,
         "bneck_kind_s": kind_s,
+        # per-block bottleneck telemetry (slot order = encoding slot order):
+        # seconds each PE/MEM slot was the binding bottleneck, plus the
+        # argmax slot per class — the columns the telemetry-driven policies
+        # select their next focus from without any host-side decode
+        "pe_bneck_s": pe_b,
+        "mem_bneck_s": mem_b,
+        "top_bneck_pe": jnp.argmax(pe_b).astype(jnp.int32),
+        "top_bneck_mem": jnp.argmax(mem_b).astype(jnp.int32),
         "alp_time_s": alp_t,
         "traffic_bytes": traffic,
         "n_phases": nph,

@@ -45,6 +45,7 @@ class TaskGraph:
         self.children: Dict[str, List[str]] = {}
         self.edge_bytes: Dict[Tuple[str, str], float] = {}
         self._par_cache: Dict[str, List[str]] = {}  # parallel_tasks_of memo
+        self._par_set_cache: Dict[str, frozenset] = {}  # parallel_set_of memo
 
     def add_task(self, task: Task) -> Task:
         assert task.name not in self.tasks, task.name
@@ -52,6 +53,7 @@ class TaskGraph:
         self.parents.setdefault(task.name, [])
         self.children.setdefault(task.name, [])
         self._par_cache.clear()
+        self._par_set_cache.clear()
         return task
 
     def add_edge(self, src: str, dst: str, nbytes: float = 0.0) -> None:
@@ -60,6 +62,7 @@ class TaskGraph:
         self.parents[dst].append(src)
         self.edge_bytes[(src, dst)] = nbytes
         self._par_cache.clear()
+        self._par_set_cache.clear()
 
     # ---- structural queries -------------------------------------------
     def roots(self) -> List[str]:
@@ -134,6 +137,17 @@ class TaskGraph:
             hit = self._par_cache[name] = [
                 n for n in self.tasks if n != name and n not in anc and n not in desc
             ]
+        return hit
+
+    def parallel_set_of(self, name: str) -> frozenset:
+        """Frozenset view of :meth:`parallel_tasks_of` — the policy layer's
+        co-residency checks are set intersections against hosted-task lists,
+        and rebuilding a set from the memoized list on every Algorithm-1 move
+        selection was the remaining per-iteration graph cost. Same cache
+        discipline: cleared on any graph edit."""
+        hit = self._par_set_cache.get(name)
+        if hit is None:
+            hit = self._par_set_cache[name] = frozenset(self.parallel_tasks_of(name))
         return hit
 
 

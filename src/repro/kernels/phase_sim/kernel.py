@@ -36,12 +36,17 @@ from jax.experimental.pallas import tpu as pltpu
 BIG = 1e30
 
 # scal output column layout (see _phase_sim_kernel rollup). The first 9
-# columns + the kind triple mirror backend._SCAL_COLS — keep them in sync so
-# the backend's device-side repack of the ops-layer dict folds to a no-op.
+# columns + the kind triple + the top-bottleneck pair mirror
+# backend._SCAL_COLS — keep them in sync so the backend's device-side repack
+# of the ops-layer dict folds to a no-op. ``top_bneck_pe``/``top_bneck_mem``
+# are the argmax slots of the per-block bottleneck-seconds telemetry
+# (pe_bneck / mem_bneck outputs), i.e. the block index a bottleneck-
+# relaxation policy should target next, computed on device.
 SCAL_COLS = (
     "latency_s", "energy_j", "power_w", "area_mm2", "fitness",
     "alp_time_s", "traffic_bytes", "n_phases", "all_done",
     "kind_pe_s", "kind_mem_s", "kind_noc_s",
+    "top_bneck_pe", "top_bneck_mem",
 )
 N_SCAL = len(SCAL_COLS)
 
@@ -81,6 +86,8 @@ def _phase_sim_kernel(
     bneck_ref,   # (1, T) i32
     wllat_ref,   # (1, NW) f32
     scal_ref,    # (1, N_SCAL) f32 (SCAL_COLS order)
+    pe_bneck_ref,   # (1, S) f32 per-PE-slot binding-bottleneck seconds
+    mem_bneck_ref,  # (1, S) f32 per-MEM-slot binding-bottleneck seconds
     # --- VMEM scratch (loop-invariant stage, reused across phases) -------
     ohp_ref,       # (T, S) f32 one-hot task→PE-slot
     ohm_ref,       # (T, S) f32 one-hot task→MEM-slot
@@ -125,7 +132,8 @@ def _phase_sim_kernel(
     kind_ids = jax.lax.broadcasted_iota(jnp.int32, (t, 3), 1)
 
     def phase(_, state):
-        rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, alp_t, traffic, nph = state
+        (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s,
+         pe_bt, mem_bt, alp_t, traffic, nph) = state
         same_pe = same_pe_ref[...]
         same_mem = same_mem_ref[...]
         # ready ⟺ zero incomplete parents (counts are exact small ints)
@@ -168,6 +176,11 @@ def _phase_sim_kernel(
         kind_s = kind_s + jnp.sum(
             jnp.where(code[:, None] == kind_ids, phi_run[:, None], 0.0), axis=0
         )
+        # per-TASK bottleneck-time accumulators: the task→slot resolution
+        # (one VMEM one-hot matvec each) is hoisted to after the loop —
+        # in-loop the telemetry costs two (T,) masked adds
+        pe_bt = pe_bt + jnp.where(code == 0, phi_run, 0.0)
+        mem_bt = mem_bt + jnp.where(code == 1, phi_run, 0.0)
 
         # mask rates BEFORE the phi multiply (inf · 0 would poison remains)
         d_ops = jnp.where(running, compute, 0.0) * phi
@@ -188,19 +201,22 @@ def _phase_sim_kernel(
         return (
             jnp.where(keep, dr_ops, 0.0), jnp.where(keep, dr_rd, 0.0),
             jnp.where(keep, dr_wr, 0.0), completed | newly_done, now, finish,
-            bneck, kind_s, alp_t, traffic, nph,
+            bneck, kind_s, pe_bt, mem_bt, alp_t, traffic, nph,
         )
 
     state = (
         work, rd_b, wr_b, completed0,
         f32(0.0), jnp.zeros((t,), f32), jnp.zeros((t,), jnp.int32),
-        jnp.zeros((3,), f32), f32(0.0), f32(0.0), f32(0.0),
+        jnp.zeros((3,), f32), jnp.zeros((t,), f32), jnp.zeros((t,), f32),
+        f32(0.0), f32(0.0), f32(0.0),
     )
     # every phase retires ≥ 1 of the t_real live tasks, so t_real iterations
     # suffice; once all are done, phases are zero-length no-ops
-    (_, _, _, completed, now, finish, bneck, kind_s, alp_t, traffic, nph) = (
-        jax.lax.fori_loop(0, t_real, phase, state)
-    )
+    (_, _, _, completed, now, finish, bneck, kind_s, pe_bt, mem_bt, alp_t,
+     traffic, nph) = jax.lax.fori_loop(0, t_real, phase, state)
+    # slot-resolve the per-task bottleneck time once (phase-invariant maps)
+    pe_b = dot(pe_bt, ohp_ref[...])
+    mem_b = dot(mem_bt, ohm_ref[...])
 
     # ---- device-side PPA rollup + Eq.-7 fitness -------------------------
     wlhot = wlhot_ref[...]
@@ -230,10 +246,13 @@ def _phase_sim_kernel(
     finish_ref[0] = finish
     bneck_ref[0] = bneck
     wllat_ref[0] = wl_lat
+    pe_bneck_ref[0] = pe_b
+    mem_bneck_ref[0] = mem_b
     scal_ref[0] = jnp.stack([
         now, energy, power, area, fitness, alp_t, traffic, nph,
         jnp.where(jnp.all(completed), 1.0, 0.0),
         kind_s[0], kind_s[1], kind_s[2],
+        jnp.argmax(pe_b).astype(f32), jnp.argmax(mem_b).astype(f32),
     ])
 
 
@@ -256,7 +275,9 @@ def phase_sim_batch(
     interpret: bool = False,
 ):
     """One fused launch over the (B, T) grid; returns (finish, bneck,
-    wl_latency, scal) with the scal columns laid out as ``SCAL_COLS``."""
+    wl_latency, scal, pe_bneck, mem_bneck) with the scal columns laid out as
+    ``SCAL_COLS`` and the per-slot bottleneck-seconds telemetry in the two
+    trailing (B, S) blocks."""
     b, t = task_pe.shape
     s_pe = pe_coeffs["pe_peak"].shape[1]
     s_mem = mem_coeffs["mem_bw"].shape[1]
@@ -266,7 +287,7 @@ def phase_sim_batch(
     perb = lambda w: pl.BlockSpec((1, w), lambda i: (i, 0))
 
     kernel = functools.partial(_phase_sim_kernel, t_real=t_real)
-    finish, bneck, wllat, scal = pl.pallas_call(
+    finish, bneck, wllat, scal, pe_bneck, mem_bneck = pl.pallas_call(
         kernel,
         grid=(b,),
         in_specs=[
@@ -277,12 +298,15 @@ def phase_sim_batch(
             perb(s_mem), perb(s_mem), perb(s_mem), perb(s_mem), perb(s_mem),
             perb(N_NOCS), perb(n_wl),
         ],
-        out_specs=[perb(t), perb(t), perb(n_wl), perb(N_SCAL)],
+        out_specs=[perb(t), perb(t), perb(n_wl), perb(N_SCAL),
+                   perb(s_pe), perb(s_mem)],
         out_shape=[
             jax.ShapeDtypeStruct((b, t), jnp.float32),
             jax.ShapeDtypeStruct((b, t), jnp.int32),
             jax.ShapeDtypeStruct((b, n_wl), jnp.float32),
             jax.ShapeDtypeStruct((b, N_SCAL), jnp.float32),
+            jax.ShapeDtypeStruct((b, s_pe), jnp.float32),
+            jax.ShapeDtypeStruct((b, s_mem), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((t, s_pe), jnp.float32),
@@ -300,4 +324,4 @@ def phase_sim_batch(
         mem_coeffs["mem_area_fixed"], mem_coeffs["mem_area_per_mb"],
         nocs, wlbud,
     )
-    return finish, bneck, wllat, scal
+    return finish, bneck, wllat, scal, pe_bneck, mem_bneck

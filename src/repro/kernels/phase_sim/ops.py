@@ -12,8 +12,9 @@ The wrapper owns the layout differences:
     (the TPU lane count) under Mosaic, a multiple of 8 in interpret mode so
     CPU CI exercises the padded-task masking on every run;
   * per-candidate scalars (NoC knobs + Eq.-7 budgets) are packed into one
-    ``(B, 8)`` array, and scalar outputs come back as one ``(B, 12)``
-    column block (``kernel.SCAL_COLS``) that is unpacked here;
+    ``(B, 8)`` array, and scalar outputs come back as one ``(B, 14)``
+    column block (``kernel.SCAL_COLS``) plus the two per-slot
+    bottleneck-seconds telemetry blocks, unpacked here;
   * the workload one-hot used for the per-workload latency max is built
     host-side once per trace.
 
@@ -94,7 +95,7 @@ def phase_sim(
     assert nocs.shape[1] == N_NOCS
     wlbud = jnp.asarray(rows["wl_budget"], f32)
 
-    finish, bneck, wllat, scal = phase_sim_batch(
+    finish, bneck, wllat, scal, pe_bneck, mem_bneck = phase_sim_batch(
         work, rd, wr, burst, pmask, wlhot,
         task_pe, task_mem, accel, pe_coeffs, mem_coeffs, nocs, wlbud,
         t_real=t_real, interpret=interpret,
@@ -109,6 +110,10 @@ def phase_sim(
         "bneck_kind_s": jnp.stack(
             [col["kind_pe_s"], col["kind_mem_s"], col["kind_noc_s"]], axis=1
         ),
+        "pe_bneck_s": pe_bneck,
+        "mem_bneck_s": mem_bneck,
+        "top_bneck_pe": col["top_bneck_pe"].astype(jnp.int32),
+        "top_bneck_mem": col["top_bneck_mem"].astype(jnp.int32),
         "alp_time_s": col["alp_time_s"],
         "traffic_bytes": col["traffic_bytes"],
         "n_phases": col["n_phases"].astype(jnp.int32),

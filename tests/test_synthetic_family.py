@@ -1,0 +1,94 @@
+"""Generative workload-scenario family + the policy × scenario Campaign
+sweep (the credibility axis: breadth of scenarios, per DS3/SoC-Tuner)."""
+import math
+
+import pytest
+from _optional_hypothesis import given, settings, st
+
+from repro.core import (
+    Campaign,
+    HardwareDatabase,
+    simulate,
+    synthetic_family,
+)
+from repro.core.design import Design
+from repro.core.workloads import synthetic_budget
+
+DB = HardwareDatabase()
+
+
+def test_family_is_deterministic_and_sized():
+    a = synthetic_family(seed=3, n=4, db=DB)
+    b = synthetic_family(seed=3, n=4, db=DB)
+    assert [s.name for s in a] == [s.name for s in b]
+    for x, y in zip(a, b):
+        assert list(x.tdg.tasks) == list(y.tdg.tasks)
+        assert x.tdg.edge_bytes == y.tdg.edge_bytes
+        assert x.budget == y.budget
+    # distinct seeds generate distinct graphs
+    c = synthetic_family(seed=4, n=4, db=DB)
+    assert any(
+        list(x.tdg.tasks) != list(z.tdg.tasks) or x.tdg.edge_bytes != z.tdg.edge_bytes
+        for x, z in zip(a, c)
+    )
+
+
+@given(st.integers(0, 10**6), st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_family_graphs_acyclic_with_consistent_budgets(seed, n):
+    """Property: every generated scenario validates as a DAG, stays within
+    the requested size envelope, and carries a budget consistent with its
+    own graph — latency key matches the graph name, the target sits between
+    the analytic ideal floor and the base design's simulated latency, and
+    power/area are positive and finite."""
+    for scen in synthetic_family(seed=seed, n=n, db=DB, min_tasks=5, max_tasks=12):
+        g = scen.tdg
+        g.validate()  # raises on cycles / dangling edges
+        assert 5 <= len(g.tasks) <= 12 + 1  # +1: the closing sink
+        assert len(g.roots()) == 1
+        sinks = [t for t in g.tasks if not g.children[t]]
+        assert len(sinks) == 1
+        bud = scen.budget
+        assert set(bud.latency_s) == {g.name}
+        base_lat = simulate(Design.base(g), g, DB).latency_s
+        assert 0.0 < bud.latency_s[g.name] < base_lat
+        assert math.isfinite(bud.power_w) and bud.power_w > 0
+        assert math.isfinite(bud.area_mm2) and bud.area_mm2 > 0
+
+
+def test_synthetic_budget_speedup_target():
+    scen = synthetic_family(seed=1, n=1, db=DB)[0]
+    base_lat = simulate(Design.base(scen.tdg), scen.tdg, DB).latency_s
+    tight = synthetic_budget(scen.tdg, DB, speedup_target=4.0)
+    assert tight.latency_s[scen.tdg.name] == pytest.approx(base_lat / 4.0)
+
+
+def test_policy_scenario_sweep_through_campaign():
+    """Acceptance bar: a policy × scenario grid (≥ 6 synthetic scenarios)
+    runs through one Campaign, and FarsiPolicy reaches budget in no more
+    iterations than NaiveSA on ≥ 4 of them (strictly fewer on ≥ 4, in
+    fact, under these seeds)."""
+    cap = 150
+    scens = synthetic_family(seed=0, n=6, db=DB)
+    camp = Campaign.policy_sweep(
+        DB, scens, policies=("naive_sa", "farsi"), seeds=(0,),
+        backend="python", max_iterations=cap,
+    )
+    res = camp.run()
+    assert len(res.runs) == 12
+    wins = 0
+    for s in scens:
+        farsi = res.runs[f"{s.name}.farsi.s0"]
+        naive = res.runs[f"{s.name}.naive_sa.s0"]
+        assert farsi.policy_name == "farsi" and naive.policy_name == "naive_sa"
+        if farsi.iterations_to_budget(cap) < naive.iterations_to_budget(cap):
+            wins += 1
+    assert wins >= 4, res.iterations_to_budget(cap)
+    # per-policy aggregate ranks the same way
+    means = res.policy_iterations(cap)
+    assert means["farsi"] < means["naive_sa"]
+    # satellite: Fig.-10 co-design aggregates survive campaign aggregation
+    for v in ("metric", "workload", "comm_comp", "opt_level"):
+        assert f"codesign_switch_rate_{v}" in res.aggregate
+        assert f"codesign_contribution_{v}" in res.aggregate
+    assert 0.0 <= res.aggregate["codesign_switch_rate_metric"] <= 1.0
