@@ -31,7 +31,9 @@ generated synthetic-scenario family through ``Campaign.policy_sweep``.
 ``run(smoke=True)`` is the CI guard (`python -m benchmarks.run --smoke`):
 tiny iteration counts, and it *asserts* (a) JAX beats Python on
 neighbour-eval throughput, (b) both backends agree on the winning
-candidate's latency, (c) kernel-vs-ref fitness parity ≤ 1e-5, (d) the
+candidate's latency, (b') multi-NoC chain batches dispatch at ≥ 0.5x the
+single-NoC throughput with ``n_fallback == 0`` (the array-native topology
+regime), (c) kernel-vs-ref fitness parity ≤ 1e-5, (d) the
 pipeline stall guard: with speculation forced on, a second dispatch must
 have been submitted while the first was un-consumed (``n_inflight_max ≥
 2`` — host encode overlapping device scoring), the accepted-move sequence
@@ -62,7 +64,7 @@ from repro.core import (
     random_single_noc_designs,
     synthetic_family,
 )
-from repro.core.moves import MOVE_KINDS, MoveDelta, MoveSpec, apply_move
+from repro.core.moves import MOVE_KINDS, MoveDelta, MoveSpec, apply_fork, apply_move
 
 from .common import Row, timeit
 
@@ -159,9 +161,43 @@ def run(smoke: bool = False) -> List[Row]:
         breakdown["ref_dispatch_wall_s"] = t_jx * 1e-6
         breakdown["kernel_vs_ref_parity"] = k_rel
 
+        # ---- multi-NoC vs single-NoC dispatch throughput -----------------
+        # the array-native topology regime: chain designs (one NoC fork on
+        # top of the same random single-NoC population) must price through
+        # the batched path — n_fallback == 0 — at ≥ 0.5x the single-NoC
+        # dispatch throughput (the padded-N striping loop is the only cost)
+        singles = random_single_noc_designs(g, batch, seed=23)
+        multis = random_single_noc_designs(g, batch, seed=23)
+        for d in multis:
+            apply_fork(d, g, d.noc_chain[0])
+        c_single = [Candidate.of_design(d, bud) for d in singles]
+        c_multi = [Candidate.of_design(d, bud) for d in multis]
+        jm = JaxBatchedBackend(g, db)
+        _consume(jm.evaluate_candidates(c_single))  # compile both buckets
+        _consume(jm.evaluate_candidates(c_multi))
+        t_s1 = t_m1 = float("inf")
+        for _ in range(reps):
+            t_s1 = min(t_s1, timeit(lambda: _consume(jm.evaluate_candidates(c_single)), n=1))
+            t_m1 = min(t_m1, timeit(lambda: _consume(jm.evaluate_candidates(c_multi)), n=1))
+        multi_ratio = t_s1 / max(t_m1, 1e-9)  # multi-NoC throughput / single
+        assert jm.stats().n_fallback == 0, jm.stats()
+        breakdown["multi_noc_vs_single_dispatch"] = multi_ratio
+        rows.append(
+            (
+                f"simbackend.{g.name}.multi_noc",
+                t_m1 / batch,
+                f"multi={batch/(t_m1*1e-6):.0f}/s single={batch/(t_s1*1e-6):.0f}/s "
+                f"ratio={multi_ratio:.2f}x n_fallback=0 batch={batch}",
+            )
+        )
+
         if smoke:
             assert evals_jx / max(evals_py, 1e-9) >= 1.0, (
                 f"jax neighbour-eval slower than python: {evals_jx:.0f}/s vs {evals_py:.0f}/s"
+            )
+            assert multi_ratio >= 0.5, (
+                f"multi-NoC dispatch regression: {multi_ratio:.2f}x of the "
+                f"single-NoC path (floor 0.5x)"
             )
             hj = jx.evaluate_candidates(cands)
             hp = py.evaluate_candidates(cands)
@@ -357,6 +393,7 @@ def run(smoke: bool = False) -> List[Row]:
         rows.append((
             "simbackend.smoke", 0.0,
             "speedup>=1, winner equivalence, kernel parity<=1e-5, "
+            "multi-noc dispatch>=0.5x single-noc + n_fallback=0, "
             "pipeline depth>=2 + identical search + compiles<=4, "
             "policy convergence farsi<=naive_sa: OK",
         ))

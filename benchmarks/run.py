@@ -72,10 +72,12 @@ def main() -> None:
         action="store_true",
         help="perf-regression guard: tiny simbackend run that *asserts* the "
         "JAX neighbour-eval path beats the Python path, both agree on the "
-        "winner, the Pallas kernel matches the ref path ≤1e-5, the "
-        "dispatch pipeline actually overlaps (depth ≥ 2, identical search, "
-        "n_compiles ≤ 4), and FarsiPolicy converges in ≤ NaiveSA's "
-        "iterations on audio — non-zero exit on regression; invoked by tier-1",
+        "winner, multi-NoC batches dispatch at ≥0.5x the single-NoC "
+        "throughput with zero fallbacks, the Pallas kernel matches the ref "
+        "path ≤1e-5, the dispatch pipeline actually overlaps (depth ≥ 2, "
+        "identical search, n_compiles ≤ 4), and FarsiPolicy converges in ≤ "
+        "NaiveSA's iterations on audio — non-zero exit on regression; "
+        "invoked by tier-1",
     )
     args = ap.parse_args()
     if args.smoke:

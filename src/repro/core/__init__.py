@@ -26,6 +26,7 @@ from .phase_sim import SimResult, simulate
 from .policy import (
     POLICIES,
     BottleneckRelaxation,
+    DevCostPolicy,
     FarsiPolicy,
     Focus,
     HeuristicPolicy,
@@ -75,6 +76,7 @@ __all__ = [
     "AWARENESS_LEVELS",
     "POLICIES",
     "BottleneckRelaxation",
+    "DevCostPolicy",
     "FarsiPolicy",
     "Focus",
     "HeuristicPolicy",

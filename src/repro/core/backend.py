@@ -10,10 +10,13 @@ so the search loop never cares how a design is priced:
                           (`phase_sim.simulate`), one design at a time.
   ``JaxBatchedBackend`` — flat-array encodings evaluated under `vmap` in one
                           XLA dispatch per batch (`phase_sim_jax`), with a
-                          jit cache keyed on power-of-two padded slot/batch
-                          shapes and a transparent per-design fallback to the
-                          Python path for designs outside the vectorized
-                          regime (multi-NoC topologies).
+                          jit cache keyed on power-of-two padded
+                          slot/batch/NoC-chain shapes. Multi-NoC chains are
+                          encoded natively (NoC fork/join moves are ordinary
+                          deltas); the transparent per-design fallback to the
+                          Python path remains only for shapes the encoding
+                          cannot host (``UnsupportedDesignError`` — chains
+                          beyond ``phase_sim_jax.MAX_NOC``).
 
 The DSE hot path is :meth:`evaluate_candidates`: the explorer submits
 lightweight :class:`Candidate` records (base design + recorded move delta —
@@ -101,13 +104,23 @@ class Candidate:
         return Candidate(base=design, budget=budget, alpha=alpha)
 
     def vectorizable(self) -> bool:
-        """True when the *resulting* design stays in the single-NoC regime
-        and (for moved candidates) the delta path can encode it."""
-        if len(self.base.noc_chain) != 1:
-            return False
-        if self.spec is None:
-            return True
-        return self.delta is not None and not self.delta.topology
+        """True when the *resulting* design stays inside the encodable
+        regime (a chain of at most ``phase_sim_jax.MAX_NOC`` NoCs) and (for
+        moved candidates) the delta path can encode it — topology moves
+        included, since NoC fork/join record chain/attachment edits."""
+        from .phase_sim_jax import MAX_NOC
+
+        n = len(self.base.noc_chain)
+        if self.spec is not None:
+            if self.delta is None or self.delta.topology:
+                return False
+            blocks = self.base.blocks
+            for b in self.delta.added:
+                n += b.kind == BlockKind.NOC
+            for name in self.delta.removed:
+                blk = blocks.get(name)
+                n -= blk is not None and blk.kind == BlockKind.NOC
+        return 1 <= n <= MAX_NOC
 
     def _replay(self, tdg: TaskGraph) -> None:
         """Replay the recorded move, then rename any block the replay minted
@@ -304,9 +317,9 @@ class SimTelemetry:
         "_tdg", "_res", "_design",
         "latency_s", "power_w", "area_mm2",
         "_wl_lat", "_tep", "_cap",
-        "_fin", "_index", "_codes", "_task_pe", "_task_mem", "_noc",
-        "_pe_names", "_mem_names", "_pe_busy", "_mem_busy", "_kind",
-        "_top_pe", "_top_mem",
+        "_fin", "_index", "_codes", "_task_pe", "_task_mem", "_nocs",
+        "_pe_names", "_mem_names", "_pe_busy", "_mem_busy", "_noc_busy",
+        "_kind", "_top_pe", "_top_mem",
     )
 
     # ---- births ----------------------------------------------------------
@@ -333,6 +346,7 @@ class SimTelemetry:
         t._kind = out["bneck_kind_s"][j]
         t._pe_busy = out["pe_bneck_s"][j]
         t._mem_busy = out["mem_bneck_s"][j]
+        t._noc_busy = out["noc_bneck_s"][j]
         t.latency_s = float(out["latency_s"][j])
         # design-dependent snapshot: the base design is only guaranteed to be
         # in the priced state NOW, so task→block maps and the host-exact
@@ -348,7 +362,7 @@ class SimTelemetry:
             t.power_w = energy / t.latency_s if t.latency_s > 0 else 0.0
             t._task_pe = dict(design.task_pe)
             t._task_mem = dict(design.task_mem)
-            t._noc = design.noc_chain[0]
+            t._nocs = list(design.noc_chain)
             t._pe_names = [n for n, b in design.blocks.items()
                            if b.kind == BlockKind.PE]
             t._mem_names = [n for n, b in design.blocks.items()
@@ -394,14 +408,15 @@ class SimTelemetry:
     def task_bneck(self, t: str) -> str:
         if self._res is not None:
             return self._res.task_bottleneck.get(t, "pe")
-        return _BNECK_KINDS[int(self._codes[self._index[t]])]
+        # codes are packed: 0/1 = pe/mem, 2 + 3·k = NoC at chain index k
+        return _BNECK_KINDS[min(int(self._codes[self._index[t]]), 2)]
 
     def task_bneck_block(self, t: str) -> Optional[str]:
         if self._res is not None:
             return self._res.task_bottleneck_block.get(t)
         c = int(self._codes[self._index[t]])
         return self._task_pe[t] if c == 0 else (
-            self._task_mem[t] if c == 1 else self._noc
+            self._task_mem[t] if c == 1 else self._nocs[(c - 2) // 3]
         )
 
     # ---- device bottleneck telemetry -------------------------------------
@@ -451,7 +466,9 @@ class SimTelemetry:
         out.update(
             (n, float(self._mem_busy[i])) for i, n in enumerate(self._mem_names)
         )
-        out[self._noc] = float(self._kind[2])
+        out.update(
+            (n, float(self._noc_busy[i])) for i, n in enumerate(self._nocs)
+        )
         return out
 
 
@@ -511,8 +528,8 @@ def _bucket(n: int) -> int:
 
 
 # layout of the device-packed scalar column block: the jit wrapper stacks
-# every per-design scalar into ONE (B, 14 + 2·S) matrix, so a batch crosses
-# the device boundary as 3 leaves (scal, finish_s, bneck_code) —
+# every per-design scalar into ONE (B, 14 + 2·S + N) matrix, so a batch
+# crosses the device boundary as 3 leaves (scal, finish_s, bneck_code) —
 # per-leaf transfer + pytree overhead was a measurable slice of the
 # explorer's serial iteration. Column order mirrors
 # kernels/phase_sim/kernel.SCAL_COLS (the Pallas kernel's own packed
@@ -520,8 +537,9 @@ def _bucket(n: int) -> int:
 # to a no-op under jit and a future column lands identically in both.
 # Fixed columns first: the 9 named below, then bneck_kind_s at 9:12 and the
 # top-bottleneck slot indices at 12:14; the per-block bottleneck-seconds
-# telemetry (pe_bneck_s then mem_bneck_s, S padded slots each) rides in the
-# variable-width tail, split on host from the leaf's total width.
+# telemetry (pe_bneck_s, mem_bneck_s — S padded slots each — then
+# noc_bneck_s over the N padded chain positions) rides in the
+# variable-width tail, split on host via the batch's recorded (S, N) dims.
 _SCAL_COLS = (
     "latency_s", "energy_j", "power_w", "area_mm2", "fitness",
     "alp_time_s", "traffic_bytes", "n_phases", "all_done",
@@ -543,12 +561,13 @@ class _JaxBatch:
     to retire the batch from its in-flight pipeline accounting (a completed
     transfer implies the dispatch finished computing)."""
 
-    __slots__ = ("out", "stats", "eds", "_host", "consumed")
+    __slots__ = ("out", "stats", "eds", "dims", "_host", "consumed")
 
-    def __init__(self, out, stats: BackendStats, eds) -> None:
+    def __init__(self, out, stats: BackendStats, eds, dims) -> None:
         self.out = out
         self.stats = stats
         self.eds = eds  # per-row EncodedDesign (for adopt_encoding)
+        self.dims = dims  # (padded slot count S, padded NoC count N)
         self._host: Optional[Dict[str, np.ndarray]] = None
         self.consumed = False
 
@@ -565,9 +584,11 @@ class _JaxBatch:
             host["bneck_kind_s"] = scal[:, 9:12]
             host["top_bneck_pe"] = scal[:, 12]
             host["top_bneck_mem"] = scal[:, 13]
-            s_busy = (scal.shape[1] - _N_FIXED_SCAL) // 2
-            host["pe_bneck_s"] = scal[:, _N_FIXED_SCAL:_N_FIXED_SCAL + s_busy]
-            host["mem_bneck_s"] = scal[:, _N_FIXED_SCAL + s_busy:]
+            s_busy, n_noc = self.dims
+            f = _N_FIXED_SCAL
+            host["pe_bneck_s"] = scal[:, f:f + s_busy]
+            host["mem_bneck_s"] = scal[:, f + s_busy:f + 2 * s_busy]
+            host["noc_bneck_s"] = scal[:, f + 2 * s_busy:f + 2 * s_busy + n_noc]
             host["finish_s"] = raw["finish_s"]
             host["bneck_code"] = raw["bneck_code"]
             self._host = host
@@ -627,6 +648,7 @@ class _JaxHandle:
             out["bneck_kind_s"][j],
             out["pe_bneck_s"][j],
             out["mem_bneck_s"][j],
+            out["noc_bneck_s"][j],
             float(out["alp_time_s"][j]),
             float(out["traffic_bytes"][j]),
             int(out["n_phases"][j]),
@@ -640,14 +662,17 @@ class _JaxHandle:
 
 
 class JaxBatchedBackend:
-    """One batched dispatch per batch of single-NoC candidates.
+    """One batched dispatch per batch of candidates (multi-NoC included).
 
     Latency/finish times and the Eq.-7 fitness come from the vectorized
     phase+scoring kernel; the rest of ``SimResult`` is reconstructed exactly
     on the host, lazily: PPA rollups are O(blocks) closed forms, and per-task
     dynamic energy depends only on total drained work (every task runs to
-    completion), not on phase rates. Candidates outside the single-NoC
-    regime fall back to the Python simulator per design, inside the same
+    completion) and its route hop count, not on phase rates. Chain
+    topologies are encoded natively up to ``phase_sim_jax.MAX_NOC`` NoCs —
+    topology moves (NoC fork/join) price on device like any other move;
+    only shapes the encoding cannot host (``UnsupportedDesignError``) fall
+    back to the Python simulator per design, inside the same
     ``evaluate_candidates`` call.
 
     Two device formulations of the same math sit behind the jit cache:
@@ -728,7 +753,9 @@ class JaxBatchedBackend:
         self._noc_pj = e.noc_pj_per_byte_hop
 
     def supports(self, design: Design) -> bool:
-        return len(design.noc_chain) == 1
+        from .phase_sim_jax import MAX_NOC
+
+        return 1 <= len(design.noc_chain) <= MAX_NOC
 
     def stats(self) -> BackendStats:
         return self._stats
@@ -839,7 +866,8 @@ class JaxBatchedBackend:
                 )
                 scal = jnp.concatenate(
                     [scal, out["bneck_kind_s"], tops,
-                     out["pe_bneck_s"], out["mem_bneck_s"]],
+                     out["pe_bneck_s"], out["mem_bneck_s"],
+                     out["noc_bneck_s"]],
                     axis=1,
                 )
                 return {
@@ -879,8 +907,8 @@ class JaxBatchedBackend:
         self, batch: List[Candidate], idx: List[int], results: List[Optional[SimHandle]]
     ) -> None:
         from .phase_sim_jax import (
-            ENCODED_FIELDS, EncodedDesign, alloc_rows, apply_delta, fill_budget,
-            fill_row, fill_row_fields,
+            ENCODED_FIELDS, EncodedDesign, UnsupportedDesignError, alloc_rows,
+            apply_delta, fill_budget, fill_row, fill_row_fields,
         )
 
         tE = time.perf_counter()
@@ -892,35 +920,65 @@ class JaxBatchedBackend:
         # and rewrites only what each move changed.
         base_encs: Dict[int, EncodedDesign] = {}
         eds: List[EncodedDesign] = []
-        for c in batch:
+        keep: List[int] = []
+        for pos, c in enumerate(batch):
             key = id(c.base)
-            ed = base_encs.get(key)
-            if ed is None:
-                # adopted encodings first: the explorer promotes the accepted
-                # winner's delta-encoding (bit-identical to a from-scratch
-                # encode of the mutated design), so steady-state dispatches
-                # never re-walk the base design's object graph at all
-                adopted = self._adopted.get(key)
-                if adopted is not None and adopted[0] is c.base:
-                    ed = adopted[1]
-                else:
-                    ed = EncodedDesign.of(c.base, self.tdg, self.db, self._enc)
-                base_encs[key] = ed
-            if c.spec is not None:
-                ed = apply_delta(ed, c.delta, c.base, self.tdg, self.db, self._enc)
+            try:
+                ed = base_encs.get(key)
+                if ed is None:
+                    # adopted encodings first: the explorer promotes the
+                    # accepted winner's delta-encoding (bit-identical to a
+                    # from-scratch encode of the mutated design), so steady-
+                    # state dispatches never re-walk the base design's
+                    # object graph at all
+                    adopted = self._adopted.get(key)
+                    if adopted is not None and adopted[0] is c.base:
+                        ed = adopted[1]
+                    else:
+                        ed = EncodedDesign.of(c.base, self.tdg, self.db, self._enc)
+                    base_encs[key] = ed
+                if c.spec is not None:
+                    ed = apply_delta(ed, c.delta, c.base, self.tdg, self.db, self._enc)
+            except UnsupportedDesignError:
+                # the typed capability check: shapes the encoding cannot
+                # host route to the exact scalar path, mid-batch
+                with c.materialized(self.tdg) as d:
+                    res = simulate(d, self.tdg, self.db)
+                results[idx[pos]] = _ReadyHandle(
+                    res, _host_fitness(res, c), c, self.tdg
+                )
+                self._stats.n_fallback += 1
+                continue
+            keep.append(pos)
             eds.append(ed)
+        if len(keep) != len(batch):
+            batch = [batch[p] for p in keep]
+            idx = [idx[p] for p in keep]
+            if not batch:
+                return
 
         # pad slots and batch to power-of-two buckets: the jit cache then sees
         # a handful of shapes over a whole exploration instead of one per
         # block-count the moves walk through. Slot counts are bounded by the
         # task count (moves allocate at most ~one block per task), so pinning
         # the shared PE/MEM slot bucket at pow2(T) collapses that shape axis
-        # to one entry per workload; only the batch axis still varies.
-        need = max(max(e.pe_peak.shape[0], e.mem_bw.shape[0]) for e in eds)
+        # to one entry per workload; only the batch axis still varies. The
+        # NoC-chain axis buckets to pow2 WITHOUT a floor: the dominant
+        # single-NoC regime stays at N = 1 (compiling to exactly the
+        # historic kernel), and topology-heavy searches add at most
+        # log2(MAX_NOC) shapes.
+        # bucket over the candidate encodings AND their bases: the group
+        # fill broadcasts each base row before applying diffs, so a batch of
+        # all-join candidates (one slot/NoC fewer than base) must still
+        # host the base's shape
+        all_encs = list(base_encs.values())
+        all_encs.extend(eds)
+        need = max(max(e.pe_peak.shape[0], e.mem_bw.shape[0]) for e in all_encs)
         slots = _bucket(max(need, len(self._enc.names)))
+        n_noc = max(1, _pow2(max(e.noc_bw.shape[0] for e in all_encs)))
         b = len(batch)
         b_pad = _bucket(b)
-        key = (b_pad, slots)
+        key = (b_pad, slots, n_noc)
         # double-buffered per bucket: the previous dispatch of this shape may
         # still be reading its (possibly zero-copy-aliased) host buffer, so a
         # pipelined encode flips to the other one. Two suffice for the
@@ -933,7 +991,8 @@ class JaxBatchedBackend:
         rows = pair[sel]
         if rows is None:
             rows = pair[sel] = alloc_rows(
-                b_pad, len(self._enc.names), slots, slots, len(self._enc.wl_names)
+                b_pad, len(self._enc.names), slots, slots,
+                len(self._enc.wl_names), n_noc,
             )
         # reuse guard: two buffers cover the explorer's two-deep pipeline,
         # but the protocol lets callers keep MORE dispatches un-consumed. If
@@ -969,13 +1028,7 @@ class JaxBatchedBackend:
         if fast:
             base_ed = prev[0]
             for k, f in prev[3]:
-                if f == "noc":
-                    rows["noc_bw"][k] = base_ed.noc_bw
-                    rows["noc_links"][k] = base_ed.noc_links
-                    rows["noc_leak"][k] = base_ed.noc_leak
-                    rows["noc_area"][k] = base_ed.noc_area
-                else:
-                    fill_row_fields(rows, k, base_ed, (f,))
+                fill_row_fields(rows, k, base_ed, (f,))
             for k in range(b):
                 ed = eds[k]
                 if ed is not base_ed:
@@ -985,12 +1038,6 @@ class JaxBatchedBackend:
                     ]
                     fill_row_fields(rows, k, ed, changed)
                     dirty.extend((k, f) for f in changed)
-                    if ed.noc_bw != base_ed.noc_bw or ed.noc_links != base_ed.noc_links:
-                        rows["noc_bw"][k] = ed.noc_bw
-                        rows["noc_links"][k] = ed.noc_links
-                        rows["noc_leak"][k] = ed.noc_leak
-                        rows["noc_area"][k] = ed.noc_area
-                        dirty.append((k, "noc"))
             self._buf_state[bufkey] = (base_ed, c0.budget, c0.alpha, dirty)
         else:
             # fill per base-group: write the base encoding + budget once,
@@ -1021,12 +1068,6 @@ class JaxBatchedBackend:
                         ]
                         fill_row_fields(rows, k, ed, changed)
                         dirty.extend((k, f) for f in changed)
-                        if ed.noc_bw != base_ed.noc_bw or ed.noc_links != base_ed.noc_links:
-                            rows["noc_bw"][k] = ed.noc_bw
-                            rows["noc_links"][k] = ed.noc_links
-                            rows["noc_leak"][k] = ed.noc_leak
-                            rows["noc_area"][k] = ed.noc_area
-                            dirty.append((k, "noc"))
                     if k > j and c.budget is not bud:
                         if c.budget is not None:
                             fill_budget(rows, k, self._enc, c.budget.latency_s,
@@ -1054,7 +1095,7 @@ class JaxBatchedBackend:
         tD = time.perf_counter()
         out = self._fn()(rows)  # non-blocking: no host transfer here
         self._stats.dispatch_s += time.perf_counter() - tD
-        shared = _JaxBatch(out, self._stats, eds)
+        shared = _JaxBatch(out, self._stats, eds, (slots, n_noc))
         self._buf_owner[(key, sel)] = shared
         self._track_inflight(shared)
         for j, i in enumerate(idx):
@@ -1066,12 +1107,24 @@ class JaxBatchedBackend:
     # policy-layer ``SimTelemetry`` so both produce bit-identical floats
     def _task_energy_pj(self, design: Design) -> Dict[str, float]:
         """Per-task dynamic energy: rate-independent (every task drains its
-        full (ops, read, write) totals; hops == 1 in the single-NoC regime)."""
+        full (ops, read, write) totals); the NoC term scales with the task's
+        route hop count on multi-NoC chains."""
         blocks, d_pe, d_mem = design.blocks, design.task_pe, design.task_mem
         pe_pj, mem_pj, noc_pj = self._pe_pj, self._mem_pj, self._noc_pj
+        if len(design.noc_chain) == 1:  # hops == 1 everywhere: skip routing
+            return {
+                n: pe_pj[blocks[d_pe[n]].subtype] * self._ops[k]
+                + (mem_pj[blocks[d_mem[n]].subtype] + noc_pj) * self._rw[k]
+                for k, n in enumerate(self._enc.names)
+            }
+        pos = {m: i for i, m in enumerate(design.noc_chain)}
+        att = design.attached_noc
         return {
             n: pe_pj[blocks[d_pe[n]].subtype] * self._ops[k]
-            + (mem_pj[blocks[d_mem[n]].subtype] + noc_pj) * self._rw[k]
+            + (
+                mem_pj[blocks[d_mem[n]].subtype]
+                + noc_pj * (abs(pos[att[d_pe[n]]] - pos[att[d_mem[n]]]) + 1)
+            ) * self._rw[k]
             for k, n in enumerate(self._enc.names)
         }
 
@@ -1108,6 +1161,7 @@ class JaxBatchedBackend:
         kind_s: np.ndarray,
         pe_busy: np.ndarray,
         mem_busy: np.ndarray,
+        noc_busy: np.ndarray,
         alp_time: float,
         traffic: float,
         n_phases: int,
@@ -1115,13 +1169,16 @@ class JaxBatchedBackend:
         db = self.db
         names = self._enc.names
         blocks, d_pe, d_mem = design.blocks, design.task_pe, design.task_mem
-        noc = design.noc_chain[0]
+        chain = design.noc_chain
         fin = finish.tolist()
         codes = bneck.tolist()
         finish_s = dict(zip(names, fin))
-        task_bneck = {n: _BNECK_KINDS[c] for n, c in zip(names, codes)}
+        # codes are packed: 0/1 = pe/mem, 2 + 3·k = NoC at chain index k
+        task_bneck = {n: _BNECK_KINDS[min(c, 2)] for n, c in zip(names, codes)}
         task_bneck_block = {
-            n: d_pe[n] if c == 0 else (d_mem[n] if c == 1 else noc)
+            n: d_pe[n] if c == 0 else (
+                d_mem[n] if c == 1 else chain[(c - 2) // 3]
+            )
             for n, c in zip(names, codes)
         }
         task_energy_pj = self._task_energy_pj(design)
@@ -1134,7 +1191,8 @@ class JaxBatchedBackend:
         cap = self._mem_caps(design)
         area = self._area_mm2(design, cap)
         # per-block bottleneck seconds: device telemetry columns resolved to
-        # block names via the encoding slot order (= block insertion order)
+        # block names via the encoding slot order (= block insertion order;
+        # NoC columns are in chain order)
         block_bneck_s: Dict[str, float] = {}
         ipe = imem = 0
         for bname, blk in blocks.items():
@@ -1144,7 +1202,8 @@ class JaxBatchedBackend:
             elif blk.kind == BlockKind.MEM:
                 block_bneck_s[bname] = float(mem_busy[imem])
                 imem += 1
-        block_bneck_s[noc] = float(kind_s[2])
+        for i, bname in enumerate(chain):
+            block_bneck_s[bname] = float(noc_busy[i])
         return SimResult(
             latency_s=latency,
             workload_latency_s=wl_latency,

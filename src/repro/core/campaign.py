@@ -49,6 +49,22 @@ class RunSpec:
     initial: Optional[Design] = None
 
 
+_COMPLEXITY_KEYS = ("components", "noc_components", "variation")
+
+
+def _complexity_by_policy(
+    results: Iterable[ExplorationResult],
+) -> Dict[str, List[Dict[str, float]]]:
+    """Best-design `Design.complexity_metrics()` grouped by policy name —
+    shared by `CampaignResult.policy_complexity` and the grid aggregate."""
+    acc: Dict[str, List[Dict[str, float]]] = {}
+    for r in results:
+        acc.setdefault(r.policy_name, []).append(
+            r.best_design.complexity_metrics()
+        )
+    return acc
+
+
 @dataclasses.dataclass
 class CampaignResult:
     runs: Dict[str, ExplorationResult]  # per-run, keyed by RunSpec.name
@@ -71,6 +87,19 @@ class CampaignResult:
         for r in self.runs.values():
             acc.setdefault(r.policy_name, []).append(r.iterations_to_budget(cap))
         return {p: statistics.mean(v) for p, v in acc.items()}
+
+    def policy_complexity(self) -> Dict[str, Dict[str, float]]:
+        """Mean development-cost metrics of each policy's best designs
+        (``Design.complexity_metrics``: component count, NoC-subsystem
+        count, heterogeneity variation) — the §5.3 comparison surface for
+        ``dev_cost`` vs ``farsi``."""
+        return {
+            p: {
+                k: statistics.mean(m[k] for m in ms)
+                for k in _COMPLEXITY_KEYS
+            }
+            for p, ms in _complexity_by_policy(self.runs.values()).items()
+        }
 
 
 class Campaign:
@@ -273,8 +302,28 @@ class Campaign:
         # aggregation — surface the grid-level switch-rate / convergence-
         # contribution means alongside the convergence statistics
         codesign = aggregate_ledgers([r.ledger for r in runs.values()])
+        # §5.3 development-cost aggregates: grid-level means of the best
+        # designs' complexity metrics, plus the headline dev_cost-vs-farsi
+        # reductions — reported as the bounded fraction
+        # (farsi − dev_cost) / farsi (1.0 = eliminated entirely; the
+        # paper's ratio form explodes when dev_cost drives a metric to
+        # zero) — when both policies ran in this grid
+        by_pol = _complexity_by_policy(runs.values())
+        comp = [m for ms in by_pol.values() for m in ms]
+        complexity = {
+            f"complexity_{k}_mean": statistics.mean(m[k] for m in comp)
+            for k in _COMPLEXITY_KEYS
+        }
+        if "farsi" in by_pol and "dev_cost" in by_pol:
+            for k in _COMPLEXITY_KEYS:
+                f = statistics.mean(m[k] for m in by_pol["farsi"])
+                d = statistics.mean(m[k] for m in by_pol["dev_cost"])
+                complexity[f"dev_cost_{k}_reduction"] = (
+                    (f - d) / f if f > 0 else 0.0
+                )
         return {
             **codesign,
+            **complexity,
             "n_runs": len(runs),
             "n_converged": sum(r.converged for r in runs.values()),
             "convergence_rate": statistics.mean(

@@ -217,6 +217,27 @@ class Design:
         var = sum((v - mean) ** 2 for v in vals) / len(vals)
         return (var ** 0.5) / mean
 
+    # knob axes the development-cost variation metric averages over: one CV
+    # per (kind, knob) pair the swap ladders actually walk
+    _VARIATION_AXES = (
+        (BlockKind.PE, "freq_mhz"), (BlockKind.PE, "unroll"),
+        (BlockKind.MEM, "freq_mhz"), (BlockKind.MEM, "width_bytes"),
+        (BlockKind.NOC, "freq_mhz"), (BlockKind.NOC, "width_bytes"),
+    )
+
+    def complexity_metrics(self) -> Dict[str, float]:
+        """The paper's §5.3/§6.1 development-cost pair: total component
+        count and system variation (mean heterogeneity CV over the knob
+        ladders), plus the NoC-subsystem component count the §5.3 NoC
+        simplification result is stated in."""
+        return {
+            "components": float(len(self.blocks)),
+            "noc_components": float(len(self.noc_chain)),
+            "variation": sum(
+                self.heterogeneity_cv(k, knob) for k, knob in self._VARIATION_AXES
+            ) / len(self._VARIATION_AXES),
+        }
+
     def signature(self) -> tuple:
         return (
             tuple(sorted(b.signature() for b in self.blocks.values())),

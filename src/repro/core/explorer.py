@@ -171,15 +171,29 @@ class Explorer:
         for move in moves:
             if len(out) >= n:
                 break
+            task = focus.task
             delta = MoveDelta()
             ok = apply_move(
-                design, self.tdg, move, focus.block, focus.task, direction,
+                design, self.tdg, move, focus.block, task, direction,
                 focus.bneck, focus.metric, self.rng, delta,
             )
             design.restore(ck)
+            if not ok and move in ("fork", "fork_swap") and task:
+                # a targeted fork is inapplicable when the focus task is the
+                # block's anchor (it must stay — apply_fork refuses rather
+                # than silently migrating a different task). The untargeted
+                # fork — split half the hosted load — is the legitimate
+                # relief move for that same congestion, so offer it instead.
+                task = None
+                delta = MoveDelta()
+                ok = apply_move(
+                    design, self.tdg, move, focus.block, None, direction,
+                    focus.bneck, focus.metric, self.rng, delta,
+                )
+                design.restore(ck)
             if ok:
                 spec = MoveSpec(
-                    move, focus.block, focus.task, direction, focus.bneck,
+                    move, focus.block, task, direction, focus.bneck,
                     focus.metric,
                 )
                 out.append(
@@ -276,8 +290,14 @@ class Explorer:
             part of the speculated continuation)."""
             nonlocal cur_view, cur_dist, best_design, best_handle, best_dist, best_stale
             assert len(handles) == len(sel.neighbors)
-            # stable argmin preserves the precedence order on ties
-            fits = [h.fitness for h in handles]
+            # stable argmin preserves the precedence order on ties; the
+            # policy's move_penalty rides on the fitness column (0.0 — and
+            # bit-neutral — for every policy but dev_cost), so a system-
+            # growing move must buy more PPA than its development cost
+            fits = [
+                h.fitness + pol.move_penalty(cur, c)
+                for h, c in zip(handles, sel.neighbors)
+            ]
             j = min(range(len(fits)), key=fits.__getitem__)
             cand, move = sel.neighbors[j], sel.neighbors[j].spec.move
             d_before = cur_dist.fitness(self.cfg.alpha_met)

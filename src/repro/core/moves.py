@@ -54,14 +54,22 @@ class MoveDelta:
     ``touched`` holds post-move knob *snapshots* (shallow copies) because the
     design itself is rolled back after the trial; ``added`` holds the new
     Block objects themselves — rollback detaches them from the design, after
-    which nothing mutates them. ``topology`` flags NoC-chain/attachment edits,
-    which push the candidate off the single-NoC vectorized path."""
+    which nothing mutates them. ``attached`` records NoC-attachment edits
+    (block → NoC name) for both newly added PE/MEM blocks and blocks a NoC
+    fork/join re-homed; ``noc_after`` records where an added NoC was inserted
+    in the chain (the predecessor's name). Together with ``removed`` they make
+    topology moves fully replayable against the flat encoding — NoC fork/join
+    emit ordinary deltas and ride the vectorized path. ``topology`` remains
+    as the escape hatch for edits the encoding cannot host (no built-in move
+    sets it anymore; a True value forces the scalar Python fallback)."""
 
     task_pe: Dict[str, str] = dataclasses.field(default_factory=dict)
     task_mem: Dict[str, str] = dataclasses.field(default_factory=dict)
     touched: Dict[str, Block] = dataclasses.field(default_factory=dict)
     added: List[Block] = dataclasses.field(default_factory=list)
     removed: List[str] = dataclasses.field(default_factory=list)
+    attached: Dict[str, str] = dataclasses.field(default_factory=dict)
+    noc_after: Optional[str] = None
     topology: bool = False
 
     def touch(self, block: Block) -> None:
@@ -170,8 +178,10 @@ def apply_fork(
         for b in attached[1::2]:
             design.attached_noc[b] = new.name
         if delta is not None:
-            delta.added.append(new)  # never encoded (topology ⇒ fallback),
-            delta.topology = True  # but replays rename to this recorded name
+            delta.added.append(new)
+            delta.noc_after = block_name  # chain insertion point
+            for b in attached[1::2]:
+                delta.attached[b] = new.name
         return True
 
     hosted = (
@@ -181,8 +191,11 @@ def apply_fork(
     )
     if len(hosted) < 2:
         return False  # duplication must *split* load, never orphan the source
+    if task_name == hosted[0]:
+        # the anchor task must stay: an explicit request to migrate it is
+        # inapplicable — refuse rather than silently moving a different task
+        return False
     movers = [task_name] if (task_name in hosted) else hosted[1::2]
-    movers = [m for m in movers if m != hosted[0]] or hosted[1:2]
     clone = block.clone()
     if clone.subtype == "acc" and task_name and task_name != block.hardened_for:
         clone.hardened_for = task_name  # duplicated IP hardened for the mover
@@ -192,6 +205,7 @@ def apply_fork(
         target_map[t] = clone.name
     if delta is not None:
         delta.added.append(clone)
+        delta.attached[clone.name] = design.attached_noc[block_name]
         moved = delta.task_pe if block.kind == BlockKind.PE else delta.task_mem
         for t in movers:
             moved[t] = clone.name
@@ -219,9 +233,11 @@ def apply_join(
         target = design.noc_chain[idx - 1] if idx > 0 else design.noc_chain[1]
         for b in design.attached(block_name):
             design.attached_noc[b] = target
+            if delta is not None:
+                delta.attached[b] = target
         design.remove_block(block_name)
         if delta is not None:
-            delta.topology = True
+            delta.removed.append(block_name)
         return True
 
     siblings = [

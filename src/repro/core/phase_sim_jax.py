@@ -23,10 +23,18 @@ Three things keep the *whole* explore→price→rank loop array-native:
   * **Lazy decode** — per-task dict reconstruction lives in
     ``backend.JaxBatchedBackend`` and is only paid by the winning candidate.
 
-Scope: single-NoC designs (every PE/MEM on one bus — the regime our AR
-explorations live in; multi-NoC topologies fall back to the Python
-simulator). Equivalence against `phase_sim.simulate` is asserted in tests
-for this regime.
+Scope: chain-topology designs with up to ``MAX_NOC`` NoCs. The encoding is
+multi-NoC native: per-NoC ``(N,)`` knob/coefficient arrays in chain order, a
+per-slot NoC-attachment index for every PE/MEM, and hop distances derived
+from chain positions — so NoC fork/join moves emit ordinary encoding deltas
+and ride the vectorized path instead of falling back to the Python
+simulator. ``N`` pads to a power-of-two bucket per dispatch; the single-NoC
+case (``N == 1``) compiles to exactly the formulation this module always
+had, so the dominant regime pays nothing for the generality. Designs the
+encoding still cannot host (chains beyond ``MAX_NOC``) raise
+:class:`UnsupportedDesignError`, which the backend catches to route those
+candidates to the scalar fallback. Equivalence against
+`phase_sim.simulate` is asserted in tests for both regimes.
 """
 from __future__ import annotations
 
@@ -44,6 +52,20 @@ from .moves import MoveDelta
 from .tdg import TaskGraph, workload_of
 
 BIG = 1e30
+
+# the widest NoC chain the flat encoding hosts: chain positions are int32
+# slot indices and the kernels unroll the per-NoC striping loop, so the cap
+# is a compile-footprint guard, not a numerics limit (the link ladder tops
+# out at 8 channels; explorations never grow chains past a handful)
+MAX_NOC = 8
+
+
+class UnsupportedDesignError(ValueError):
+    """The design's shape falls outside what the flat encoding can host
+    (today: NoC chains longer than ``MAX_NOC``). Typed — rather than a bare
+    ``assert`` that vanishes under ``python -O`` — so the batched backend can
+    catch it and route the candidate to the scalar Python fallback instead of
+    silently mis-pricing it."""
 
 
 @dataclasses.dataclass
@@ -142,30 +164,45 @@ class EncodedDesign:
     mem_leak: np.ndarray  # (S_mem,) leakage W
     mem_area_fixed: np.ndarray  # (S_mem,) mm² (DRAM PHY; 0 for SRAM)
     mem_area_per_mb: np.ndarray  # (S_mem,) mm²/MB (SRAM; 0 for DRAM)
-    noc_bw: np.float32  # bytes/s (single NoC, per link)
-    noc_links: int
-    noc_leak: np.float32
-    noc_area: np.float32
+    # per-NoC arrays in CHAIN order (index = chain position, so the hop
+    # distance between two NoCs is |i − j| and a task's route is the index
+    # interval between its PE's and its MEM's attachment)
+    noc_bw: np.ndarray  # (N,) bytes/s per link
+    noc_links: np.ndarray  # (N,) int32 channels
+    noc_leak: np.ndarray  # (N,) leakage W
+    noc_area: np.ndarray  # (N,) mm²
+    pe_noc: np.ndarray  # (S_pe,) int32 chain index each PE attaches to
+    mem_noc: np.ndarray  # (S_mem,) int32 chain index each MEM attaches to
     noc_pj: np.float32  # dynamic pJ/byte·hop (db constant, rides the row so
     # the kernel never hardcodes an energy-model default)
     pe_slot: Dict[str, int]  # block name -> slot
     mem_slot: Dict[str, int]
+    noc_slot: Dict[str, int]  # NoC name -> chain index
 
     @staticmethod
     def of(design: Design, g: TaskGraph, db: HardwareDatabase, enc: EncodedWorkload) -> "EncodedDesign":
-        assert len(design.noc_chain) == 1, "vectorized sim: single-NoC regime"
+        if not 1 <= len(design.noc_chain) <= MAX_NOC:
+            raise UnsupportedDesignError(
+                f"NoC chain of {len(design.noc_chain)} outside the encodable "
+                f"range [1, {MAX_NOC}]"
+            )
+        noc_i = {n: i for i, n in enumerate(design.noc_chain)}
         # single pass over blocks: slot index maps + per-slot rates/coefficients
         pe_i: Dict[str, int] = {}
         mem_i: Dict[str, int] = {}
         pe_cols: List[tuple] = []
         mem_cols: List[tuple] = []
+        pe_noc: List[int] = []
+        mem_noc: List[int] = []
         for n, b in design.blocks.items():
             if b.kind == BlockKind.PE:
                 pe_i[n] = len(pe_cols)
                 pe_cols.append(_pe_coeffs(b, db))
+                pe_noc.append(noc_i[design.attached_noc[n]])
             elif b.kind == BlockKind.MEM:
                 mem_i[n] = len(mem_cols)
                 mem_cols.append(_mem_coeffs(b, db))
+                mem_noc.append(noc_i[design.attached_noc[n]])
         t = len(enc.names)
         d_pe, d_mem, blocks, tasks = design.task_pe, design.task_mem, design.blocks, g.tasks
         task_pe = np.fromiter((pe_i[d_pe[n]] for n in enc.names), np.int32, t)
@@ -175,7 +212,7 @@ class EncodedDesign:
             b = blocks[d_pe[n]]
             if b.hardened_for == n and b.subtype == "acc":
                 accel[k] = db.a_peak(n, tasks[n].llp, b.unroll)
-        noc = blocks[design.noc_chain[0]]
+        nocs = [blocks[n] for n in design.noc_chain]
         f32col = lambda cols, j: np.asarray([c[j] for c in cols], np.float32)
         return EncodedDesign(
             task_pe=task_pe,
@@ -190,13 +227,16 @@ class EncodedDesign:
             mem_leak=f32col(mem_cols, 2),
             mem_area_fixed=f32col(mem_cols, 3),
             mem_area_per_mb=f32col(mem_cols, 4),
-            noc_bw=np.float32(noc.peak_bandwidth(db)),
-            noc_links=int(noc.n_links),
-            noc_leak=np.float32(db.leakage_w(noc)),
-            noc_area=np.float32(db.block_area_mm2(noc)),
+            noc_bw=np.asarray([b.peak_bandwidth(db) for b in nocs], np.float32),
+            noc_links=np.asarray([b.n_links for b in nocs], np.int32),
+            noc_leak=np.asarray([db.leakage_w(b) for b in nocs], np.float32),
+            noc_area=np.asarray([db.block_area_mm2(b) for b in nocs], np.float32),
+            pe_noc=np.asarray(pe_noc, np.int32),
+            mem_noc=np.asarray(mem_noc, np.int32),
             noc_pj=np.float32(db.energy.noc_pj_per_byte_hop),
             pe_slot=pe_i,
             mem_slot=mem_i,
+            noc_slot=noc_i,
         )
 
 
@@ -216,6 +256,25 @@ def _delete1(arr: np.ndarray, s: int) -> np.ndarray:
     return out
 
 
+def _insert1(arr: np.ndarray, s: int, v) -> np.ndarray:
+    """np.insert of one value without its generic machinery (hot path)."""
+    out = np.empty(arr.shape[0] + 1, arr.dtype)
+    out[:s] = arr[:s]
+    out[s] = v
+    out[s + 1:] = arr[s:]
+    return out
+
+
+_NOC_ARRAY_FIELDS = ("noc_bw", "noc_links", "noc_leak", "noc_area")
+
+
+def _noc_cols(b: Block, db: HardwareDatabase) -> tuple:
+    return (
+        np.float32(b.peak_bandwidth(db)), np.int32(b.n_links),
+        np.float32(db.leakage_w(b)), np.float32(db.block_area_mm2(b)),
+    )
+
+
 def apply_delta(
     base: "EncodedDesign",
     delta: MoveDelta,
@@ -233,7 +292,8 @@ def apply_delta(
     ``design`` is the *base* (pre-move) design: only blocks the delta did not
     touch are read from it, so it may be called before or after rollback.
     """
-    assert not delta.topology, "topology deltas leave the single-NoC regime"
+    if delta.topology:
+        raise UnsupportedDesignError("delta flagged as unencodable (topology)")
     # copy-on-write: fields the delta does not touch stay *shared* with the
     # base encoding (`ed.f is base.f`), which both keeps a typical swap/
     # migrate delta at a couple of tiny array copies and lets the backend
@@ -248,7 +308,9 @@ def apply_delta(
 
     touched_pe_slots: List[int] = []
 
-    # 1) removals (join): compact slots exactly like a from-scratch encode
+    # 1) removals (join): compact slots exactly like a from-scratch encode.
+    # A removed NoC compacts the chain; blocks it hosted carry explicit
+    # re-attachment edits (delta.attached), applied in step 4b below.
     for name in delta.removed:
         if name in ed.pe_slot:
             s = ed.pe_slot[name]
@@ -256,14 +318,37 @@ def apply_delta(
                 setattr(ed, f, _delete1(getattr(ed, f), s))
             ed.pe_slot = {n: i - (i > s) for n, i in ed.pe_slot.items() if n != name}
             ed.task_pe = ed.task_pe - (ed.task_pe > s)
+            ed.pe_noc = _delete1(ed.pe_noc, s)
         elif name in ed.mem_slot:
             s = ed.mem_slot[name]
             for f in ("mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb"):
                 setattr(ed, f, _delete1(getattr(ed, f), s))
             ed.mem_slot = {n: i - (i > s) for n, i in ed.mem_slot.items() if n != name}
             ed.task_mem = ed.task_mem - (ed.task_mem > s)
+            ed.mem_noc = _delete1(ed.mem_noc, s)
+        elif name in ed.noc_slot:
+            s = ed.noc_slot[name]
+            for f in _NOC_ARRAY_FIELDS:
+                setattr(ed, f, _delete1(getattr(ed, f), s))
+            ed.noc_slot = {n: i - (i > s) for n, i in ed.noc_slot.items() if n != name}
+            ed.pe_noc = ed.pe_noc - (ed.pe_noc > s)
+            ed.mem_noc = ed.mem_noc - (ed.mem_noc > s)
 
-    # 2) additions (fork): append at the end, matching dict insertion order
+    # 2a) NoC additions (fork): INSERT at the recorded chain position — chain
+    # order is the slot order, so every downstream chain index shifts by one
+    for b in delta.added:
+        if b.kind != BlockKind.NOC:
+            continue
+        p = ed.noc_slot[delta.noc_after] + 1 if delta.noc_after else ed.noc_bw.shape[0]
+        ed.noc_slot = {n: i + (i >= p) for n, i in ed.noc_slot.items()}
+        ed.noc_slot[b.name] = p
+        for f, v in zip(_NOC_ARRAY_FIELDS, _noc_cols(b, db)):
+            setattr(ed, f, _insert1(getattr(ed, f), p, v))
+        ed.pe_noc = ed.pe_noc + (ed.pe_noc >= p)
+        ed.mem_noc = ed.mem_noc + (ed.mem_noc >= p)
+
+    # 2b) PE/MEM additions (fork): append at the end, matching dict insertion
+    # order; the new slot's NoC attachment is the recorded one
     for b in delta.added:
         if b.kind == BlockKind.PE:
             own("pe_slot")
@@ -271,6 +356,7 @@ def apply_delta(
             cols = _pe_coeffs(b, db)
             for f, v in zip(("pe_peak", "pe_pj", "pe_leak", "pe_area"), cols):
                 setattr(ed, f, _append1(getattr(ed, f), np.float32(v)))
+            ed.pe_noc = _append1(ed.pe_noc, ed.noc_slot[delta.attached[b.name]])
             touched_pe_slots.append(ed.pe_slot[b.name])
         elif b.kind == BlockKind.MEM:
             own("mem_slot")
@@ -280,14 +366,15 @@ def apply_delta(
                 ("mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb"), cols
             ):
                 setattr(ed, f, _append1(getattr(ed, f), np.float32(v)))
+            ed.mem_noc = _append1(ed.mem_noc, ed.noc_slot[delta.attached[b.name]])
 
     # 3) knob edits (swap): refresh the touched slot's rate + coefficients
     for name, snap in delta.touched.items():
         if snap.kind == BlockKind.NOC:
-            ed.noc_bw = np.float32(snap.peak_bandwidth(db))
-            ed.noc_links = int(snap.n_links)
-            ed.noc_leak = np.float32(db.leakage_w(snap))
-            ed.noc_area = np.float32(db.block_area_mm2(snap))
+            s = ed.noc_slot[name]
+            own(*_NOC_ARRAY_FIELDS)
+            for f, v in zip(_NOC_ARRAY_FIELDS, _noc_cols(snap, db)):
+                getattr(ed, f)[s] = v
         elif name in ed.pe_slot:
             s = ed.pe_slot[name]
             own("pe_peak", "pe_pj", "pe_leak", "pe_area")
@@ -316,6 +403,17 @@ def apply_delta(
         for t, mem in delta.task_mem.items():
             ed.task_mem[enc.index[t]] = ed.mem_slot[mem]
 
+    # 4b) NoC re-attachments (NoC fork/join re-home attached blocks; newly
+    # added slots were already born attached — re-setting is idempotent)
+    for bname, nocname in delta.attached.items():
+        p = ed.noc_slot[nocname]
+        if bname in ed.pe_slot:
+            own("pe_noc")
+            ed.pe_noc[ed.pe_slot[bname]] = p
+        elif bname in ed.mem_slot:
+            own("mem_noc")
+            ed.mem_noc[ed.mem_slot[bname]] = p
+
     # 5) acceleration refresh for every task whose PE (or its knobs) changed
     if touched_pe_slots or moved:
         slot_name = {s: n for n, s in ed.pe_slot.items()}
@@ -336,18 +434,23 @@ def apply_delta(
 # per-design row keys, in the order buffers are allocated/filled
 ROW_KEYS = (
     "task_pe", "task_mem", "pe_accel",
-    "pe_peak", "pe_pj", "pe_leak", "pe_area",
+    "pe_peak", "pe_pj", "pe_leak", "pe_area", "pe_noc",
     "mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb",
+    "mem_noc",
     "noc_bw", "noc_links", "noc_leak", "noc_area", "noc_pj",
     "wl_budget", "power_budget", "area_budget", "alpha",
 )
 
 
-def alloc_rows(b: int, t: int, n_pe: int, n_mem: int, n_wl: int) -> Dict[str, np.ndarray]:
+def alloc_rows(
+    b: int, t: int, n_pe: int, n_mem: int, n_wl: int, n_noc: int = 1
+) -> Dict[str, np.ndarray]:
     """Preallocate one batch of padded per-design rows (host buffers the
     backend reuses across dispatches of the same shape bucket). Pad values:
     rates 1.0 (div-by-zero-free, never hosting tasks), coefficients 0.0
-    (they are summed), budgets BIG / alpha 0 (neutral scoring)."""
+    (they are summed), budgets BIG / alpha 0 (neutral scoring). Padded NoC
+    slots (chain indices ≥ the design's real chain length) carry no attached
+    blocks, so no route ever crosses them."""
     rows = {
         "task_pe": np.zeros((b, t), np.int32),
         "task_mem": np.zeros((b, t), np.int32),
@@ -356,15 +459,17 @@ def alloc_rows(b: int, t: int, n_pe: int, n_mem: int, n_wl: int) -> Dict[str, np
         "pe_pj": np.zeros((b, n_pe), np.float32),
         "pe_leak": np.zeros((b, n_pe), np.float32),
         "pe_area": np.zeros((b, n_pe), np.float32),
+        "pe_noc": np.zeros((b, n_pe), np.int32),
         "mem_bw": np.ones((b, n_mem), np.float32),
         "mem_pj": np.zeros((b, n_mem), np.float32),
         "mem_leak": np.zeros((b, n_mem), np.float32),
         "mem_area_fixed": np.zeros((b, n_mem), np.float32),
         "mem_area_per_mb": np.zeros((b, n_mem), np.float32),
-        "noc_bw": np.ones((b,), np.float32),
-        "noc_links": np.ones((b,), np.int32),
-        "noc_leak": np.zeros((b,), np.float32),
-        "noc_area": np.zeros((b,), np.float32),
+        "mem_noc": np.zeros((b, n_mem), np.int32),
+        "noc_bw": np.ones((b, n_noc), np.float32),
+        "noc_links": np.ones((b, n_noc), np.int32),
+        "noc_leak": np.zeros((b, n_noc), np.float32),
+        "noc_area": np.zeros((b, n_noc), np.float32),
         "noc_pj": np.zeros((b,), np.float32),
         "wl_budget": np.full((b, n_wl), BIG, np.float32),
         "power_budget": np.full((b,), BIG, np.float32),
@@ -375,9 +480,12 @@ def alloc_rows(b: int, t: int, n_pe: int, n_mem: int, n_wl: int) -> Dict[str, np
 
 
 _TASK_FIELDS = ("task_pe", "task_mem", "pe_accel")
-_PE_FIELDS = ("pe_peak", "pe_pj", "pe_leak", "pe_area")
-_MEM_FIELDS = ("mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb")
-ENCODED_FIELDS = _TASK_FIELDS + _PE_FIELDS + _MEM_FIELDS
+_PE_FIELDS = ("pe_peak", "pe_pj", "pe_leak", "pe_area", "pe_noc")
+_MEM_FIELDS = (
+    "mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb",
+    "mem_noc",
+)
+ENCODED_FIELDS = _TASK_FIELDS + _PE_FIELDS + _MEM_FIELDS + _NOC_ARRAY_FIELDS
 
 
 def fill_row_fields(
@@ -394,19 +502,19 @@ def fill_row_fields(
             s = ed.pe_peak.shape[0]
             rows[f][j, :s] = getattr(ed, f)
             rows[f][j, s:] = 1.0 if f == "pe_peak" else 0.0
-        else:
+        elif f in _MEM_FIELDS:
             m = ed.mem_bw.shape[0]
             rows[f][j, :m] = getattr(ed, f)
             rows[f][j, m:] = 1.0 if f == "mem_bw" else 0.0
+        else:  # per-NoC chain arrays
+            n = ed.noc_bw.shape[0]
+            rows[f][j, :n] = getattr(ed, f)
+            rows[f][j, n:] = 1.0 if f in ("noc_bw", "noc_links") else 0.0
 
 
 def fill_row(rows: Dict[str, np.ndarray], j: int, ed: EncodedDesign) -> None:
     """Write one design's full encoding into row ``j`` of the padded buffers."""
     fill_row_fields(rows, j, ed, ENCODED_FIELDS)
-    rows["noc_bw"][j] = ed.noc_bw
-    rows["noc_links"][j] = ed.noc_links
-    rows["noc_leak"][j] = ed.noc_leak
-    rows["noc_area"][j] = ed.noc_area
     rows["noc_pj"][j] = ed.noc_pj
 
 
@@ -440,7 +548,8 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
     task_pe, task_mem = row["task_pe"], row["task_mem"]
     n_pe = row["pe_peak"].shape[-1]
     n_mem = row["mem_bw"].shape[-1]
-    noc_bw, noc_links = row["noc_bw"], row["noc_links"]
+    n_noc = row["noc_bw"].shape[-1]
+    noc_bw = row["noc_bw"]
     # loop-invariant hoists: effective peak rates per task and the
     # same-slot co-residency masks behind Eq. 1/2 (PE share) and Eq. 4
     # (burst-proportional memory share)
@@ -452,11 +561,64 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
     # telemetry accumulate through these instead of segment_sum scatters
     onehot_pe = (task_pe[:, None] == jnp.arange(n_pe)[None, :]).astype(jnp.float32)
     onehot_mem = (task_mem[:, None] == jnp.arange(n_mem)[None, :]).astype(jnp.float32)
-    links = jnp.maximum(noc_links, 1)
+    links = jnp.maximum(row["noc_links"], 1)  # (N,)
+    # multi-NoC chain routing: a task's route is the chain-index interval
+    # between its PE's and its MEM's NoC; hop count scales the NoC energy
+    pe_pos = row["pe_noc"][task_pe]
+    mem_pos = row["mem_noc"][task_mem]
+    lo = jnp.minimum(pe_pos, mem_pos)
+    hi = jnp.maximum(pe_pos, mem_pos)
+    hops = (hi - lo + 1).astype(jnp.float32)
+    nidx = jnp.arange(n_noc, dtype=jnp.int32)
+    on_route = (
+        (nidx[None, :] >= lo[:, None]) & (nidx[None, :] <= hi[:, None])
+    ).astype(jnp.float32)  # (T, N)
+
+    def noc_share(runf):
+        """Eq. 3 per NoC: round-robin link striping (same link ⟺ running
+        ranks congruent mod n_links), burst arbitration within the link;
+        a task's end-to-end NoC bandwidth is the min over its route, and
+        the argmin (first, in chain order — matching the Python
+        reference's strict-< scan) is the binding NoC instance for the
+        telemetry. The ``n_noc == 1`` branch is bit-for-bit the historic
+        single-NoC formulation — the dominant regime compiles to exactly
+        the math it always had."""
+        if n_noc == 1:
+            order = jnp.cumsum(runf)
+            same_link = (runf[:, None] * runf[None, :]) * jnp.where(
+                (order[:, None] - order[None, :]) % links[0] == 0, 1.0, 0.0
+            )
+            link_t = same_link @ enc.burst
+            n_bw = noc_bw[0] * enc.burst / jnp.maximum(link_t, 1e-30)
+            return n_bw, jnp.zeros((t,), jnp.int32)
+        # multi-NoC: the same rank-residue striping, but through a (T, 8)
+        # link one-hot (the link ladder tops out at 8 channels) instead of a
+        # (T, T) co-residency mask per NoC — user u's link is
+        # (rank_u − 1) mod n_links, link loads are one (8,) segment sum, so
+        # the per-NoC cost is O(T·8), not O(T²)
+        lidx = jnp.arange(8, dtype=jnp.float32)
+        best = jnp.full((t,), BIG, jnp.float32)
+        arg = jnp.zeros((t,), jnp.int32)
+        for k in range(n_noc):  # N is a static padded bucket: unrolled
+            use_k = on_route[:, k] * runf
+            order = jnp.cumsum(use_k)
+            link = jnp.where(use_k > 0, (order - 1.0) % links[k], -1.0)
+            oh = (link[:, None] == lidx[None, :]).astype(jnp.float32)
+            link_load = (enc.burst * use_k) @ oh  # (8,) burst per link
+            link_t = oh @ link_load
+            bw_k = jnp.where(
+                use_k > 0,
+                noc_bw[k] * enc.burst / jnp.maximum(link_t, 1e-30),
+                BIG,
+            )
+            better = bw_k < best
+            arg = jnp.where(better, k, arg)
+            best = jnp.where(better, bw_k, best)
+        return best, arg
 
     def phase(_, state):
-        (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s,
-         pe_bt, mem_bt, alp_t, traffic, nph) = state
+        (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, bneck_noc,
+         kind_s, pe_bt, mem_bt, noc_bt, alp_t, traffic, nph) = state
         running = (~completed) & jnp.all(~enc.parent_mask | completed[None, :], axis=1)
         runf = jnp.where(running, 1.0, 0.0)
         burst_run = enc.burst * runf
@@ -470,14 +632,8 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         mem_t = same_mem @ burst_run
         m_bw = mem_peak * enc.burst / jnp.maximum(mem_t, 1e-30)
 
-        # Eq. 3: round-robin link striping, burst arbitration within
-        # link; same link ⟺ running ranks congruent mod n_links
-        order = jnp.cumsum(runf)
-        same_link = (runf[:, None] * runf[None, :]) * jnp.where(
-            (order[:, None] - order[None, :]) % links == 0, 1.0, 0.0
-        )
-        link_t = same_link @ enc.burst
-        n_bw = noc_bw * enc.burst / jnp.maximum(link_t, 1e-30)
+        # Eq. 3: per-NoC link striping, end-to-end min over the route
+        n_bw, noc_arg = noc_share(runf)
 
         bw = jnp.minimum(m_bw, n_bw)
         comp_t = rem_ops / compute
@@ -504,6 +660,14 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         # just two (T,) masked adds, keeping the phase critical path flat
         pe_bt = pe_bt + jnp.where(code == 0, phi_run, 0.0)
         mem_bt = mem_bt + jnp.where(code == 1, phi_run, 0.0)
+        # per-NoC binding seconds: the binding NoC varies per phase (it is
+        # contention-dependent), so unlike the task→slot maps it cannot be
+        # resolved after the loop. One NoC: it is just kind_s[2], resolved
+        # post-loop; multi-NoC: one (T,N) masked matvec per phase.
+        if n_noc > 1:
+            noc_bt = noc_bt + jnp.where(code == 2, phi_run, 0.0) @ (
+                noc_arg[:, None] == nidx[None, :]
+            ).astype(jnp.float32)
 
         # mask rates BEFORE the phi multiply: slots hosting no running
         # task price as inf bandwidth, and inf · 0 would poison the
@@ -518,6 +682,8 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         now = now + phi
         finish = jnp.where(newly_done, now, finish)
         bneck = jnp.where(newly_done, code, bneck)
+        if n_noc > 1:  # binding NoC instance at completion (chain index)
+            bneck_noc = jnp.where(newly_done, noc_arg, bneck_noc)
         # busy-PE count: each PE with k running tasks contributes k · 1/k
         alp_t = alp_t + phi * jnp.sum(runf / jnp.maximum(load_t, 1.0))
         # phase_sim accumulates min(post-drain bytes, bw·phi) per running
@@ -529,7 +695,8 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         return (
             jnp.where(keep, dr_ops, 0.0), jnp.where(keep, dr_rd, 0.0),
             jnp.where(keep, dr_wr, 0.0), completed | newly_done, now, finish,
-            bneck, kind_s, pe_bt, mem_bt, alp_t, traffic, nph,
+            bneck, bneck_noc, kind_s, pe_bt, mem_bt, noc_bt, alp_t, traffic,
+            nph,
         )
 
     state = (
@@ -540,30 +707,39 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         jnp.float32(0.0),
         jnp.zeros((t,), jnp.float32),
         jnp.zeros((t,), jnp.int32),
+        jnp.zeros((t,), jnp.int32),
         jnp.zeros((3,), jnp.float32),
         jnp.zeros((t,), jnp.float32),
         jnp.zeros((t,), jnp.float32),
+        jnp.zeros((n_noc,), jnp.float32),
         jnp.float32(0.0),
         jnp.float32(0.0),
         jnp.int32(0),
     )
-    (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s, pe_bt,
-     mem_bt, alp_t, traffic, nph) = jax.lax.fori_loop(0, t, phase, state)
+    (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, bneck_noc,
+     kind_s, pe_bt, mem_bt, noc_bt, alp_t, traffic, nph) = jax.lax.fori_loop(
+        0, t, phase, state)
     # per-BLOCK bottleneck telemetry: phi attribution resolved to the
     # binding slot (task_pe for compute-bound, task_mem for memory-bound;
-    # NoC-bound seconds are kind_s[2] — one NoC in this regime)
+    # single-NoC chains resolve their one NoC column from kind_s[2])
     pe_b = pe_bt @ onehot_pe
     mem_b = mem_bt @ onehot_mem
+    noc_b = kind_s[2:3] if n_noc == 1 else noc_bt
 
     # ---- device-side PPA rollup + Eq.-7 fitness ----------------------
     # dynamic energy is rate-independent (every task drains its totals;
-    # hops == 1 in the single-NoC regime), so it is a coefficient dot
+    # the NoC term scales with the task's route hop count), so it is a
+    # coefficient dot
     wl_lat = jax.ops.segment_max(finish, enc.wl_id, num_segments=n_wl)
     dyn_pj = jnp.sum(
         row["pe_pj"][task_pe] * enc.work_ops
-        + (row["mem_pj"][task_mem] + row["noc_pj"]) * (enc.read_bytes + enc.write_bytes)
+        + (row["mem_pj"][task_mem] + row["noc_pj"] * hops)
+        * (enc.read_bytes + enc.write_bytes)
     )
-    leak_w = jnp.sum(row["pe_leak"]) + jnp.sum(row["mem_leak"]) + row["noc_leak"]
+    leak_w = (
+        jnp.sum(row["pe_leak"]) + jnp.sum(row["mem_leak"])
+        + jnp.sum(row["noc_leak"])
+    )
     energy = dyn_pj * 1e-12 + leak_w * now
     power = jnp.where(now > 0, energy / jnp.maximum(now, 1e-30), 0.0)
     cap = enc.write_bytes @ onehot_mem
@@ -573,7 +749,7 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
             row["mem_area_fixed"]
             + row["mem_area_per_mb"] * jnp.maximum(cap, 1.0) / 1e6
         )
-        + row["noc_area"]
+        + jnp.sum(row["noc_area"])
     )
     dists = jnp.stack(
         [
@@ -587,7 +763,9 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         "latency_s": now,
         "finish_s": finish,
         "all_done": jnp.all(completed),
-        "bneck_code": bneck,
+        # packed per-task binding code: 0 = pe, 1 = mem, 2 + 3·k = NoC at
+        # chain index k (single-NoC packs to the historic {0, 1, 2} values)
+        "bneck_code": jnp.where(bneck == 2, 2 + 3 * bneck_noc, bneck),
         "bneck_kind_s": kind_s,
         # per-block bottleneck telemetry (slot order = encoding slot order):
         # seconds each PE/MEM slot was the binding bottleneck, plus the
@@ -595,6 +773,7 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         # select their next focus from without any host-side decode
         "pe_bneck_s": pe_b,
         "mem_bneck_s": mem_b,
+        "noc_bneck_s": noc_b,
         "top_bneck_pe": jnp.argmax(pe_b).astype(jnp.int32),
         "top_bneck_mem": jnp.argmax(mem_b).astype(jnp.int32),
         "alp_time_s": alp_t,
@@ -650,21 +829,23 @@ def encode_batch(
     enc: EncodedWorkload,
     n_pe: int = 0,
     n_mem: int = 0,
+    n_noc: int = 0,
 ) -> Dict[str, np.ndarray]:
-    """Pad a list of single-NoC designs to a common slot count and stack into
-    a :func:`simulate_batch` rows dict (neutral budget rows — callers that
+    """Pad a list of designs to common slot/chain counts and stack into a
+    :func:`simulate_batch` rows dict (neutral budget rows — callers that
     want device-side fitness fill them via :func:`fill_budget`).
 
-    ``n_pe``/``n_mem`` optionally force the padded slot counts — backends pad
-    to shape buckets so the jit cache is keyed on a handful of shapes instead
-    of recompiling every time a move adds a block. Returns host (numpy)
-    arrays; `jax.jit` transfers them on dispatch.
+    ``n_pe``/``n_mem``/``n_noc`` optionally force the padded counts —
+    backends pad to shape buckets so the jit cache is keyed on a handful of
+    shapes instead of recompiling every time a move adds a block or forks a
+    NoC. Returns host (numpy) arrays; `jax.jit` transfers them on dispatch.
     """
     encs = [EncodedDesign.of(d, g, db, enc) for d in designs]
     b, t = len(encs), len(enc.names)
     n_pe = max(n_pe, max(e.pe_peak.shape[0] for e in encs))
     n_mem = max(n_mem, max(e.mem_bw.shape[0] for e in encs))
-    rows = alloc_rows(b, t, n_pe, n_mem, len(enc.wl_names))
+    n_noc = max(n_noc, max(e.noc_bw.shape[0] for e in encs))
+    rows = alloc_rows(b, t, n_pe, n_mem, len(enc.wl_names), n_noc)
     for i, e in enumerate(encs):
         fill_row(rows, i, e)
     return rows

@@ -31,8 +31,15 @@ Registered policies (``POLICIES`` / ``make_policy``):
                     precedence or co-design rotation
   ``farsi``       — the full composition (bottleneck relaxation + locality
                     exploitation + dev-cost precedence + co-design focus
-                    rotation): bit-identical to the pre-refactor Explorer
-                    under a fixed seed (asserted against golden sequences)
+                    rotation): replays the recorded golden accepted-move
+                    sequences bit-for-bit under a fixed seed (fixtures are
+                    regenerated only on deliberate behaviour changes —
+                    tests/gen_golden_policy_seqs.py)
+  ``dev_cost``    — ``farsi`` plus an explicit development-cost penalty on
+                    every candidate's fitness (component count + variation,
+                    NoCs double-weighted): the §5.3 NoC-simplification
+                    policy, compared against ``farsi`` via the complexity
+                    metrics ``Campaign.aggregate`` reports
 
 A policy is stateful (taboo list, sticky focus, ledger) and must support
 ``checkpoint()``/``restore()`` so the explorer's speculative pipeline can
@@ -110,6 +117,13 @@ class HeuristicPolicy(Protocol):
     def is_taboo_task(self, task: str) -> bool:
         ...
 
+    def move_penalty(self, design: Design, cand) -> float:
+        """Additive fitness penalty for one priced candidate (Eq.-7 units).
+        The explorer ranks and accept-tests on ``fitness + penalty``, so a
+        non-zero penalty makes a candidate win only when its PPA gain
+        outweighs its development cost. The default is 0.0 — bit-neutral."""
+        ...
+
     def checkpoint(self) -> object:
         """Snapshot mutable policy state for speculative rollback."""
         ...
@@ -184,6 +198,12 @@ class PolicyBase:
 
     def restore(self, ck: object) -> None:
         self._taboo, self._sticky = dict(ck[0]), ck[1]
+
+    def move_penalty(self, design: Design, cand) -> float:
+        """Development-cost scoring hook — 0.0 for every stock policy, so
+        ranking and accept stay bit-identical to the raw fitness column
+        (x + 0.0 is exact). :class:`DevCostPolicy` overrides it."""
+        return 0.0
 
     # ---- SA accept (Eq.-7 fitness on the device column) ------------------
     def accept(self, it: int, d_before: float, d_after: float, u: float) -> bool:
@@ -345,8 +365,10 @@ class TaskBlockAware(TaskAware):
 class FarsiPolicy(TaskBlockAware):
     """The full FARSI heuristic: bottleneck relaxation + Algorithm-1
     locality reasoning + development-cost move precedence + co-design focus
-    rotation. Replays the pre-refactor Explorer's accepted-move sequence
-    bit-for-bit under a fixed seed (tests/test_policy.py golden fixtures)."""
+    rotation. Replays the recorded golden accepted-move sequences
+    bit-for-bit under a fixed seed (tests/test_policy.py fixtures;
+    regenerated via tests/gen_golden_policy_seqs.py only when search
+    behaviour changes deliberately)."""
 
     name = "farsi"
 
@@ -416,6 +438,53 @@ class LocalityExploitation(TaskBlockAware):
         return self._weighted_order(allowed, [1.0] * len(allowed))
 
 
+class DevCostPolicy(FarsiPolicy):
+    """Development-cost-aware navigation (paper §5.3): FARSI's full
+    heuristic plus an explicit component-count / variation penalty on every
+    candidate's fitness. A move that grows the system (fork, fork_swap) or
+    makes it more heterogeneous must buy a PPA improvement larger than its
+    penalty to win a batch or pass the accept test; moves that simplify
+    (join) are subsidised symmetrically. This is what lands the paper's
+    NoC-simplification result: under equal budgets the dev_cost policy
+    converges to designs with fewer and more uniform components —
+    especially NoCs, whose forks are pure congestion relief and are easiest
+    to over-provision — measured by ``Design.complexity_metrics`` and
+    reported per policy by ``Campaign.aggregate``.
+
+    The penalty is EXACT, not a proxy: the candidate's recorded move is
+    replayed onto the base (checkpoint → metrics → rollback, O(blocks))
+    and the complexity deltas are scored as
+    ``lam_component · Δcomponents + lam_variation · Δvariation``, with NoC
+    components double-weighted (``lam_noc`` rides on top of
+    ``lam_component`` for them)."""
+
+    name = "dev_cost"
+    lam_component = 0.02  # Eq.-7 distance units per added block
+    lam_noc = 0.04  # additional weight per added NoC (the §5.3 focus)
+    lam_variation = 0.10  # per unit of mean heterogeneity-CV increase
+
+    def move_penalty(self, design: Design, cand) -> float:
+        if cand.spec is None:
+            return 0.0
+        delta = cand.delta
+        if delta is not None and not (
+            delta.added or delta.removed or delta.touched
+        ):
+            # pure mapping moves (migrate, join-less remaps) change no block
+            # set and no knob — complexity is invariant, skip the replay.
+            # Migrates dominate long anneals, so the exact-penalty path below
+            # only runs for the few allocation/customization candidates.
+            return 0.0
+        before = design.complexity_metrics()
+        with cand.materialized(self.tdg) as mutated:
+            after = mutated.complexity_metrics()
+        return (
+            self.lam_component * (after["components"] - before["components"])
+            + self.lam_noc * (after["noc_components"] - before["noc_components"])
+            + self.lam_variation * (after["variation"] - before["variation"])
+        )
+
+
 POLICIES = {
     "naive_sa": NaiveSA,
     "task": TaskAware,
@@ -423,6 +492,7 @@ POLICIES = {
     "bottleneck": BottleneckRelaxation,
     "locality": LocalityExploitation,
     "farsi": FarsiPolicy,
+    "dev_cost": DevCostPolicy,
 }
 
 # awareness ladder → policy (ExplorerConfig.policy="" keeps the historical

@@ -50,11 +50,10 @@ SCAL_COLS = (
 )
 N_SCAL = len(SCAL_COLS)
 
-# nocs input column layout (packed per-candidate scalars)
-NOCS_COLS = (
-    "noc_bw", "noc_links", "noc_leak", "noc_area", "noc_pj",
-    "power_budget", "area_budget", "alpha",
-)
+# nocs input column layout (packed per-candidate scalars; the per-NoC chain
+# arrays — bw/links/leak/area — ride as their own (1, N) tiles now that the
+# chain is encoded natively)
+NOCS_COLS = ("noc_pj", "power_budget", "area_budget", "alpha")
 N_NOCS = len(NOCS_COLS)
 
 
@@ -74,20 +73,27 @@ def _phase_sim_kernel(
     pe_pj_ref,     # (1, S) f32
     pe_leak_ref,   # (1, S) f32
     pe_area_ref,   # (1, S) f32
+    pe_noc_ref,    # (1, S) i32  chain index each PE slot attaches to
     mem_bw_ref,    # (1, S) f32
     mem_pj_ref,    # (1, S) f32
     mem_leak_ref,  # (1, S) f32
     mem_af_ref,    # (1, S) f32  fixed area
     mem_amb_ref,   # (1, S) f32  area per MB
+    mem_noc_ref,   # (1, S) i32  chain index each MEM slot attaches to
+    noc_bw_ref,    # (1, N) f32  per-NoC per-link bandwidth (chain order)
+    noc_links_ref,  # (1, N) i32 per-NoC channel count
+    noc_leak_ref,  # (1, N) f32
+    noc_area_ref,  # (1, N) f32
     nocs_ref,      # (1, N_NOCS) f32 packed scalars (NOCS_COLS order)
     wlbud_ref,     # (1, NW) f32 per-workload latency budget
     # --- outputs ----------------------------------------------------------
     finish_ref,  # (1, T) f32
-    bneck_ref,   # (1, T) i32
+    bneck_ref,   # (1, T) i32 packed: 0/1 = pe/mem, 2 + 3·k = NoC chain idx k
     wllat_ref,   # (1, NW) f32
     scal_ref,    # (1, N_SCAL) f32 (SCAL_COLS order)
     pe_bneck_ref,   # (1, S) f32 per-PE-slot binding-bottleneck seconds
     mem_bneck_ref,  # (1, S) f32 per-MEM-slot binding-bottleneck seconds
+    noc_bneck_ref,  # (1, N) f32 per-NoC binding-bottleneck seconds
     # --- VMEM scratch (loop-invariant stage, reused across phases) -------
     ohp_ref,       # (T, S) f32 one-hot task→PE-slot
     ohm_ref,       # (T, S) f32 one-hot task→MEM-slot
@@ -99,6 +105,7 @@ def _phase_sim_kernel(
     t = work_ref.shape[1]
     s_pe = pe_peak_ref.shape[1]
     s_mem = mem_bw_ref.shape[1]  # PE/MEM slot axes pad independently
+    n_noc = noc_bw_ref.shape[1]
     f32 = jnp.float32
 
     work = work_ref[0]
@@ -122,8 +129,52 @@ def _phase_sim_kernel(
 
     peak_eff = dot(ohp_ref[...], pe_peak_ref[0]) * accel_ref[0]
     mem_peak = dot(ohm_ref[...], mem_bw_ref[0])
-    links = jnp.maximum(nocs_ref[0, 1], 1.0)
-    noc_bw = nocs_ref[0, 0]
+    links = jnp.maximum(noc_links_ref[0].astype(f32), 1.0)  # (N,)
+    noc_bw = noc_bw_ref[0]  # (N,)
+    # chain routing: gather the chain positions through the one-hot maps
+    # (positions are small ints — exact in f32), then the route mask
+    pe_pos = dot(ohp_ref[...], pe_noc_ref[0].astype(f32))
+    mem_pos = dot(ohm_ref[...], mem_noc_ref[0].astype(f32))
+    lo = jnp.minimum(pe_pos, mem_pos)
+    hi = jnp.maximum(pe_pos, mem_pos)
+    hops = hi - lo + 1.0
+    nidx_f = jax.lax.broadcasted_iota(jnp.int32, (t, n_noc), 1).astype(f32)
+    on_route = jnp.where(
+        (nidx_f >= lo[:, None]) & (nidx_f <= hi[:, None]), 1.0, 0.0
+    )  # (T, N)
+
+    def noc_share(runf):
+        """Eq. 3 per NoC: rank-residue link striping within each NoC's
+        users, end-to-end bandwidth = min over the route, binding NoC =
+        first argmin in chain order. ``n_noc == 1`` is the historic
+        single-NoC formulation, bit-for-bit."""
+        if n_noc == 1:
+            order = jnp.cumsum(runf)
+            same_link = (runf[:, None] * runf[None, :]) * jnp.where(
+                (order[:, None] - order[None, :]) % links[0] == 0, 1.0, 0.0
+            )
+            link_t = dot(same_link, burst)
+            return noc_bw[0] * burst / jnp.maximum(link_t, 1e-30), jnp.zeros((t,), f32)
+        # multi-NoC: rank-residue striping through a (T, 8) link one-hot
+        # (ladder max 8 channels) — O(T·8) per NoC instead of a (T, T)
+        # co-residency mask; user u's link is (rank_u − 1) mod n_links
+        lidx = jax.lax.broadcasted_iota(jnp.int32, (t, 8), 1).astype(f32)
+        best = jnp.full((t,), BIG, f32)
+        arg = jnp.zeros((t,), f32)
+        for k in range(n_noc):  # static unroll over the padded chain bucket
+            use_k = on_route[:, k] * runf
+            order = jnp.cumsum(use_k)
+            link = jnp.where(use_k > 0, (order - 1.0) % links[k], -1.0)
+            oh = jnp.where(link[:, None] == lidx, 1.0, 0.0)
+            link_load = dot(burst * use_k, oh)  # (8,) burst per link
+            link_t = dot(oh, link_load)
+            bw_k = jnp.where(
+                use_k > 0, noc_bw[k] * burst / jnp.maximum(link_t, 1e-30), BIG
+            )
+            better = bw_k < best
+            arg = jnp.where(better, f32(k), arg)
+            best = jnp.where(better, bw_k, best)
+        return best, arg
 
     # padded tasks (index ≥ t_real) are born completed: they never run,
     # never enter a share, and their zero work/bytes vanish in every sum
@@ -132,8 +183,8 @@ def _phase_sim_kernel(
     kind_ids = jax.lax.broadcasted_iota(jnp.int32, (t, 3), 1)
 
     def phase(_, state):
-        (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, kind_s,
-         pe_bt, mem_bt, alp_t, traffic, nph) = state
+        (rem_ops, rem_rd, rem_wr, completed, now, finish, bneck, bneck_noc,
+         kind_s, pe_bt, mem_bt, noc_bt, alp_t, traffic, nph) = state
         same_pe = same_pe_ref[...]
         same_mem = same_mem_ref[...]
         # ready ⟺ zero incomplete parents (counts are exact small ints)
@@ -150,14 +201,8 @@ def _phase_sim_kernel(
         mem_t = dot(same_mem, burst_run)
         m_bw = mem_peak * burst / jnp.maximum(mem_t, 1e-30)
 
-        # Eq. 3: round-robin link striping — same link ⟺ running ranks
-        # congruent mod n_links (rank differences are exact ints in f32)
-        order = jnp.cumsum(runf)
-        same_link = (runf[:, None] * runf[None, :]) * jnp.where(
-            (order[:, None] - order[None, :]) % links == 0, 1.0, 0.0
-        )
-        link_t = dot(same_link, burst)
-        n_bw = noc_bw * burst / jnp.maximum(link_t, 1e-30)
+        # Eq. 3: per-NoC rank-residue link striping, min over the route
+        n_bw, noc_arg = noc_share(runf)
 
         bw = jnp.minimum(m_bw, n_bw)
         comp_t = rem_ops / compute
@@ -181,6 +226,14 @@ def _phase_sim_kernel(
         # in-loop the telemetry costs two (T,) masked adds
         pe_bt = pe_bt + jnp.where(code == 0, phi_run, 0.0)
         mem_bt = mem_bt + jnp.where(code == 1, phi_run, 0.0)
+        # per-NoC binding seconds: the binding NoC is contention-dependent
+        # per phase, so multi-NoC chains accumulate in-loop (single-NoC
+        # resolves from kind_s[2] after the loop)
+        if n_noc > 1:
+            noc_bt = noc_bt + dot(
+                jnp.where(code == 2, phi_run, 0.0),
+                jnp.where(noc_arg[:, None] == nidx_f, 1.0, 0.0),
+            )
 
         # mask rates BEFORE the phi multiply (inf · 0 would poison remains)
         d_ops = jnp.where(running, compute, 0.0) * phi
@@ -193,6 +246,8 @@ def _phase_sim_kernel(
         now = now + phi
         finish = jnp.where(newly_done, now, finish)
         bneck = jnp.where(newly_done, code, bneck)
+        if n_noc > 1:
+            bneck_noc = jnp.where(newly_done, noc_arg, bneck_noc)
         alp_t = alp_t + phi * jnp.sum(runf / jnp.maximum(load_t, 1.0))
         traffic = traffic + jnp.sum(
             jnp.where(running, jnp.minimum(dr_rd + dr_wr, d_bw + d_bw), 0.0)
@@ -201,53 +256,66 @@ def _phase_sim_kernel(
         return (
             jnp.where(keep, dr_ops, 0.0), jnp.where(keep, dr_rd, 0.0),
             jnp.where(keep, dr_wr, 0.0), completed | newly_done, now, finish,
-            bneck, kind_s, pe_bt, mem_bt, alp_t, traffic, nph,
+            bneck, bneck_noc, kind_s, pe_bt, mem_bt, noc_bt, alp_t, traffic,
+            nph,
         )
 
     state = (
         work, rd_b, wr_b, completed0,
         f32(0.0), jnp.zeros((t,), f32), jnp.zeros((t,), jnp.int32),
+        jnp.zeros((t,), f32),
         jnp.zeros((3,), f32), jnp.zeros((t,), f32), jnp.zeros((t,), f32),
+        jnp.zeros((n_noc,), f32),
         f32(0.0), f32(0.0), f32(0.0),
     )
     # every phase retires ≥ 1 of the t_real live tasks, so t_real iterations
     # suffice; once all are done, phases are zero-length no-ops
-    (_, _, _, completed, now, finish, bneck, kind_s, pe_bt, mem_bt, alp_t,
-     traffic, nph) = jax.lax.fori_loop(0, t_real, phase, state)
+    (_, _, _, completed, now, finish, bneck, bneck_noc, kind_s, pe_bt,
+     mem_bt, noc_bt, alp_t, traffic, nph) = jax.lax.fori_loop(
+        0, t_real, phase, state)
     # slot-resolve the per-task bottleneck time once (phase-invariant maps)
     pe_b = dot(pe_bt, ohp_ref[...])
     mem_b = dot(mem_bt, ohm_ref[...])
+    noc_b = kind_s[2:3] if n_noc == 1 else noc_bt
 
     # ---- device-side PPA rollup + Eq.-7 fitness -------------------------
     wlhot = wlhot_ref[...]
     wl_lat = jnp.max(jnp.where(wlhot > 0.5, finish[:, None], 0.0), axis=0)
     dyn_pj = jnp.sum(
         dot(ohp_ref[...], pe_pj_ref[0]) * work
-        + (dot(ohm_ref[...], mem_pj_ref[0]) + nocs_ref[0, 4]) * (rd_b + wr_b)
+        + (dot(ohm_ref[...], mem_pj_ref[0]) + nocs_ref[0, 0] * hops)
+        * (rd_b + wr_b)
     )
-    leak_w = jnp.sum(pe_leak_ref[0]) + jnp.sum(mem_leak_ref[0]) + nocs_ref[0, 2]
+    leak_w = (
+        jnp.sum(pe_leak_ref[0]) + jnp.sum(mem_leak_ref[0])
+        + jnp.sum(noc_leak_ref[0])
+    )
     energy = dyn_pj * 1e-12 + leak_w * now
     power = jnp.where(now > 0, energy / jnp.maximum(now, 1e-30), 0.0)
     cap = dot(wr_b, ohm_ref[...])  # per-MEM-slot resident bytes
     area = (
         jnp.sum(pe_area_ref[0])
         + jnp.sum(mem_af_ref[0] + mem_amb_ref[0] * jnp.maximum(cap, 1.0) / 1e6)
-        + nocs_ref[0, 3]
+        + jnp.sum(noc_area_ref[0])
     )
     wlbud = wlbud_ref[0]
-    alpha = nocs_ref[0, 7]
+    alpha = nocs_ref[0, 3]
     dists = jnp.stack([
         jnp.max((wl_lat - wlbud) / wlbud),
-        (power - nocs_ref[0, 5]) / nocs_ref[0, 5],
-        (area - nocs_ref[0, 6]) / nocs_ref[0, 6],
+        (power - nocs_ref[0, 1]) / nocs_ref[0, 1],
+        (area - nocs_ref[0, 2]) / nocs_ref[0, 2],
     ])
     fitness = jnp.sum(jnp.where(dists > 0, dists, alpha * dists))
 
     finish_ref[0] = finish
-    bneck_ref[0] = bneck
+    # packed binding code: 0/1 = pe/mem, NoC-bound = 2 + 3·(chain index)
+    bneck_ref[0] = jnp.where(
+        bneck == 2, 2 + 3 * bneck_noc.astype(jnp.int32), bneck
+    )
     wllat_ref[0] = wl_lat
     pe_bneck_ref[0] = pe_b
     mem_bneck_ref[0] = mem_b
+    noc_bneck_ref[0] = noc_b
     scal_ref[0] = jnp.stack([
         now, energy, power, area, fitness, alp_t, traffic, nph,
         jnp.where(jnp.all(completed), 1.0, 0.0),
@@ -266,40 +334,44 @@ def phase_sim_batch(
     task_pe: jax.Array,   # (B, T) i32
     task_mem: jax.Array,  # (B, T) i32
     accel: jax.Array,     # (B, T)
-    pe_coeffs: Dict[str, jax.Array],   # 4 × (B, S)
-    mem_coeffs: Dict[str, jax.Array],  # 5 × (B, S)
-    nocs: jax.Array,      # (B, N_NOCS)
+    pe_coeffs: Dict[str, jax.Array],   # 4 × (B, S) f32 + (B, S) i32 pe_noc
+    mem_coeffs: Dict[str, jax.Array],  # 5 × (B, S) f32 + (B, S) i32 mem_noc
+    noc_arrays: Dict[str, jax.Array],  # 4 × (B, N) per-NoC chain columns
+    nocs: jax.Array,      # (B, N_NOCS) packed scalars
     wlbud: jax.Array,     # (B, NW)
     *,
     t_real: int,
     interpret: bool = False,
 ):
     """One fused launch over the (B, T) grid; returns (finish, bneck,
-    wl_latency, scal, pe_bneck, mem_bneck) with the scal columns laid out as
-    ``SCAL_COLS`` and the per-slot bottleneck-seconds telemetry in the two
-    trailing (B, S) blocks."""
+    wl_latency, scal, pe_bneck, mem_bneck, noc_bneck) with the scal columns
+    laid out as ``SCAL_COLS`` and the per-slot bottleneck-seconds telemetry
+    in the trailing (B, S)/(B, N) blocks."""
     b, t = task_pe.shape
     s_pe = pe_coeffs["pe_peak"].shape[1]
     s_mem = mem_coeffs["mem_bw"].shape[1]
+    n_noc = noc_arrays["noc_bw"].shape[1]
     n_wl = wlhot.shape[1]
 
     shared = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
     perb = lambda w: pl.BlockSpec((1, w), lambda i: (i, 0))
 
     kernel = functools.partial(_phase_sim_kernel, t_real=t_real)
-    finish, bneck, wllat, scal, pe_bneck, mem_bneck = pl.pallas_call(
+    finish, bneck, wllat, scal, pe_bneck, mem_bneck, noc_bneck = pl.pallas_call(
         kernel,
         grid=(b,),
         in_specs=[
             shared((1, t)), shared((1, t)), shared((1, t)), shared((1, t)),
             shared((t, t)), shared((t, n_wl)),
             perb(t), perb(t), perb(t),
-            perb(s_pe), perb(s_pe), perb(s_pe), perb(s_pe),
+            perb(s_pe), perb(s_pe), perb(s_pe), perb(s_pe), perb(s_pe),
             perb(s_mem), perb(s_mem), perb(s_mem), perb(s_mem), perb(s_mem),
+            perb(s_mem),
+            perb(n_noc), perb(n_noc), perb(n_noc), perb(n_noc),
             perb(N_NOCS), perb(n_wl),
         ],
         out_specs=[perb(t), perb(t), perb(n_wl), perb(N_SCAL),
-                   perb(s_pe), perb(s_mem)],
+                   perb(s_pe), perb(s_mem), perb(n_noc)],
         out_shape=[
             jax.ShapeDtypeStruct((b, t), jnp.float32),
             jax.ShapeDtypeStruct((b, t), jnp.int32),
@@ -307,6 +379,7 @@ def phase_sim_batch(
             jax.ShapeDtypeStruct((b, N_SCAL), jnp.float32),
             jax.ShapeDtypeStruct((b, s_pe), jnp.float32),
             jax.ShapeDtypeStruct((b, s_mem), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_noc), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((t, s_pe), jnp.float32),
@@ -319,9 +392,12 @@ def phase_sim_batch(
         work, rd, wr, burst, pmask, wlhot,
         task_pe, task_mem, accel,
         pe_coeffs["pe_peak"], pe_coeffs["pe_pj"],
-        pe_coeffs["pe_leak"], pe_coeffs["pe_area"],
+        pe_coeffs["pe_leak"], pe_coeffs["pe_area"], pe_coeffs["pe_noc"],
         mem_coeffs["mem_bw"], mem_coeffs["mem_pj"], mem_coeffs["mem_leak"],
         mem_coeffs["mem_area_fixed"], mem_coeffs["mem_area_per_mb"],
+        mem_coeffs["mem_noc"],
+        noc_arrays["noc_bw"], noc_arrays["noc_links"],
+        noc_arrays["noc_leak"], noc_arrays["noc_area"],
         nocs, wlbud,
     )
-    return finish, bneck, wllat, scal, pe_bneck, mem_bneck
+    return finish, bneck, wllat, scal, pe_bneck, mem_bneck, noc_bneck

@@ -11,10 +11,13 @@ The wrapper owns the layout differences:
   * the task axis is padded to the kernel tile width — a multiple of 128
     (the TPU lane count) under Mosaic, a multiple of 8 in interpret mode so
     CPU CI exercises the padded-task masking on every run;
-  * per-candidate scalars (NoC knobs + Eq.-7 budgets) are packed into one
-    ``(B, 8)`` array, and scalar outputs come back as one ``(B, 14)``
-    column block (``kernel.SCAL_COLS``) plus the two per-slot
-    bottleneck-seconds telemetry blocks, unpacked here;
+  * per-candidate scalars (the NoC energy constant + Eq.-7 budgets) are
+    packed into one ``(B, 4)`` array; the per-NoC chain columns
+    (bw/links/leak/area, chain order, padded N) and the per-slot
+    NoC-attachment indices ride as their own tiles; scalar outputs come
+    back as one ``(B, 14)`` column block (``kernel.SCAL_COLS``) plus the
+    per-slot and per-NoC bottleneck-seconds telemetry blocks, unpacked
+    here;
   * the workload one-hot used for the per-workload latency max is built
     host-side once per trace.
 
@@ -76,15 +79,19 @@ def phase_sim(
 
     pe_coeffs = {k: jnp.asarray(rows[k], f32)
                  for k in ("pe_peak", "pe_pj", "pe_leak", "pe_area")}
+    pe_coeffs["pe_noc"] = jnp.asarray(rows["pe_noc"], jnp.int32)
     mem_coeffs = {k: jnp.asarray(rows[k], f32)
                   for k in ("mem_bw", "mem_pj", "mem_leak",
                             "mem_area_fixed", "mem_area_per_mb")}
+    mem_coeffs["mem_noc"] = jnp.asarray(rows["mem_noc"], jnp.int32)
+    noc_arrays = {
+        "noc_bw": jnp.asarray(rows["noc_bw"], f32),
+        "noc_links": jnp.asarray(rows["noc_links"], jnp.int32),
+        "noc_leak": jnp.asarray(rows["noc_leak"], f32),
+        "noc_area": jnp.asarray(rows["noc_area"], f32),
+    }
     nocs = jnp.stack(
         [
-            jnp.asarray(rows["noc_bw"], f32),
-            jnp.asarray(rows["noc_links"], f32),
-            jnp.asarray(rows["noc_leak"], f32),
-            jnp.asarray(rows["noc_area"], f32),
             jnp.asarray(rows["noc_pj"], f32),
             jnp.asarray(rows["power_budget"], f32),
             jnp.asarray(rows["area_budget"], f32),
@@ -95,10 +102,10 @@ def phase_sim(
     assert nocs.shape[1] == N_NOCS
     wlbud = jnp.asarray(rows["wl_budget"], f32)
 
-    finish, bneck, wllat, scal, pe_bneck, mem_bneck = phase_sim_batch(
+    finish, bneck, wllat, scal, pe_bneck, mem_bneck, noc_bneck = phase_sim_batch(
         work, rd, wr, burst, pmask, wlhot,
-        task_pe, task_mem, accel, pe_coeffs, mem_coeffs, nocs, wlbud,
-        t_real=t_real, interpret=interpret,
+        task_pe, task_mem, accel, pe_coeffs, mem_coeffs, noc_arrays, nocs,
+        wlbud, t_real=t_real, interpret=interpret,
     )
 
     col = {name: scal[:, i] for i, name in enumerate(SCAL_COLS)}
@@ -112,6 +119,7 @@ def phase_sim(
         ),
         "pe_bneck_s": pe_bneck,
         "mem_bneck_s": mem_bneck,
+        "noc_bneck_s": noc_bneck,
         "top_bneck_pe": col["top_bneck_pe"].astype(jnp.int32),
         "top_bneck_mem": col["top_bneck_mem"].astype(jnp.int32),
         "alp_time_s": col["alp_time_s"],

@@ -1,0 +1,70 @@
+"""Regenerate tests/golden_policy_seqs.json.
+
+The fixtures pin the Explorer's (iteration, move, accepted) sequence per
+(graph, awareness, seed, iteration-cap) cell, per backend: entries whose
+python and jax sequences agree carry ``backends: ["python", "jax"]``; cells
+where float32 device ranking legitimately diverges split into a base entry
+and an ``@jax`` twin. `tests/test_policy.py::test_policy_replays_pre_refactor_golden`
+replays every entry on every listed backend bit-for-bit.
+
+Run me (``PYTHONPATH=src python tests/gen_golden_policy_seqs.py``) ONLY when
+search behaviour changes deliberately — a move-semantics bugfix, a pricing
+change — and say so in the commit. History: captured at the PR-3 tree;
+regenerated in PR 5 after (a) `apply_fork` stopped silently migrating a
+different task when asked to fork the anchor task and (b) NoC topology moves
+started pricing on-device (f32) instead of through the float64 Python
+fallback.
+"""
+import json
+import os
+
+from repro.core import (
+    Explorer, ExplorerConfig, HardwareDatabase, ar_complex, audio,
+    calibrated_budget, edge_detection,
+)
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden_policy_seqs.json")
+GRAPHS = {"audio": audio, "ar_complex": ar_complex, "ed": edge_detection}
+CELLS = (
+    ("audio", "farsi", 7, 150),
+    ("ar_complex", "farsi", 3, 120),
+    ("ed", "farsi", 7, 60),
+    ("ed", "farsi", 11, 60),
+    ("ed", "sa", 5, 80),
+    ("ed", "task", 5, 80),
+    ("ed", "task_block", 5, 80),
+)
+
+
+def _seq(res):
+    return [[h["iteration"], h["move"], int(h["accepted"])] for h in res.history]
+
+
+def main() -> None:
+    db = HardwareDatabase()
+    bud = calibrated_budget(db)
+    out = {}
+    for gname, aware, seed, iters in CELLS:
+        runs = {}
+        for backend in ("python", "jax"):
+            res = Explorer(
+                GRAPHS[gname](), db, bud,
+                ExplorerConfig(awareness=aware, max_iterations=iters,
+                               seed=seed, backend=backend),
+            ).run()
+            runs[backend] = {"seq": _seq(res), "n_sims": res.n_sims}
+        key = f"{gname}.{aware}.s{seed}.it{iters}"
+        if runs["python"] == runs["jax"]:
+            out[key] = {"backends": ["python", "jax"], **runs["python"]}
+        else:
+            out[key] = {"backends": ["python"], **runs["python"]}
+            out[f"{key}@jax"] = {"backends": ["jax"], **runs["jax"]}
+        print(key, "split" if runs["python"] != runs["jax"] else "shared")
+    with open(GOLDEN, "w") as f:
+        json.dump(out, f)
+    print(f"wrote {GOLDEN} ({len(out)} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -64,26 +64,54 @@ def test_backend_equivalence_randomized(graph_fn, seed):
         ), i
 
 
-def test_jax_backend_multi_noc_fallback():
-    """Designs outside the single-NoC regime transparently fall back to the
-    Python path inside the same evaluate() call, result order preserved."""
+def test_jax_backend_prices_multi_noc_natively():
+    """Multi-NoC chain designs ride the vectorized path now (no fallback):
+    supports() is True, results match Python, and n_fallback stays 0."""
     db = HardwareDatabase()
     g = edge_detection()
     singles = random_single_noc_designs(g, 3, seed=1)
     multi = _multi_noc_design(g)
     jb = JaxBatchedBackend(g, db)
-    assert not jb.supports(multi) and all(jb.supports(d) for d in singles)
+    assert jb.supports(multi) and all(jb.supports(d) for d in singles)
 
     mixed = [singles[0], multi, singles[1], singles[2]]
     got = jb.evaluate(mixed)
     ref = PythonBackend(g, db).evaluate(mixed)
     for a, b in zip(ref, got):
         assert abs(a.latency_s - b.latency_s) / a.latency_s < REL_TOL
-    # the multi-NoC result is the exact Python result (same code path)
-    assert got[1].latency_s == ref[1].latency_s
     s = jb.stats()
-    assert s.n_sims == 4 and s.n_fallback == 1 and s.n_batched == 3
+    assert s.n_sims == 4 and s.n_fallback == 0 and s.n_batched == 4
     assert s.n_dispatches == 1
+
+
+def test_jax_backend_fallback_beyond_max_noc():
+    """Chains the encoding cannot host (> MAX_NOC NoCs) raise the typed
+    UnsupportedDesignError inside the backend, which routes exactly those
+    candidates to the scalar Python path mid-batch — and the capability
+    check survives `python -O` (it is an exception, not an assert)."""
+    import pytest as _pytest
+
+    from repro.core.phase_sim_jax import (
+        MAX_NOC, EncodedDesign, EncodedWorkload, UnsupportedDesignError,
+    )
+
+    db = HardwareDatabase()
+    g = edge_detection()
+    wide = Design.base(g)
+    for _ in range(MAX_NOC):  # chain of MAX_NOC + 1
+        wide.add_block(make_noc(), after_noc=wide.noc_chain[-1])
+    with _pytest.raises(UnsupportedDesignError):
+        EncodedDesign.of(wide, g, db, EncodedWorkload.of(g))
+
+    jb = JaxBatchedBackend(g, db)
+    assert not jb.supports(wide)
+    single = random_single_noc_designs(g, 1, seed=4)[0]
+    got = jb.evaluate([single, wide])
+    ref = PythonBackend(g, db).evaluate([single, wide])
+    assert got[1].latency_s == ref[1].latency_s  # exact: same scalar path
+    assert abs(got[0].latency_s - ref[0].latency_s) / ref[0].latency_s < REL_TOL
+    s = jb.stats()
+    assert s.n_fallback == 1 and s.n_batched == 1
 
 
 # ---- explorer contract ---------------------------------------------------

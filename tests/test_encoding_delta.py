@@ -25,8 +25,10 @@ from repro.core.phase_sim_jax import EncodedDesign, EncodedWorkload, apply_delta
 
 _ED_FIELDS = (
     "task_pe", "task_mem", "pe_accel",
-    "pe_peak", "pe_pj", "pe_leak", "pe_area",
+    "pe_peak", "pe_pj", "pe_leak", "pe_area", "pe_noc",
     "mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb",
+    "mem_noc",
+    "noc_bw", "noc_links", "noc_leak", "noc_area",
 )
 
 
@@ -35,9 +37,8 @@ def _assert_bit_identical(got: EncodedDesign, ref: EncodedDesign, ctx) -> None:
         a, b = getattr(got, f), getattr(ref, f)
         assert a.dtype == b.dtype and a.shape == b.shape, (ctx, f)
         assert np.array_equal(a, b), (ctx, f, a, b)
-    assert got.noc_bw == ref.noc_bw and got.noc_links == ref.noc_links, ctx
-    assert got.noc_leak == ref.noc_leak and got.noc_area == ref.noc_area, ctx
     assert got.pe_slot == ref.pe_slot and got.mem_slot == ref.mem_slot, ctx
+    assert got.noc_slot == ref.noc_slot, ctx
 
 
 @pytest.mark.parametrize("move", MOVE_KINDS)
@@ -70,12 +71,12 @@ def test_delta_encoding_bit_identical_per_move_kind(move):
             if not ok:
                 d.restore(ck)
                 continue
-            vectorizable = not delta.topology
-            ref = EncodedDesign.of(d, g, db, enc) if vectorizable else None
+            # every built-in move — NoC fork/join included — now records an
+            # encodable delta; `topology` stays False throughout
+            assert not delta.topology, (move, i, trial)
+            ref = EncodedDesign.of(d, g, db, enc)
             d.restore(ck)
             assert d.signature() == sig0, (move, i, trial)
-            if not vectorizable:
-                continue  # NoC allocation moves leave the single-NoC regime
             got = apply_delta(base_enc, delta, d, g, db, enc)
             _assert_bit_identical(got, ref, (move, i, trial))
             # the base encoding itself must be untouched (it is a live cache)

@@ -73,6 +73,64 @@ def test_fork_requires_splittable_load():
     assert not apply_fork(d, g, solo_pe, task_name="grad_x")
 
 
+def test_fork_anchor_task_refused_and_mover_set_exact():
+    """Regression: fork with task_name == hosted[0] (the anchor) used to
+    silently migrate a *different* task via the `or hosted[1:2]` fallback —
+    it must refuse instead, and an applicable targeted fork must move
+    EXACTLY the requested task (nothing else)."""
+    d, g = _design_and_graph()
+    pe = d.pes()[0]
+    hosted = d.tasks_on_pe(pe)
+    assert len(hosted) >= 3
+    before = dict(d.task_pe)
+    # anchor request: inapplicable, and the design must be untouched
+    assert not apply_fork(d, g, pe, task_name=hosted[0])
+    assert d.task_pe == before and d.block_counts()["pe"] == 1
+    # targeted request: exactly the requested task moves
+    assert apply_fork(d, g, pe, task_name=hosted[1])
+    moved = [t for t in before if d.task_pe[t] != before[t]]
+    assert moved == [hosted[1]]
+    # untargeted request: the anchor stays, half the rest moves over
+    d2, _ = _design_and_graph()
+    pe2 = d2.pes()[0]
+    hosted2 = d2.tasks_on_pe(pe2)
+    before2 = dict(d2.task_pe)
+    assert apply_fork(d2, g, pe2, task_name=None)
+    moved2 = {t for t in before2 if d2.task_pe[t] != before2[t]}
+    assert moved2 == set(hosted2[1::2]) and hosted2[0] not in moved2
+
+
+def test_noc_fork_join_record_encodable_deltas():
+    """NoC fork/join record chain + attachment edits (not topology=True):
+    the delta names the inserted/removed NoC, its chain anchor, and every
+    re-homed block — the prerequisite for device-priced topology moves."""
+    from repro.core.blocks import BlockKind
+    from repro.core.moves import MoveDelta
+
+    d, g = _design_and_graph()
+    from repro.core.blocks import make_gpp, make_mem
+
+    d.add_block(make_gpp(), attach_to=d.noc_chain[0])
+    d.add_block(make_mem(), attach_to=d.noc_chain[0])
+    noc0 = d.noc_chain[0]
+    delta = MoveDelta()
+    assert apply_fork(d, g, noc0, delta=delta)
+    assert not delta.topology
+    assert len(delta.added) == 1 and delta.added[0].kind == BlockKind.NOC
+    new = delta.added[0].name
+    assert delta.noc_after == noc0 and d.noc_chain == [noc0, new]
+    # every block the fork re-homed is recorded, with its new NoC
+    rehomed = {b for b, n in d.attached_noc.items() if n == new}
+    assert rehomed and delta.attached == {b: new for b in rehomed}
+
+    delta2 = MoveDelta()
+    assert apply_join(d, g, new, delta=delta2)
+    assert not delta2.topology
+    assert delta2.removed == [new]
+    assert delta2.attached == {b: noc0 for b in rehomed}
+    assert d.noc_chain == [noc0]
+
+
 def test_join_last_block_fails():
     d, g = _design_and_graph()
     assert not apply_join(d, g, d.pes()[0])  # only PE

@@ -26,7 +26,9 @@ _CHECK_KEYS = (
 
 
 @pytest.mark.parametrize("graph_fn", [audio, ar_complex])
-@pytest.mark.parametrize("batch", [1, 8, 64])
+@pytest.mark.parametrize(
+    "batch", [1, 8, pytest.param(64, marks=pytest.mark.slow)]
+)
 def test_kernel_matches_ref_oracle(graph_fn, batch):
     """Interpret-mode kernel vs the pure-jnp oracle, every output column,
     ≤ 1e-5 relative — including the Eq.-7 fitness the explorer ranks by."""
