@@ -1,45 +1,89 @@
-"""Batched serving: prefill a prompt batch, then decode tokens with the
-KV/SSM cache, reporting per-phase throughput.
+"""Continuous-batching DSE serving: N concurrent exploration sessions, one
+shared device batch stream, one content-addressed evaluation cache.
 
-  PYTHONPATH=src python examples/serve_batch.py --arch qwen3-1.7b --tokens 32
+Spins up a `DseService`, admits a mix of tenants — different workloads,
+policies, and seeds, including replicas of the same request (the repeated-
+scenario case the cache exists for) — staggers some arrivals mid-flight,
+streams best-design-so-far events as they commit, and reports per-session
+winners plus the fleet cache hit-rate.
+
+  PYTHONPATH=src python examples/serve_batch.py [--sessions 12] [--iterations 60]
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.registry import arch_names, reduced_config
-from repro.launch.serve import generate
-from repro.models.model import RunFlags, init_params
+from repro.core import (
+    ExplorerConfig,
+    HardwareDatabase,
+    ar_complex,
+    audio,
+    calibrated_budget,
+)
+from repro.serve import DseService
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=arch_names(), default="qwen3-1.7b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--sessions", type=int, default=12,
+                    help="total sessions (half admitted up front, half join "
+                         "mid-flight)")
+    ap.add_argument("--iterations", type=int, default=60)
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the content-addressed DesignStore")
     args = ap.parse_args()
 
-    cfg = reduced_config(args.arch)
-    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
-    key = jax.random.PRNGKey(1)
-    if cfg.input_mode == "tokens":
-        prompt = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
-    else:
-        prompt = {"embeds": jax.random.normal(key, (args.batch, args.prompt_len, cfg.d_model), jnp.bfloat16)}
+    db = HardwareDatabase()
+    budget = calibrated_budget(db)
+    graphs = {"audio": audio(), "ar": ar_complex()}
+    policies = ("farsi", "bottleneck", "naive_sa")
 
-    flags = RunFlags(attn_impl="full", ssd_chunk=8)
-    t0 = time.perf_counter()
-    out, _ = generate(params, cfg, prompt, n_tokens=args.tokens, flags=flags)
-    jax.block_until_ready(out)
-    dt = time.perf_counter() - t0
-    print(f"{args.arch} (reduced): batch={args.batch} prompt={args.prompt_len} "
-          f"generated={args.tokens}")
-    print(f"sample tokens: {out[0, :10].tolist()}")
-    print(f"wall={dt:.2f}s  decode throughput ≈ {args.batch*args.tokens/dt:,.1f} tok/s "
-          f"(CPU, reduced config; jit compile included)")
+    svc = DseService(db, backend="jax", cache=not args.no_cache)
+    svc_t0 = time.perf_counter()
+
+    def on_event(ev):
+        print(f"  [{time.perf_counter() - svc_t0:6.2f}s] {ev.session:<14s} "
+              f"iter {ev.iteration:3d}  distance={ev.distance:8.3f}  "
+              f"move={ev.move}" + ("  CONVERGED" if ev.converged else ""))
+
+    def submit(i):
+        wl = "audio" if i % 2 == 0 else "ar"
+        pol = policies[i % len(policies)]
+        # seeds repeat every 4 sessions per (workload, policy) mix — replica
+        # requests are what the content-addressed cache collapses
+        cfg = ExplorerConfig(policy=pol, seed=(i // 2) % 4,
+                             max_iterations=args.iterations, backend="jax")
+        return svc.submit(f"{wl}.{pol}.{i}", graphs[wl], budget, cfg,
+                          on_event=on_event)
+
+    n_head = max(args.sessions // 2, 1)
+    handles = [submit(i) for i in range(n_head)]
+    print(f"admitted {n_head} sessions up front; "
+          f"{args.sessions - n_head} will join mid-flight\n")
+
+    # drive a few ticks, then let latecomers join the live batch stream —
+    # the continuous-batching case a lockstep Campaign cannot express
+    for _ in range(5):
+        svc.step()
+    for i in range(n_head, args.sessions):
+        handles.append(submit(i))
+    stats = svc.run()
+
+    print(f"\n== {stats.n_done}/{stats.n_sessions} sessions done in "
+          f"{stats.n_ticks} ticks, {stats.wall_s:.2f}s "
+          f"({stats.evals_per_s:,.0f} evals/s aggregate) ==")
+    for h in handles:
+        r = h.result
+        print(f"  {h.name:<16s} iters={r.iterations:3d} "
+              f"converged={str(r.converged):<5s} "
+              f"distance={r.best_distance.city_block():8.3f}  "
+              f"blocks={r.best_design.block_counts()}  "
+              f"latency={h.latency_s:.2f}s  events={len(h.events)}")
+    print(f"\ncache: hits={stats.cache_hits} misses={stats.cache_misses} "
+          f"bypass={stats.cache_bypasses} evictions={stats.cache_evictions} "
+          f"hit-rate={stats.cache_hit_rate:.1%}")
+    print(f"session latency: p50={stats.latency_percentile(50):.2f}s "
+          f"p95={stats.latency_percentile(95):.2f}s; "
+          f"fallback evals: {stats.n_fallback}")
 
 
 if __name__ == "__main__":

@@ -2,16 +2,24 @@
 
 FARSI's experiments are never a single search — Fig. 9/10 average seeds,
 Fig. 9b sweeps the awareness ladder, §6 sweeps budgets and workloads. A
-``Campaign`` declares that whole grid up front, then drives every
-exploration's :meth:`Explorer.run_steps` coroutine in lockstep: each round it
-gathers the pending candidate batches of *all* live explorers on a workload
-and prices them through **one** ``backend.evaluate_candidates`` dispatch.
-With `JaxBatchedBackend` that turns N concurrent searches into single
-batched dispatches of N×neighbours delta-encoded candidates — the batching
-the vectorized simulator was built for — while `PythonBackend` campaigns
-still benefit from the shared accounting. One backend is shared per distinct
-task graph (the encoding is workload-specific); per-run ``n_sims`` stays
-with each explorer.
+``Campaign`` declares that whole grid up front, then runs it as a thin
+client of the serve layer's continuous-batching engine
+(`repro.serve.ContinuousBatchScheduler`): every run becomes a `Session`
+admitted before the first tick, and each tick packs the pending candidate
+batches of *all* live explorers on a workload into **one**
+``backend.evaluate_candidates`` dispatch. Because every session joins up
+front and per-row results are independent of batch composition, this is
+exactly the historic lockstep sweep — same converged runs, same iteration
+counts — while mid-flight-joining consumers (``repro.serve.DseService``)
+share the identical engine. With `JaxBatchedBackend` that turns N
+concurrent searches into single batched dispatches of N×neighbours
+delta-encoded candidates — the batching the vectorized simulator was built
+for — while `PythonBackend` campaigns still benefit from the shared
+accounting. One backend is shared per distinct task graph (the encoding is
+workload-specific); per-run ``n_sims`` stays with each explorer. Passing a
+``store=`` (`repro.serve.DesignStore`) memoizes evaluations content-
+addressed on ``hash(encoding, workload, budget)`` and surfaces
+``cache_*`` counters in the aggregate.
 
 The draining is itself pipelined: ``evaluate_candidates`` is non-blocking,
 and pipelined explorer coroutines answer a ``send`` with their next —
@@ -29,7 +37,7 @@ import statistics
 import time
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Union
 
-from .backend import BackendStats, Candidate, SimulatorBackend, make_backend
+from .backend import BackendStats, SimulatorBackend
 from .budgets import Budget
 from .codesign import aggregate_ledgers
 from .database import HardwareDatabase
@@ -115,11 +123,13 @@ class Campaign:
         self,
         db: HardwareDatabase,
         backend: Union[str, Callable[[TaskGraph, HardwareDatabase], SimulatorBackend]] = "python",
+        store=None,  # Optional[serve.DesignStore]: content-addressed eval cache
     ) -> None:
         self.db = db
         self._backend_spec = backend
         self.specs: List[RunSpec] = []
-        self._backends: Dict[int, SimulatorBackend] = {}  # id(tdg) -> backend
+        self.store = store
+        self._scheduler = None  # serve.ContinuousBatchScheduler, built lazily
 
     # ---- declaration ---------------------------------------------------
     def add(
@@ -204,77 +214,71 @@ class Campaign:
         return camp
 
     # ---- execution -----------------------------------------------------
+    def _get_scheduler(self):
+        # the serve-layer scheduler IS the campaign engine now; imported
+        # lazily because repro.serve builds on repro.core (not a cycle at
+        # import time this way)
+        if self._scheduler is None:
+            from ..serve.scheduler import ContinuousBatchScheduler
+
+            self._scheduler = ContinuousBatchScheduler(
+                self.db, self._backend_spec, store=self.store
+            )
+        return self._scheduler
+
     def backend_for(self, tdg: TaskGraph) -> SimulatorBackend:
-        key = id(tdg)
-        if key not in self._backends:
-            if callable(self._backend_spec):
-                self._backends[key] = self._backend_spec(tdg, self.db)
-            else:
-                self._backends[key] = make_backend(self._backend_spec, tdg, self.db)
-        return self._backends[key]
+        return self._get_scheduler().backend_for(tdg)
 
     def run(self) -> CampaignResult:
+        """Drive the whole grid through the continuous-batching scheduler.
+
+        Every spec is admitted up front, so the serve loop degenerates to
+        exactly the historic lockstep sweep: each tick packs all live runs'
+        pending batches per shared backend into one dispatch, and per-row
+        results are independent of batch composition — run results and
+        aggregates are identical to the pre-scheduler implementation.
+        """
         t0 = time.perf_counter()
         if not self.specs:
             raise ValueError("empty campaign: nothing to run")
+        from ..serve.session import Session, SessionRequest
 
-        @dataclasses.dataclass
-        class _Live:
-            spec: RunSpec
-            gen: object
-            pending: List[Candidate]
-            sim_wall: float = 0.0
-
-        live: Dict[str, _Live] = {}
-        done: Dict[str, ExplorationResult] = {}
+        sched = self._get_scheduler()
+        sessions: List = []
         for spec in self.specs:
             ex = Explorer(
                 spec.tdg, self.db, spec.budget, spec.config,
-                backend=self.backend_for(spec.tdg),
+                backend=sched.backend_for(spec.tdg),
             )
-            gen = ex.run_steps(spec.initial)
-            live[spec.name] = _Live(spec=spec, gen=gen, pending=next(gen))
-
-        while live:
-            # group live runs by shared backend and cross-batch each group's
-            # pending requests into one dispatch
-            groups: Dict[int, List[_Live]] = {}
-            for st in live.values():
-                groups.setdefault(id(st.spec.tdg), []).append(st)
-            for members in groups.values():
-                backend = self.backend_for(members[0].spec.tdg)
-                cands = [c for st in members for c in st.pending]
-                td = time.perf_counter()
-                results = backend.evaluate_candidates(cands)
-                dispatch_s = time.perf_counter() - td
-                offset = 0
-                for st in members:
-                    k = len(st.pending)
-                    sub = results[offset:offset + k]
-                    offset += k
-                    st.sim_wall += dispatch_s * k / max(len(cands), 1)
-                    try:
-                        st.pending = st.gen.send(sub)
-                    except StopIteration as stop:
-                        res: ExplorationResult = stop.value
-                        res.sim_wall_s = st.sim_wall
-                        done[st.spec.name] = res
-                        del live[st.spec.name]
-
+            req = SessionRequest(
+                spec.name, spec.tdg, spec.budget, spec.config, spec.initial
+            )
+            session = Session(req, ex)
+            sessions.append(session)
+            sched.admit(session)
+        sched.run_until_idle()
         # drain: abandoned speculative dispatches must not outlive the run
-        for backend in self._backends.values():
-            flush = getattr(backend, "flush", None)
-            if flush is not None:
-                flush()
+        sched.flush()
 
-        runs = {spec.name: done[spec.name] for spec in self.specs}
+        runs = {s.name: s.result for s in sessions}  # spec order preserved
         labels = self._backend_labels()
         backend_stats = {
-            labels[tdg_id]: b.stats() for tdg_id, b in self._backends.items()
+            labels[tdg_id]: b.stats() for tdg_id, b in sched.backends().items()
         }
+        aggregate = self._aggregate(runs)
+        # content-addressed cache accounting (zeros when no store attached):
+        # hits+aliases avoided device rows; bypasses took the scalar path
+        hits = sum(s.n_cache_hits for s in backend_stats.values())
+        misses = sum(s.n_cache_misses for s in backend_stats.values())
+        aggregate["cache_hits_total"] = hits
+        aggregate["cache_misses_total"] = misses
+        aggregate["cache_bypass_total"] = sum(
+            s.n_cache_bypass for s in backend_stats.values()
+        )
+        aggregate["cache_hit_rate"] = hits / (hits + misses) if hits + misses else 0.0
         return CampaignResult(
             runs=runs,
-            aggregate=self._aggregate(runs),
+            aggregate=aggregate,
             backend_stats=backend_stats,
             wall_s=time.perf_counter() - t0,
         )

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Generator, List, Optional
+from typing import Callable, Generator, List, Optional
 
 import random
 
@@ -49,6 +49,14 @@ from .policy import AWARENESS_POLICY, Focus, HeuristicPolicy, make_policy
 from .tdg import TaskGraph, workload_of
 
 AWARENESS_LEVELS = ("sa", "task", "task_block", "farsi")
+
+# adaptive-pipeline speculation window: if the first SPEC_WINDOW speculative
+# batches all miss (zero spec hits), auto-disable speculation for the rest
+# of the run — a speculative batch costs real encode + device time, and a
+# 0%-hit-rate pipeline is pure overhead (the BENCH_simbackend regression
+# this guards: pipelined audio ran *slower* than non-pipelined with
+# n_spec_hits == 0)
+SPEC_WINDOW = 8
 
 
 @dataclasses.dataclass
@@ -110,6 +118,10 @@ class ExplorationResult:
     pipelined: bool = False  # ran with the speculative dispatch pipeline
     n_spec_hits: int = 0  # speculative batches that became the next iteration
     n_sims_wasted: int = 0  # speculated evaluations discarded on accept
+    # the adaptive pipeline observed zero spec hits over its first
+    # SPEC_WINDOW speculative batches and shut speculation off for the rest
+    # of the run (pipeline=None only; forced pipeline=True never disables)
+    spec_auto_disabled: bool = False
 
     def iterations_to_budget(self, cap: Optional[int] = None) -> float:
         """Iterations this run needed to reach budget — the policy-comparison
@@ -152,6 +164,13 @@ class Explorer:
         else:
             self._pipeline = "always" if config.pipeline else "off"
         self._p_rej = 0.0  # EW estimate of the rejection rate (adaptive gate)
+        self._spec_tries = 0  # speculative batches actually dispatched
+        self._spec_dead = False  # adaptive auto-disable latched (0-hit window)
+        # session-yield point (serve.Session): called whenever an accepted
+        # move improves the best-so-far design, with a small event dict —
+        # accept-path state is never rolled back by speculation, so every
+        # event is a committed improvement
+        self.on_improve: Optional[Callable[[dict], None]] = None
 
     # ---- neighbour generation --------------------------------------------
     def _make_neighbors(
@@ -331,6 +350,21 @@ class Explorer:
                 cur_view, cur_dist = view, dist_after
                 if cur_dist.city_block() < best_dist.city_block():
                     best_handle, best_dist, best_stale = handles[j], cur_dist, True
+                    if self.on_improve is not None:
+                        # streamed best-design-so-far event: scalars only
+                        # (the batch is already forced by the fitness read;
+                        # no decode) — the full design decode stays deferred
+                        # to exploration end
+                        self.on_improve(
+                            {
+                                "iteration": sel.it,
+                                "distance": best_dist.city_block(),
+                                "fitness": best_dist.fitness(self.cfg.alpha_met),
+                                "move": move,
+                                "converged": best_dist.converged(),
+                                **handles[j].scalars(),
+                            }
+                        )
             history.append(
                 {
                     "iteration": sel.it,
@@ -362,13 +396,20 @@ class Explorer:
             # speculates when rejection is the likely outcome — a wasted
             # speculative batch costs real encode + device time, so in
             # accept-heavy (early, improving) phases the serial path wins.
-            speculate = mode == "always" or (mode == "adaptive" and self._p_rej >= 0.5)
+            # the zero-value guard: an adaptive pipeline whose first
+            # SPEC_WINDOW speculative batches all missed latches _spec_dead
+            # and stops speculating — rejection-rate alone said "speculate"
+            # while the observed hit rate said the batches were pure waste
+            speculate = mode == "always" or (
+                mode == "adaptive" and not self._spec_dead and self._p_rej >= 0.5
+            )
             spec = spec_handles = None
             if speculate:
                 ck = (self.rng.getstate(), pol.checkpoint())
                 pol.mark_failed(sel.focus.task, sel.focus.block)
                 spec = select_from(sel.it + 1)
                 if spec is not None:
+                    self._spec_tries += 1
                     spec_handles = yield spec.neighbors  # in flight behind batch i
 
             accepted = resolve(sel, handles, u)  # first host pull forces batch i
@@ -391,6 +432,11 @@ class Explorer:
                     self.n_sims_wasted += len(spec.neighbors)
             elif not accepted:
                 pol.mark_failed(sel.focus.task, sel.focus.block)
+            if (
+                mode == "adaptive" and not self._spec_dead
+                and self.n_spec_hits == 0 and self._spec_tries >= SPEC_WINDOW
+            ):
+                self._spec_dead = True
             sel = select_from(sel.it + 1)
             if sel is None:
                 break
@@ -420,6 +466,7 @@ class Explorer:
             pipelined=self._pipeline != "off",
             n_spec_hits=self.n_spec_hits,
             n_sims_wasted=self.n_sims_wasted,
+            spec_auto_disabled=self._spec_dead,
         )
 
     def run(self, initial: Optional[Design] = None) -> ExplorationResult:

@@ -1,0 +1,43 @@
+"""Serve layer: multi-tenant continuous-batching DSE on one shared backend.
+
+FARSI's value proposition is *agile* exploration; the production north star
+is a service, not a script. This package hosts many concurrent exploration
+**sessions** (each a policy-driven :class:`~repro.core.explorer.Explorer`
+coroutine) on top of one shared :class:`~repro.core.backend.JaxBatchedBackend`
+per workload:
+
+  ``DesignStore``               — content-addressed evaluation cache keyed on
+                                  ``hash(EncodedDesign leaves, workload,
+                                  budget)`` so identical evaluations resolve
+                                  to memoized device rows without a dispatch.
+  ``Session`` / ``SessionRequest`` — one exploration request wrapped around
+                                  the ``Explorer.run_steps`` coroutine, with
+                                  streamed best-design events.
+  ``ContinuousBatchScheduler``  — generalizes ``Campaign``'s lockstep
+                                  cross-batching: sessions join and leave
+                                  mid-flight; every tick packs all ready
+                                  candidates into the shape-bucketed device
+                                  batches.
+  ``DseService``                — the front door: submit sessions, drive
+                                  ticks, read streamed events and final
+                                  results, and aggregate service stats.
+
+See docs/SERVING.md for the architecture and the streaming/caching
+contracts.
+"""
+from .scheduler import ContinuousBatchScheduler
+from .service import DseService, ServiceStats, SessionHandle
+from .session import BestEvent, Session, SessionRequest
+from .store import DesignStore, StoreStats
+
+__all__ = [
+    "BestEvent",
+    "ContinuousBatchScheduler",
+    "DesignStore",
+    "DseService",
+    "ServiceStats",
+    "Session",
+    "SessionHandle",
+    "SessionRequest",
+    "StoreStats",
+]

@@ -1,0 +1,135 @@
+"""Continuous batching over shared shape-bucketed device dispatches.
+
+``Campaign`` cross-batches a *fixed* grid of explorations in lockstep; the
+scheduler generalizes that to a serve loop: sessions **join and leave
+mid-flight**, and each :meth:`tick` packs the pending candidate batches of
+every currently-live session — grouped per shared backend (one per distinct
+task graph, exactly like Campaign) — into one ``evaluate_candidates``
+dispatch per group. The dispatch is non-blocking, per-session handle slices
+go back through ``Session.resume``, sessions that finish retire immediately,
+and whatever was admitted between ticks rides the next pack.
+
+Per-row results are independent of batch composition (each candidate owns
+its device row), so co-batching never changes any session's search — the
+determinism that lets a mid-flight joiner converge exactly as if it ran
+alone, and lets ``Campaign`` route its lockstep sweeps through this
+scheduler without changing a single aggregate.
+
+An attached :class:`~repro.serve.store.DesignStore` turns the pack into a
+dedupe point as well: identical candidates across sessions resolve to one
+device row (same tick) or to a memoized row (earlier tick — even from a
+session that already left).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Union
+
+from ..core.backend import BackendStats, Candidate, SimulatorBackend, make_backend
+from ..core.database import HardwareDatabase
+from ..core.tdg import TaskGraph
+from .session import RUNNING, Session
+from .store import DesignStore
+
+BackendSpec = Union[str, Callable[[TaskGraph, HardwareDatabase], SimulatorBackend]]
+
+
+class ContinuousBatchScheduler:
+    """Owns the shared backends and the live-session set; drives ticks."""
+
+    def __init__(
+        self,
+        db: HardwareDatabase,
+        backend: BackendSpec = "jax",
+        store: Optional[DesignStore] = None,
+    ) -> None:
+        self.db = db
+        self.store = store
+        self._backend_spec = backend
+        self._backends: Dict[int, SimulatorBackend] = {}  # id(tdg) -> backend
+        self._live: List[Session] = []  # admission order = packing order
+        self.n_ticks = 0
+
+    # ---- backends --------------------------------------------------------
+    def backend_for(self, tdg: TaskGraph) -> SimulatorBackend:
+        """One shared backend per distinct task-graph object (the encoding
+        is workload-specific). A store, when configured, is attached to
+        every backend that supports it — the store itself is shared, so
+        dedupe crosses workload boundaries by digest namespace only."""
+        key = id(tdg)
+        if key not in self._backends:
+            if callable(self._backend_spec):
+                backend = self._backend_spec(tdg, self.db)
+            else:
+                backend = make_backend(self._backend_spec, tdg, self.db)
+            attach = getattr(backend, "attach_store", None)
+            if self.store is not None and attach is not None:
+                attach(self.store)
+            self._backends[key] = backend
+        return self._backends[key]
+
+    def backends(self) -> Dict[int, SimulatorBackend]:
+        return self._backends
+
+    def backend_stats(self) -> Dict[int, BackendStats]:
+        return {k: b.stats() for k, b in self._backends.items()}
+
+    # ---- session lifecycle ----------------------------------------------
+    @property
+    def n_live(self) -> int:
+        return len(self._live)
+
+    def admit(self, session: Session) -> None:
+        """Start a session and enroll it for the next tick — the mid-flight
+        join point. Safe at any moment between ticks."""
+        session.start()
+        if session.state == RUNNING:
+            self._live.append(session)
+
+    def tick(self) -> List[Session]:
+        """One scheduler round: pack all live sessions' pending candidates
+        per backend group, dispatch once per group, resume every member with
+        its handle slice. Returns the sessions that completed this tick.
+
+        The shared-dispatch wall is attributed to sessions proportionally to
+        their candidate counts (the same accounting the lockstep Campaign
+        loop reported as ``sim_wall_s``)."""
+        completed: List[Session] = []
+        if not self._live:
+            return completed
+        self.n_ticks += 1
+        groups: Dict[int, List[Session]] = {}
+        for s in self._live:
+            groups.setdefault(id(s.request.tdg), []).append(s)
+        for members in groups.values():
+            backend = self.backend_for(members[0].request.tdg)
+            cands: List[Candidate] = [c for s in members for c in s.pending]
+            t0 = time.perf_counter()
+            handles = backend.evaluate_candidates(cands)
+            dispatch_s = time.perf_counter() - t0
+            offset = 0
+            for s in members:
+                k = len(s.pending)
+                sub = handles[offset:offset + k]
+                offset += k
+                s.sim_wall_s += dispatch_s * k / max(len(cands), 1)
+                if s.resume(sub):
+                    completed.append(s)
+                    self._live.remove(s)
+        return completed
+
+    def run_until_idle(self, max_ticks: Optional[int] = None) -> List[Session]:
+        """Tick until no session is live (or ``max_ticks`` elapsed);
+        returns everything that completed along the way."""
+        done: List[Session] = []
+        while self._live and (max_ticks is None or self.n_ticks < max_ticks):
+            done.extend(self.tick())
+        return done
+
+    def flush(self) -> None:
+        """Drain every shared backend's in-flight dispatches (abandoned
+        speculative batches must not outlive the serve loop)."""
+        for backend in self._backends.values():
+            flush = getattr(backend, "flush", None)
+            if flush is not None:
+                flush()

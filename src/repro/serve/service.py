@@ -1,0 +1,221 @@
+"""`DseService`: the serve-layer front door.
+
+One service hosts many concurrent, multi-tenant exploration sessions over
+shared per-workload backends and one content-addressed
+:class:`~repro.serve.store.DesignStore`. Sessions are submitted at any time
+(`submit` between ticks is the mid-flight join), priced together by the
+:class:`~repro.serve.scheduler.ContinuousBatchScheduler`, stream
+best-design-so-far events while running, and deliver a final decoded
+winner in their ``ExplorationResult``.
+
+Typical use::
+
+    svc = DseService(db, backend="jax")
+    h1 = svc.submit("alice.audio", g_audio, budget, ExplorerConfig(seed=1))
+    h2 = svc.submit("bob.audio", g_audio, budget, ExplorerConfig(seed=2))
+    svc.run()                      # tick until every session completes
+    print(h1.result.best_distance.city_block(), svc.stats().cache_hit_rate)
+
+`DseService.step()` exposes single-tick control for callers interleaving
+their own admission logic (arrival traces, latency injection, backpressure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from ..core.backend import BackendStats
+from ..core.budgets import Budget
+from ..core.design import Design
+from ..core.explorer import Explorer, ExplorerConfig
+from ..core.database import HardwareDatabase
+from ..core.tdg import TaskGraph
+from .scheduler import BackendSpec, ContinuousBatchScheduler
+from .session import BestEvent, Session, SessionRequest
+from .store import DesignStore
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Fleet-level serve accounting, snapshotted by :meth:`DseService.stats`."""
+
+    n_sessions: int
+    n_done: int
+    n_ticks: int
+    wall_s: float  # total time inside tick-driving calls (run/step)
+    n_evals: int  # candidate evaluations submitted across all backends
+    n_fallback: int  # scalar-path evaluations (0 in the array-native regime)
+    cache_hits: int
+    cache_misses: int
+    cache_bypasses: int
+    cache_evictions: int
+    session_latency_s: List[float]  # completed sessions, admission → done
+
+    @property
+    def cache_hit_rate(self) -> float:
+        n = self.cache_hits + self.cache_misses
+        return self.cache_hits / n if n else 0.0
+
+    def latency_percentile(self, p: float) -> float:
+        """p in [0, 100] over completed-session latencies (0.0 when none)."""
+        lats = sorted(self.session_latency_s)
+        if not lats:
+            return 0.0
+        k = min(len(lats) - 1, max(0, round(p / 100.0 * (len(lats) - 1))))
+        return lats[k]
+
+    @property
+    def evals_per_s(self) -> float:
+        return self.n_evals / self.wall_s if self.wall_s > 0 else 0.0
+
+
+class SessionHandle:
+    """User-facing view of one submitted session: poll ``done``, read the
+    streamed ``events``, and collect the final ``result`` after completion."""
+
+    def __init__(self, session: Session) -> None:
+        self._session = session
+
+    @property
+    def name(self) -> str:
+        return self._session.name
+
+    @property
+    def done(self) -> bool:
+        return self._session.done
+
+    @property
+    def events(self) -> List[BestEvent]:
+        return self._session.events
+
+    @property
+    def latency_s(self) -> float:
+        return self._session.latency_s
+
+    @property
+    def result(self):
+        if self._session.result is None:
+            raise RuntimeError(
+                f"session {self.name!r} has not completed (state="
+                f"{self._session.state}); drive DseService.run()/step() first"
+            )
+        return self._session.result
+
+
+class DseService:
+    """Multi-session DSE serving over one continuous-batching scheduler.
+
+    The evaluation cache defaults ON (a fresh :class:`DesignStore` per
+    service); pass ``store=`` to share one across services or
+    ``cache=False`` for the uncached baseline. ``backend`` accepts the
+    ``make_backend`` registry names or a factory, exactly like ``Campaign``.
+    """
+
+    def __init__(
+        self,
+        db: HardwareDatabase,
+        backend: BackendSpec = "jax",
+        store: Optional[DesignStore] = None,
+        cache: bool = True,
+    ) -> None:
+        self.db = db
+        self.store = store if store is not None else (DesignStore() if cache else None)
+        self.scheduler = ContinuousBatchScheduler(db, backend, store=self.store)
+        self._sessions: Dict[str, Session] = {}  # admission order preserved
+        self._wall_s = 0.0
+
+    # ---- admission -------------------------------------------------------
+    def submit(
+        self,
+        name: str,
+        tdg: TaskGraph,
+        budget: Budget,
+        config: Optional[ExplorerConfig] = None,
+        initial: Optional[Design] = None,
+        on_event=None,  # Optional[Callable[[BestEvent], None]]
+    ) -> SessionHandle:
+        """Admit one exploration session; it joins the next scheduler tick
+        (mid-flight joins are the normal case, not an exception).
+        ``on_event`` streams the session's BestEvents as they commit."""
+        return self.submit_request(
+            SessionRequest(name, tdg, budget, config or ExplorerConfig(), initial),
+            on_event=on_event,
+        )
+
+    def submit_request(self, request: SessionRequest, on_event=None) -> SessionHandle:
+        if request.name in self._sessions:
+            raise ValueError(f"duplicate session name {request.name!r}")
+        explorer = Explorer(
+            request.tdg, self.db, request.budget, request.config,
+            backend=self.scheduler.backend_for(request.tdg),
+        )
+        session = Session(request, explorer)
+        session.on_event = on_event
+        self._sessions[request.name] = session
+        self.scheduler.admit(session)
+        return SessionHandle(session)
+
+    # ---- drive -----------------------------------------------------------
+    def step(self) -> List[SessionHandle]:
+        """One scheduler tick; returns handles of sessions that completed."""
+        t0 = time.perf_counter()
+        done = self.scheduler.tick()
+        self._wall_s += time.perf_counter() - t0
+        return [SessionHandle(s) for s in done]
+
+    def run(self, max_ticks: Optional[int] = None) -> ServiceStats:
+        """Tick until every admitted session completes (or ``max_ticks``),
+        drain the backends, and return the service stats snapshot."""
+        t0 = time.perf_counter()
+        self.scheduler.run_until_idle(max_ticks)
+        self.scheduler.flush()
+        self._wall_s += time.perf_counter() - t0
+        return self.stats()
+
+    # ---- observability ---------------------------------------------------
+    @property
+    def n_live(self) -> int:
+        return self.scheduler.n_live
+
+    def backend_stats(self) -> Dict[str, BackendStats]:
+        """Per shared backend, labeled by workload (graph) name — distinct
+        graph objects sharing a name get ``#n`` suffixes."""
+        labels: Dict[int, str] = {}
+        counts: Dict[str, int] = {}
+        for s in self._sessions.values():
+            key = id(s.request.tdg)
+            if key in labels:
+                continue
+            n = counts.get(s.request.tdg.name, 0)
+            labels[key] = s.request.tdg.name if n == 0 else f"{s.request.tdg.name}#{n}"
+            counts[s.request.tdg.name] = n + 1
+        return {
+            labels.get(k, str(k)): b.stats()
+            for k, b in self.scheduler.backends().items()
+        }
+
+    def stats(self) -> ServiceStats:
+        bstats = list(self.scheduler.backend_stats().values())
+        sstats = self.store.stats if self.store is not None else None
+        return ServiceStats(
+            n_sessions=len(self._sessions),
+            n_done=sum(1 for s in self._sessions.values() if s.done),
+            n_ticks=self.scheduler.n_ticks,
+            wall_s=self._wall_s,
+            n_evals=sum(b.n_sims for b in bstats),
+            n_fallback=sum(b.n_fallback for b in bstats),
+            cache_hits=sstats.hits if sstats else 0,
+            cache_misses=sstats.misses if sstats else 0,
+            cache_bypasses=sstats.bypasses if sstats else 0,
+            cache_evictions=sstats.evictions if sstats else 0,
+            session_latency_s=[
+                s.latency_s for s in self._sessions.values() if s.done
+            ],
+        )
+
+    def results(self) -> Dict[str, object]:
+        """Completed sessions' ExplorationResults, in admission order."""
+        return {
+            name: s.result for name, s in self._sessions.items() if s.done
+        }

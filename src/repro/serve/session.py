@@ -1,0 +1,148 @@
+"""One multi-tenant exploration session around the Explorer coroutine.
+
+A :class:`Session` owns one :meth:`~repro.core.explorer.Explorer.run_steps`
+generator and the bookkeeping the scheduler needs to co-batch it with
+strangers: the pending candidate batch, lifecycle state, streamed
+best-design events, and per-session latency/throughput accounting. The
+session never talks to a backend — the scheduler prices its pending batch
+(packed with every other live session's) and hands the matching
+``SimHandle`` slice back through :meth:`resume`.
+
+Streaming contract: every committed best-so-far improvement fires a
+:class:`BestEvent` (wired to ``Explorer.on_improve`` — scalar columns only,
+no decode); the final decoded winner arrives once, in the
+``ExplorationResult`` captured at ``StopIteration``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+from ..core.backend import Candidate, SimHandle
+from ..core.budgets import Budget
+from ..core.design import Design
+from ..core.explorer import ExplorationResult, Explorer, ExplorerConfig
+from ..core.tdg import TaskGraph
+
+PENDING = "pending"
+RUNNING = "running"
+DONE = "done"
+
+
+@dataclasses.dataclass
+class SessionRequest:
+    """One exploration request, shaped like ``campaign.RunSpec`` — the serve
+    layer's admission unit."""
+
+    name: str
+    tdg: TaskGraph
+    budget: Budget
+    config: ExplorerConfig = dataclasses.field(default_factory=ExplorerConfig)
+    initial: Optional[Design] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class BestEvent:
+    """One streamed best-design-so-far improvement (scalars only — the full
+    decode is paid once, for the final winner)."""
+
+    session: str
+    iteration: int
+    distance: float
+    fitness: float
+    move: str
+    converged: bool
+    latency_s: float
+    power_w: float
+    area_mm2: float
+    wall_s: float  # seconds since the session was admitted
+
+
+class Session:
+    """Lifecycle: ``PENDING`` (declared) → ``RUNNING`` (``start`` primed the
+    coroutine; ``pending`` holds the batch awaiting pricing) → ``DONE``
+    (``result`` captured). Joining mid-flight is just calling ``start``
+    between two scheduler ticks — co-batching never perturbs a session's
+    own search (per-row results are independent of batch composition, which
+    is what makes a late joiner converge exactly as if it ran alone)."""
+
+    def __init__(self, request: SessionRequest, explorer: Explorer) -> None:
+        self.request = request
+        self.explorer = explorer
+        self.state = PENDING
+        self.pending: List[Candidate] = []
+        self.result: Optional[ExplorationResult] = None
+        self.events: List[BestEvent] = []
+        self.on_event: Optional[Callable[[BestEvent], None]] = None
+        self.sim_wall_s = 0.0  # attributed share of shared-dispatch wall
+        self.n_ticks = 0
+        self.admitted_at: Optional[float] = None
+        self.done_at: Optional[float] = None
+        explorer.on_improve = self._improved
+
+    @property
+    def name(self) -> str:
+        return self.request.name
+
+    @property
+    def done(self) -> bool:
+        return self.state == DONE
+
+    @property
+    def latency_s(self) -> float:
+        """Admission → completion wall clock (the serve latency metric);
+        admission → now while still running."""
+        if self.admitted_at is None:
+            return 0.0
+        end = self.done_at if self.done_at is not None else time.perf_counter()
+        return end - self.admitted_at
+
+    def _improved(self, ev: dict) -> None:
+        event = BestEvent(
+            session=self.request.name,
+            iteration=ev["iteration"],
+            distance=ev["distance"],
+            fitness=ev["fitness"],
+            move=ev["move"],
+            converged=ev["converged"],
+            latency_s=ev["latency_s"],
+            power_w=ev["power_w"],
+            area_mm2=ev["area_mm2"],
+            wall_s=time.perf_counter() - (self.admitted_at or time.perf_counter()),
+        )
+        self.events.append(event)
+        if self.on_event is not None:
+            self.on_event(event)
+
+    # ---- scheduler interface --------------------------------------------
+    def start(self) -> None:
+        """Prime the coroutine: after this the session is RUNNING and
+        ``pending`` holds its first candidate batch (the initial design)."""
+        assert self.state == PENDING, f"session {self.name!r} already started"
+        self.admitted_at = time.perf_counter()
+        self._gen = self.explorer.run_steps(self.request.initial)
+        try:
+            self.pending = next(self._gen)
+            self.state = RUNNING
+        except StopIteration as stop:  # pragma: no cover — degenerate search
+            self._finish(stop.value)
+
+    def resume(self, handles: Sequence[SimHandle]) -> bool:
+        """Feed the priced handles for the current ``pending`` batch; returns
+        True when the session just completed."""
+        assert self.state == RUNNING, self.state
+        self.n_ticks += 1
+        try:
+            self.pending = self._gen.send(list(handles))
+            return False
+        except StopIteration as stop:
+            self._finish(stop.value)
+            return True
+
+    def _finish(self, result: ExplorationResult) -> None:
+        result.sim_wall_s = self.sim_wall_s
+        self.result = result
+        self.pending = []
+        self.state = DONE
+        self.done_at = time.perf_counter()

@@ -1,0 +1,199 @@
+"""Content-addressed design-evaluation cache (the serve layer's database).
+
+``core/database.py`` hashes task *names* into stable units
+(``_stable_unit``); this module generalizes the idiom to whole evaluations:
+the cache key is a SHA-256 digest over the **content** of a candidate's
+flat :class:`~repro.core.phase_sim_jax.EncodedDesign` leaves (every array
+the device row is filled from, plus ``noc_pj``), the workload's encoded
+tensors, and the Eq.-7 budget/alpha the dispatch would score against. Two
+candidates with identical digests produce bit-identical device rows, so the
+second one can be served from the first one's memoized output row without a
+dispatch — across sessions, across users, across time.
+
+The store deliberately knows nothing about JAX or the backend beyond two
+duck-typed facts:
+
+  * a *pending* entry holds ``(batch, j)`` where ``batch.host()`` yields the
+    dispatch's host-side column dict (the backend registers every dispatched
+    row right after submission — nothing is forced early);
+  * a *materialized* entry is that dict sliced to one row (leading axis kept
+    at 1 so a cached row quacks exactly like a one-row batch).
+
+Entries materialize lazily on first hit — the producing batch has almost
+always been consumed by then (any handle read forces it), so materialization
+is a few row copies, after which the batch reference is dropped and the
+entry is compact. Eviction is LRU under a configurable ``capacity`` bound.
+
+Hit/miss/bypass accounting lives twice on purpose: per backend in
+``BackendStats`` (``n_cache_hits``/``n_cache_misses``/``n_cache_bypass``)
+and aggregated here across every backend sharing the store — the service's
+fleet-level hit rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+# EncodedDesign leaves that fill a device row (phase_sim_jax.ENCODED_FIELDS
+# plus the noc_pj scalar fill_row writes separately). Imported lazily so the
+# store stays importable without pulling jax at module-import time.
+_FIELDS: Optional[Tuple[str, ...]] = None
+
+
+def _fields() -> Tuple[str, ...]:
+    global _FIELDS
+    if _FIELDS is None:
+        from ..core.phase_sim_jax import ENCODED_FIELDS
+
+        _FIELDS = tuple(ENCODED_FIELDS) + ("noc_pj",)
+    return _FIELDS
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Fleet-level cache accounting (across every backend sharing the store).
+
+    ``hits`` counts both store hits (served from a memoized row of an
+    earlier dispatch) and same-dispatch aliases (two sessions submitting the
+    identical candidate in one scheduler tick share one device row);
+    ``misses`` counts rows actually dispatched and registered; ``bypasses``
+    counts candidates that skipped the cache entirely (scalar-fallback
+    pricing has no device row to memoize). ``evictions`` counts LRU drops."""
+
+    hits: int = 0
+    misses: int = 0
+    bypasses: int = 0
+    evictions: int = 0
+
+    def hit_rate(self) -> float:
+        """Hits over cacheable lookups (bypasses excluded)."""
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class _Entry:
+    """One cached evaluation: pending ``(batch, j)`` until first hit, then a
+    compact one-row column dict."""
+
+    __slots__ = ("batch", "j", "row")
+
+    def __init__(self, batch, j: int) -> None:
+        self.batch = batch
+        self.j = j
+        self.row: Optional[Dict[str, np.ndarray]] = None
+
+    def materialize(self) -> Dict[str, np.ndarray]:
+        if self.row is None:
+            host = self.batch.host()
+            j = self.j
+            # keep the leading axis at length 1: a cached row is shaped like
+            # a one-row batch, so the backend's handle machinery reads it
+            # through the exact same code path as a fresh dispatch
+            self.row = {k: np.ascontiguousarray(v[j:j + 1]) for k, v in host.items()}
+            self.batch = None  # drop the producing batch; entry is compact
+        return self.row
+
+
+class DesignStore:
+    """LRU content-addressed map: evaluation digest → memoized device row.
+
+    One store may back any number of backends/workloads concurrently — the
+    workload digest is part of every key, so entries never collide across
+    task graphs. Thread-unsafe by design (the service is a single-threaded
+    tick loop)."""
+
+    def __init__(self, capacity: int = 1 << 16) -> None:
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.stats = StoreStats()
+        self._entries: "OrderedDict[bytes, _Entry]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ---- digests ---------------------------------------------------------
+    @staticmethod
+    def workload_digest(enc) -> bytes:
+        """Content digest of an ``EncodedWorkload``: the static per-task
+        tensors plus the task/workload name order (names pin the row layout
+        the finish/bneck columns are decoded through)."""
+        h = hashlib.sha256(b"workload")
+        for name in ("work_ops", "read_bytes", "write_bytes", "burst", "llp",
+                     "parent_mask", "wl_id"):
+            arr = np.asarray(getattr(enc, name))
+            h.update(name.encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+        h.update("\x00".join(enc.names).encode())
+        h.update("\x00".join(enc.wl_names).encode())
+        return h.digest()
+
+    @staticmethod
+    def budget_digest(budget, alpha: float) -> bytes:
+        """Digest of the Eq.-7 scoring inputs a dispatch row carries
+        (``fill_budget``): per-workload latency budgets, power/area rails,
+        and the dampening alpha. ``None`` (neutral scoring) is its own key."""
+        h = hashlib.sha256(b"budget")
+        if budget is None:
+            h.update(b"none")
+        else:
+            for w in sorted(budget.latency_s):
+                h.update(w.encode())
+                h.update(np.float64(budget.latency_s[w]).tobytes())
+            h.update(np.float64(budget.power_w).tobytes())
+            h.update(np.float64(budget.area_mm2).tobytes())
+        h.update(np.float64(alpha).tobytes())
+        return h.digest()
+
+    @staticmethod
+    def key_of(ed, wl_digest: bytes, budget_digest: bytes) -> bytes:
+        """The content address of one evaluation: every EncodedDesign leaf
+        the device row is filled from. Block *names* (the slot dicts) are
+        deliberately excluded — two designs that differ only in naming
+        price identically, and name resolution happens at decode time
+        against the consumer's own design."""
+        h = hashlib.sha256(wl_digest)
+        h.update(budget_digest)
+        for f in _fields():
+            arr = np.asarray(getattr(ed, f))
+            h.update(f.encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+        return h.digest()
+
+    # ---- cache operations ------------------------------------------------
+    def lookup(self, key: bytes) -> Optional[Dict[str, np.ndarray]]:
+        """The memoized one-row column dict for ``key``, or None. A hit
+        refreshes LRU recency and is counted; misses are only counted when
+        the backend registers the dispatched row (``insert``)."""
+        entry = self._entries.get(key)
+        if entry is None:
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return entry.materialize()
+
+    def insert(self, key: bytes, batch, j: int) -> None:
+        """Register row ``j`` of a just-submitted dispatch under ``key``
+        (counted as the miss that produced it). Nothing is forced: the entry
+        stays pending until its first hit materializes it."""
+        self.stats.misses += 1
+        self._entries[key] = _Entry(batch, j)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    def note_alias_hit(self) -> None:
+        """Count a same-dispatch alias: a duplicate candidate inside one
+        batch shares the first occurrence's device row (no store entry is
+        involved, but it is a dedupe all the same)."""
+        self.stats.hits += 1
+
+    def note_bypass(self) -> None:
+        self.stats.bypasses += 1

@@ -1,0 +1,235 @@
+"""Serve layer: content-addressed DesignStore semantics (bit-identical hits,
+LRU eviction), continuous-batching determinism (mid-flight joins), DseService
+multi-session runs, Campaign-through-scheduler equivalence, and the
+speculation auto-disable latch."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Campaign,
+    Explorer,
+    ExplorerConfig,
+    HardwareDatabase,
+    JaxBatchedBackend,
+    audio,
+    calibrated_budget,
+    edge_detection,
+    random_single_noc_designs,
+)
+from repro.core.backend import Candidate
+from repro.core.explorer import SPEC_WINDOW
+from repro.serve import DesignStore, DseService
+
+
+@pytest.fixture(scope="module")
+def db():
+    return HardwareDatabase()
+
+
+@pytest.fixture(scope="module")
+def g(db):
+    return edge_detection()
+
+
+@pytest.fixture(scope="module")
+def bud(db):
+    return calibrated_budget(db)
+
+
+def _force(handles):
+    for h in handles:
+        h.fitness  # one stacked device_get per batch
+
+
+# ---- DesignStore ---------------------------------------------------------
+def test_cache_hit_bit_identical(db, g, bud):
+    """A store hit serves the memoized row of an earlier identical dispatch:
+    fitness and PPA scalars are bit-identical floats, and no device rows are
+    dispatched for a fully-hitting batch."""
+    # seed 3 yields six content-DISTINCT designs (random designs can collide
+    # in encoded content, which would — correctly — alias within the batch)
+    designs = random_single_noc_designs(g, 6, seed=3)
+    store = DesignStore()
+    jb = JaxBatchedBackend(g, db)
+    jb.attach_store(store)
+
+    first = jb.evaluate_candidates([Candidate.of_design(d, bud) for d in designs])
+    _force(first)
+    assert store.stats.misses == 6 and store.stats.hits == 0
+
+    again = jb.evaluate_candidates([Candidate.of_design(d, bud) for d in designs])
+    s = jb.stats()
+    assert s.n_cache_hits == 6 and store.stats.hits == 6
+    assert store.stats.misses == 6  # nothing new dispatched
+    for a, b in zip(first, again):
+        assert b.fitness == a.fitness  # bit-identical, not approx
+        assert b.scalars() == a.scalars()
+
+
+def test_within_batch_alias_dedupes(db, g, bud):
+    """Two identical candidates inside ONE dispatch share a single device
+    row (the store has no entry yet at lookup time — the batch-local alias
+    map is what dedupes co-batched replicas)."""
+    d = random_single_noc_designs(g, 1, seed=2)[0]
+    store = DesignStore()
+    jb = JaxBatchedBackend(g, db)
+    jb.attach_store(store)
+    got = jb.evaluate_candidates([Candidate.of_design(d, bud) for _ in range(3)])
+    assert store.stats.misses == 1 and store.stats.hits == 2
+    assert got[1].fitness == got[0].fitness == got[2].fitness
+
+
+def test_store_eviction_respects_capacity(db, g, bud):
+    """LRU eviction under a configurable capacity bound."""
+    with pytest.raises(ValueError):
+        DesignStore(capacity=0)
+    designs = random_single_noc_designs(g, 8, seed=3)
+    store = DesignStore(capacity=4)
+    jb = JaxBatchedBackend(g, db)
+    jb.attach_store(store)
+    _force(jb.evaluate_candidates([Candidate.of_design(d, bud) for d in designs]))
+    assert len(store) == 4
+    assert store.stats.evictions == 4 and store.stats.misses == 8
+    # the 4 survivors are the most recently inserted; the first 4 re-dispatch
+    again = jb.evaluate_candidates(
+        [Candidate.of_design(d, bud) for d in designs[4:]]
+    )
+    assert store.stats.hits == 4
+    assert jb.stats().n_cache_hits == 4
+    _force(again)
+
+
+def test_key_excludes_block_names(db, g, bud):
+    """Pure content addressing: renaming a block changes no array leaf, so
+    the digest — and therefore the cached row — is shared."""
+    from repro.core.phase_sim_jax import EncodedDesign, EncodedWorkload
+
+    d = random_single_noc_designs(g, 1, seed=4)[0]
+    enc = EncodedWorkload.of(g)
+    ed = EncodedDesign.of(d, g, db, enc)
+    wl = DesignStore.workload_digest(enc)
+    bd = DesignStore.budget_digest(bud, 0.05)
+    k1 = DesignStore.key_of(ed, wl, bd)
+    d.rename_block(d.pes()[0], "totally_new_name")
+    k2 = DesignStore.key_of(EncodedDesign.of(d, g, db, enc), wl, bd)
+    assert k1 == k2
+    # ...while a different budget (scoring input) must not collide
+    assert DesignStore.budget_digest(None, 0.05) != bd
+
+
+# ---- continuous batching -------------------------------------------------
+def test_midflight_join_matches_solo(db, g, bud):
+    """A session admitted mid-flight — co-batched with a stranger already
+    several ticks in — walks the exact accepted-move sequence (and final
+    distance) of the same config run alone: per-row results are independent
+    of batch composition, and cache hits are bit-identical."""
+    cfg = dict(seed=5, max_iterations=30, backend="jax")
+    solo = Explorer(g, db, bud, ExplorerConfig(**cfg)).run()
+    solo_seq = [(h["move"], h["accepted"]) for h in solo.history]
+
+    svc = DseService(db, backend="jax")
+    svc.submit("warm", g, bud, ExplorerConfig(seed=11, max_iterations=45, backend="jax"))
+    for _ in range(6):
+        svc.step()  # the stranger is mid-flight when the joiner arrives
+    joiner = svc.submit("joiner", g, bud, ExplorerConfig(**cfg))
+    svc.run()
+    got = joiner.result
+    assert [(h["move"], h["accepted"]) for h in got.history] == solo_seq
+    assert got.best_distance.city_block() == solo.best_distance.city_block()
+    assert got.iterations == solo.iterations
+
+
+def test_best_event_stream(db, g, bud):
+    """Streaming contract: every committed best-so-far improvement fires one
+    event, strictly improving; the final result is at least as good as the
+    last streamed event."""
+    svc = DseService(db, backend="jax")
+    h = svc.submit("s", g, bud, ExplorerConfig(seed=1, max_iterations=25, backend="jax"))
+    svc.run()
+    assert h.done and len(h.events) >= 1
+    dists = [e.distance for e in h.events]
+    assert all(b < a for a, b in zip(dists, dists[1:]))
+    assert h.result.best_distance.city_block() <= dists[-1] + 1e-12
+    e = h.events[-1]
+    assert e.session == "s" and e.latency_s > 0 and e.area_mm2 > 0
+
+
+def test_64_session_repeated_scenario_serve(db):
+    """The acceptance-criterion run: 64 sessions over a repeated-scenario mix
+    (16 distinct policy×seed configs × 4 replicas) complete on one service
+    with cache hit-rate > 0.3 and zero scalar fallbacks."""
+    g = audio()
+    bud = calibrated_budget(db)
+    svc = DseService(db, backend="jax")
+    handles = []
+    for rep in range(16):
+        for i, pol in enumerate(("farsi", "naive_sa", "bottleneck", "locality")):
+            handles.append(svc.submit(
+                f"r{rep}.{pol}",
+                g, bud,
+                ExplorerConfig(seed=rep % 4, policy=pol, max_iterations=12,
+                               backend="jax"),
+            ))
+    stats = svc.run()
+    assert stats.n_done == 64 and all(h.done for h in handles)
+    assert stats.n_fallback == 0
+    assert stats.cache_hit_rate > 0.3
+    assert stats.latency_percentile(95) >= stats.latency_percentile(50) > 0
+    # replica sessions (same policy, same seed) converge identically —
+    # bit-identical cache hits never perturb a session's own search
+    a, b = handles[0].result, handles[16].result  # r0.farsi / r4.farsi, seed 0
+    assert a.best_distance.city_block() == b.best_distance.city_block()
+
+
+def test_duplicate_session_name_rejected(db, g, bud):
+    svc = DseService(db, backend="jax")
+    svc.submit("same", g, bud, ExplorerConfig(seed=0, max_iterations=5, backend="jax"))
+    with pytest.raises(ValueError):
+        svc.submit("same", g, bud, ExplorerConfig(seed=1, max_iterations=5, backend="jax"))
+    svc.run()
+
+
+# ---- Campaign as a scheduler client --------------------------------------
+def test_campaign_equivalent_with_and_without_store(db, g, bud):
+    """Campaign.run() through the scheduler: attaching the evaluation cache
+    changes no run outcome (same converged runs, same iteration counts, same
+    distances) — it only removes duplicate device rows — and the aggregate
+    carries the cache counters."""
+    def grid(store):
+        camp = Campaign(db, backend="jax", store=store)
+        for s in range(3):
+            camp.add(f"ed.s{s}", g, bud,
+                     ExplorerConfig(seed=s, max_iterations=20, backend="jax"))
+        return camp.run()
+
+    plain = grid(None)
+    cached = grid(DesignStore())
+    assert plain.aggregate["cache_hits_total"] == 0
+    assert cached.aggregate["cache_hits_total"] > 0
+    assert 0.0 < cached.aggregate["cache_hit_rate"] <= 1.0
+    for name in plain.runs:
+        a, b = plain.runs[name], cached.runs[name]
+        assert a.iterations == b.iterations
+        assert a.converged == b.converged
+        assert a.best_distance.city_block() == b.best_distance.city_block()
+    assert plain.converged_runs() == cached.converged_runs()
+
+
+# ---- speculation auto-disable --------------------------------------------
+def test_spec_auto_disable_bounds_waste(db, g, bud):
+    """Adaptive speculation latches OFF after SPEC_WINDOW dispatched
+    speculative batches with zero hits, so a zero-value pipeline wastes a
+    bounded number of rows; forced pipeline=True never latches."""
+    cfg = ExplorerConfig(seed=0, max_iterations=120, backend="jax",
+                         policy="naive_sa", pipeline=None)
+    r = Explorer(g, db, bud, cfg).run()
+    assert isinstance(r.spec_auto_disabled, bool)
+    if r.spec_auto_disabled:
+        assert r.n_spec_hits == 0
+    if r.n_spec_hits == 0:
+        assert r.n_sims_wasted <= SPEC_WINDOW * cfg.neighbors_per_iter
+
+    forced = ExplorerConfig(seed=0, max_iterations=40, backend="jax",
+                            pipeline=True)
+    rf = Explorer(g, db, bud, forced).run()
+    assert rf.spec_auto_disabled is False
