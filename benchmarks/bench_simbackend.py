@@ -50,9 +50,13 @@ lands a speculative hit either latches the pipeline off
 (``spec_auto_disabled``) or wastes no rows, (e) the policy guard:
 ``FarsiPolicy`` reaches budget in no more iterations than ``NaiveSA`` on
 the audio workload, the shared policy backend staying within the same
-jit-cache footprint, and (f) the serve guard: 8 co-batched sessions
+jit-cache footprint, (f) the serve guard: 8 co-batched sessions
 sustain ≥ 0.7x the single-session *aggregate* throughput and the
-repeated-scenario mix hits the cache.
+repeated-scenario mix hits the cache, and (g) the degraded-mode guard: a
+chaos run at a 5% injected dispatch-fault rate (seeded ``FaultInjector``)
+must complete ALL sessions with zero failures and ≥ 0.5x the fault-free
+aggregate throughput — retry/bisect/degrade overhead bounded, service
+never down.
 """
 from __future__ import annotations
 
@@ -78,7 +82,7 @@ from repro.core import (
     synthetic_family,
 )
 from repro.core.moves import MOVE_KINDS, MoveDelta, MoveSpec, apply_fork, apply_move
-from repro.serve import DseService
+from repro.serve import DseService, FaultInjector, RetryPolicy
 
 from .common import Row, timeit
 
@@ -442,11 +446,50 @@ def run(smoke: bool = False) -> List[Row]:
     else:
         # the acceptance-criterion run: 64 repeated-scenario sessions
         assert cstats.cache_hit_rate > 0.3, cstats
+    # ---- degraded-mode guard: chaos at 5% injected dispatch faults -------
+    # a fresh service (own compile, primed by a warm wave) runs the same
+    # 8-session mix with every shared dispatch vetoed at 5%: every fault
+    # triggers the bisect → retry → (rarely) degrade ladder, and the guard
+    # is that all sessions still complete with bounded throughput loss
+    fault_rate = 0.05
+    chaos_n = 8
+    # seed pinned so faults land in BOTH waves: the warm wave must compile
+    # the per-session bisect shape buckets (a fault-free warm wave would
+    # leave the measured wave paying those compiles), and the measured wave
+    # must actually exercise the bisect/retry ladder for the guard to mean
+    # anything
+    inj = FaultInjector(seed=1, dispatch_fault_rate=fault_rate)
+    svc_f = DseService(db, backend="jax", cache=False, faults=inj,
+                       retry=RetryPolicy(backoff_s=0.0))
+    _serve_wave(svc_f, g_serve, bud_serve, "fwarm", chaos_n, serve_iters)
+    chaos = _serve_wave(svc_f, g_serve, bud_serve, "fchaos", chaos_n, serve_iters)
+    fstats = svc_f.stats()
+    fault_ratio = (chaos["iters_per_s_aggregate"]
+                   / max(thr["8"]["iters_per_s_aggregate"], 1e-9))
+    assert fstats.n_failed == 0 and fstats.n_done == 2 * chaos_n, fstats
+    if smoke:
+        assert fault_ratio >= 0.5, (
+            f"degraded-mode regression: chaos throughput at "
+            f"{fault_ratio:.2f}x of fault-free (floor 0.5x) with "
+            f"{fstats.n_dispatch_faults} injected dispatch faults"
+        )
     payload["serve"] = {
         "workload": g_serve.name,
         "iterations_per_session": serve_iters,
         "throughput": thr,
         "batching_efficiency_8": eff8,
+        "faults": {
+            "dispatch_fault_rate": fault_rate,
+            "n_sessions": chaos_n,
+            "throughput_ratio_vs_fault_free": fault_ratio,
+            "iters_per_s_aggregate": chaos["iters_per_s_aggregate"],
+            "n_injected": len(inj.schedule),
+            "n_dispatch_faults": fstats.n_dispatch_faults,
+            "n_bisects": fstats.n_bisects,
+            "n_retries": fstats.n_retries,
+            "n_degraded": fstats.n_degraded,
+            "n_failed": fstats.n_failed,
+        },
         "cache": {
             "n_sessions": cache_sessions,
             "hit_rate": cstats.cache_hit_rate,
@@ -477,6 +520,17 @@ def run(smoke: bool = False) -> List[Row]:
             f"{cache_sessions} sessions hit-rate="
             f"{cstats.cache_hit_rate:.1%} ({cstats.cache_hits}h/"
             f"{cstats.cache_misses}m) fallback={cstats.n_fallback}",
+        )
+    )
+    rows.append(
+        (
+            "simbackend.serve.faults",
+            chaos["wall_s"] * 1e6,
+            f"chaos@{fault_rate:.0%} dispatch faults: "
+            f"{fault_ratio:.2f}x fault-free throughput, "
+            f"{fstats.n_dispatch_faults} faults/"
+            f"{fstats.n_retries} retries/{fstats.n_bisects} bisects/"
+            f"{fstats.n_degraded} degraded, 0 failed",
         )
     )
 
@@ -530,6 +584,7 @@ def run(smoke: bool = False) -> List[Row]:
             "pipeline depth>=2 + identical search + compiles<=4, "
             "zero-value speculation retires, "
             "policy convergence farsi<=naive_sa, "
-            "serve: 8-session aggregate>=0.7x single + cache hit-rate>0: OK",
+            "serve: 8-session aggregate>=0.7x single + cache hit-rate>0, "
+            "chaos@5% dispatch faults: all sessions complete >=0.5x: OK",
         ))
     return rows

@@ -86,6 +86,10 @@ class BackendStats:
     n_cache_hits: int = 0
     n_cache_misses: int = 0  # rows dispatched and registered in the store
     n_cache_bypass: int = 0
+    # rows whose device fitness came back NaN/Inf at the host scal pull —
+    # the serve layer's non-finite guard rejects these; a nonzero count on a
+    # healthy backend means a numerical escape worth investigating
+    n_nonfinite_rows: int = 0
     wall_s: float = 0.0  # total time inside evaluate()
     encode_s: float = 0.0  # incremental encoding into batch buffers
     dispatch_s: float = 0.0  # XLA dispatch submission
@@ -599,6 +603,13 @@ class _JaxBatch:
             host["noc_bneck_s"] = scal[:, f + 2 * s_busy:f + 2 * s_busy + n_noc]
             host["finish_s"] = raw["finish_s"]
             host["bneck_code"] = raw["bneck_code"]
+            # non-finite guard accounting: a NaN/Inf fitness row is the
+            # device-side symptom the serve layer must never accept (real
+            # rows only — the pow2 pad rows replicate row 0)
+            fit = host["fitness"][: len(self.eds)]
+            bad = int(np.size(fit) - np.count_nonzero(np.isfinite(fit)))
+            if bad:
+                self.stats.n_nonfinite_rows += bad
             self._host = host
             self.consumed = True
             self.stats.decode_s += time.perf_counter() - t0

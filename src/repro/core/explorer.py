@@ -33,6 +33,7 @@ occasionally accepts a worse design.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Generator, List, Optional
 
@@ -166,6 +167,12 @@ class Explorer:
         self._p_rej = 0.0  # EW estimate of the rejection rate (adaptive gate)
         self._spec_tries = 0  # speculative batches actually dispatched
         self._spec_dead = False  # adaptive auto-disable latched (0-hit window)
+        self.n_nonfinite = 0  # candidate rows rejected for NaN/Inf fitness
+        # crash-restart support (serve layer): when enabled, each committed
+        # loop top snapshots (rng state, policy checkpoint, iteration) so a
+        # dead coroutine can be rebuilt from its last committed accept
+        self.track_restart = False
+        self._restart_ck: Optional[tuple] = None
         # session-yield point (serve.Session): called whenever an accepted
         # move improves the best-so-far design, with a small event dict —
         # accept-path state is never rolled back by speculation, so every
@@ -258,6 +265,9 @@ class Explorer:
         t0 = time.perf_counter()
         cur = initial or Design.base(self.tdg)
         pol = self.policy
+        self._cur = cur  # committed design (mutated in place on accept only)
+        if self.track_restart:
+            self._restart_ck = (self.rng.getstate(), pol.checkpoint(), 0)
         adopt = getattr(self.backend, "adopt_encoding", None)
         self.n_sims += 1
         (h0,) = yield [Candidate.of_design(cur, self.budget, self.cfg.alpha_met)]
@@ -311,16 +321,24 @@ class Explorer:
             assert len(handles) == len(sel.neighbors)
             # stable argmin preserves the precedence order on ties; the
             # policy's move_penalty rides on the fitness column (0.0 — and
-            # bit-neutral — for every policy but dev_cost), so a system-
-            # growing move must buy more PPA than its development cost
-            fits = [
-                h.fitness + pol.move_penalty(cur, c)
-                for h, c in zip(handles, sel.neighbors)
-            ]
+            # bit-neutral — for every policy but dev_cost, so the guard below
+            # fires on the backend's fitness, not the penalty), so a system-
+            # growing move must buy more PPA than its development cost.
+            # Non-finite rows (a poisoned device row, a NaN that leaked
+            # through the scal pull) are clamped to +inf so they lose every
+            # ranking — argmin over NaN is undefined — and can never be
+            # accepted even when the whole batch is poisoned
+            fits = []
+            for h, c in zip(handles, sel.neighbors):
+                f = h.fitness + pol.move_penalty(cur, c)
+                if not math.isfinite(f):
+                    self.n_nonfinite += 1
+                    f = float("inf")
+                fits.append(f)
             j = min(range(len(fits)), key=fits.__getitem__)
             cand, move = sel.neighbors[j], sel.neighbors[j].spec.move
             d_before = cur_dist.fitness(self.cfg.alpha_met)
-            accept = pol.accept(sel.it, d_before, fits[j], u)
+            accept = math.isfinite(fits[j]) and pol.accept(sel.it, d_before, fits[j], u)
             dist_after = None
             if accept:
                 # telemetry view, not a decode: device bottleneck columns +
@@ -385,6 +403,12 @@ class Explorer:
             self.n_sims += len(sel.neighbors)
             handles = yield sel.neighbors
         while sel is not None:
+            # loop-top state is always the committed truth: cur only mutates
+            # on accept, and both speculation continuations land here with
+            # rng/policy either rolled back (miss) or confirmed real (hit) —
+            # the one safe point to snapshot for crash-restart
+            if self.track_restart:
+                self._restart_ck = (self.rng.getstate(), pol.checkpoint(), sel.it)
             # the SA accept draw: consumed unconditionally and BEFORE the
             # next iteration's selection draws, so the rng stream is the
             # same whether that selection happens now (speculation) or
@@ -468,6 +492,24 @@ class Explorer:
             n_sims_wasted=self.n_sims_wasted,
             spec_auto_disabled=self._spec_dead,
         )
+
+    def restart_state(self) -> Optional[dict]:
+        """Crash-restart snapshot (serve layer; ``track_restart`` must have
+        been on). Returns the last committed accept's ``design`` clone, the
+        ``rng``/``policy`` state to restore onto a fresh Explorer, and the
+        ``iteration`` the search had reached — or None if the coroutine died
+        before the tracking was primed."""
+        ck = self._restart_ck
+        cur = getattr(self, "_cur", None)
+        if ck is None or cur is None:
+            return None
+        rng_state, pol_ck, it = ck
+        return {
+            "design": cur.clone(rename=False),
+            "rng": rng_state,
+            "policy": pol_ck,
+            "iteration": it,
+        }
 
     def run(self, initial: Optional[Design] = None) -> ExplorationResult:
         """Drive :meth:`run_steps` against ``self.backend`` — exactly one

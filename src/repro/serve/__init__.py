@@ -22,9 +22,25 @@ per workload:
                                   ticks, read streamed events and final
                                   results, and aggregate service stats.
 
+The fault-tolerance layer (``faults``) adds a seeded chaos harness
+(``FaultInjector``), session-level isolation (a ``FAILED`` lifecycle state,
+bisect-and-redispatch of poisoned shared batches), retry/backoff +
+per-session deadlines, and graceful per-session degradation to the scalar
+backend; see the "Fault tolerance" section of docs/SERVING.md.
+
 See docs/SERVING.md for the architecture and the streaming/caching
 contracts.
 """
+from .faults import (
+    DeadlineExceeded,
+    DispatchFailed,
+    FaultInjector,
+    InjectedDispatchError,
+    InjectedSessionCrash,
+    InjectedFault,
+    RetryPolicy,
+    SessionFailed,
+)
 from .scheduler import ContinuousBatchScheduler
 from .service import DseService, ServiceStats, SessionHandle
 from .session import BestEvent, Session, SessionRequest
@@ -33,10 +49,18 @@ from .store import DesignStore, StoreStats
 __all__ = [
     "BestEvent",
     "ContinuousBatchScheduler",
+    "DeadlineExceeded",
     "DesignStore",
+    "DispatchFailed",
     "DseService",
+    "FaultInjector",
+    "InjectedDispatchError",
+    "InjectedFault",
+    "InjectedSessionCrash",
+    "RetryPolicy",
     "ServiceStats",
     "Session",
+    "SessionFailed",
     "SessionHandle",
     "SessionRequest",
     "StoreStats",

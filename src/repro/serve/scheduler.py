@@ -19,15 +19,55 @@ An attached :class:`~repro.serve.store.DesignStore` turns the pack into a
 dedupe point as well: identical candidates across sessions resolve to one
 device row (same tick) or to a memoized row (earlier tick — even from a
 session that already left).
+
+**Fault isolation.** A fault inside the tick costs its owning session —
+never the tick, never the service:
+
+* a shared group dispatch that raises (an injected fault, a mid-batch
+  ``UnsupportedDesignError`` that escaped the backend's own fallback) is
+  **bisected**: every member session redispatches its own slice alone, so
+  the poison is pinned to its owner and the survivors' rows stay
+  bit-identical (per-row independence again);
+* a per-session dispatch retries with capped exponential backoff
+  (:class:`~repro.serve.faults.RetryPolicy`); ``degrade_after`` consecutive
+  primary-backend failures pin that one session to a scalar
+  ``PythonBackend`` fallback (the service keeps serving); a session whose
+  fallback also fails is quarantined to ``FAILED`` with the error recorded
+  on it;
+* an exception escaping a session *coroutine* fails (or, with restarts
+  budgeted, rebuilds from the explorer's last committed accept via the
+  policy checkpoint machinery) that one session;
+* per-session ``deadline_s`` SLOs are enforced at the top of every tick;
+* an attached :class:`~repro.serve.faults.FaultInjector` exercises all of
+  the above deterministically, and a ``runtime.health.StepTimeMonitor``
+  EMA-flags straggler ticks.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Union
 
-from ..core.backend import BackendStats, Candidate, SimulatorBackend, make_backend
+from ..core.backend import (
+    BackendStats,
+    Candidate,
+    PythonBackend,
+    SimHandle,
+    SimulatorBackend,
+    make_backend,
+)
 from ..core.database import HardwareDatabase
+from ..core.explorer import Explorer
 from ..core.tdg import TaskGraph
+from ..runtime.health import StepTimeMonitor
+from .faults import (
+    DeadlineExceeded,
+    DispatchFailed,
+    FaultInjector,
+    InjectedDispatchError,
+    InjectedSessionCrash,
+    RetryPolicy,
+)
 from .session import RUNNING, Session
 from .store import DesignStore
 
@@ -42,13 +82,28 @@ class ContinuousBatchScheduler:
         db: HardwareDatabase,
         backend: BackendSpec = "jax",
         store: Optional[DesignStore] = None,
+        faults: Optional[FaultInjector] = None,
+        retry: Optional[RetryPolicy] = None,
     ) -> None:
         self.db = db
         self.store = store
+        self.faults = faults
+        self.retry = retry or RetryPolicy()
+        self.monitor = StepTimeMonitor()  # EMA straggler flagging per tick
         self._backend_spec = backend
         self._backends: Dict[int, SimulatorBackend] = {}  # id(tdg) -> backend
+        self._fallbacks: Dict[int, PythonBackend] = {}  # degraded-mode backends
         self._live: List[Session] = []  # admission order = packing order
         self.n_ticks = 0
+        # fault-tolerance counters (surfaced through ServiceStats)
+        self.n_dispatch_faults = 0  # dispatch attempts that raised
+        self.n_retries = 0  # backed-off per-session re-attempts
+        self.n_bisects = 0  # shared dispatches split after a fault
+        self.n_degraded = 0  # sessions pinned to the python fallback
+        self.n_failed = 0  # sessions quarantined to FAILED
+        self.n_restarts = 0  # crash-restarts performed
+        self.n_deadline_exceeded = 0  # sessions failed by their SLO
+        self.n_straggler_ticks = 0  # ticks the StepTimeMonitor flagged
 
     # ---- backends --------------------------------------------------------
     def backend_for(self, tdg: TaskGraph) -> SimulatorBackend:
@@ -68,8 +123,19 @@ class ContinuousBatchScheduler:
             self._backends[key] = backend
         return self._backends[key]
 
+    def fallback_for(self, tdg: TaskGraph) -> PythonBackend:
+        """The degraded-mode scalar backend for this graph, built lazily on
+        first degradation (a fault-free service never pays for one)."""
+        key = id(tdg)
+        if key not in self._fallbacks:
+            self._fallbacks[key] = PythonBackend(tdg, self.db)
+        return self._fallbacks[key]
+
     def backends(self) -> Dict[int, SimulatorBackend]:
         return self._backends
+
+    def fallback_backends(self) -> Dict[int, PythonBackend]:
+        return self._fallbacks
 
     def backend_stats(self) -> Dict[int, BackendStats]:
         return {k: b.stats() for k, b in self._backends.items()}
@@ -86,6 +152,119 @@ class ContinuousBatchScheduler:
         if session.state == RUNNING:
             self._live.append(session)
 
+    # ---- fault paths -----------------------------------------------------
+    def _fail(self, session: Session, exc: BaseException) -> None:
+        session.fail(exc)
+        self.n_failed += 1
+        if session in self._live:
+            self._live.remove(session)
+
+    def _restart(self, session: Session) -> bool:
+        """Rebuild a crashed session's coroutine from its explorer's last
+        committed accept: fresh Explorer (budget shrunk to the remaining
+        iterations), rng/policy restored through the checkpoint machinery,
+        generator re-primed from the last accepted design. Returns False if
+        no committed snapshot exists (the scheduler then fails the session)."""
+        old = session.explorer
+        st = old.restart_state()
+        if st is None:
+            return False
+        remaining = max(1, old.cfg.max_iterations - st["iteration"])
+        cfg = dataclasses.replace(old.cfg, max_iterations=remaining)
+        ex = Explorer(
+            session.request.tdg, self.db, session.request.budget, cfg,
+            backend=old.backend,
+        )
+        ex.rng.setstate(st["rng"])
+        ex.policy.restore(st["policy"])
+        session.resurrect(ex, st["design"])
+        self.n_restarts += 1
+        return True
+
+    def _recover(self, session: Session, exc: BaseException, completed: List[Session]) -> None:
+        """An exception escaped the session coroutine: crash-restart if the
+        request budgeted restarts (and a committed snapshot exists),
+        otherwise quarantine to FAILED. Either way the tick — and every
+        other session — proceeds untouched."""
+        if session.restarts_left > 0 and self._restart(session):
+            if session.done:  # pragma: no cover — resurrect hit StopIteration
+                completed.append(session)
+                self._live.remove(session)
+            return
+        self._fail(session, exc)
+
+    def _attempt(
+        self, backend: SimulatorBackend, cands: List[Candidate], target: str,
+        inject: bool,
+    ) -> List[SimHandle]:
+        """One dispatch attempt, with the injector consulted *before* the
+        backend call — a vetoed attempt raises without submitting anything,
+        so a retry of the same rows is bit-identical by construction."""
+        fi = self.faults
+        if fi is not None and inject:
+            if fi.draw_dispatch_fault(target):
+                raise InjectedDispatchError(f"injected dispatch fault: {target}")
+            delay = fi.draw_straggler(target)
+            if delay > 0.0:
+                time.sleep(delay)  # artificial latency: the monitor's outlier
+        return backend.evaluate_candidates(cands)
+
+    def _price_session(self, session: Session) -> Optional[List[SimHandle]]:
+        """Price one session's pending batch alone: retry with capped
+        exponential backoff on the primary backend, degrade to the scalar
+        fallback after ``degrade_after`` consecutive failures (counted
+        across ticks, reset on success), FAIL the session only when the
+        fallback path fails too. Returns None iff the session was failed."""
+        rp = self.retry
+        tdg = session.request.tdg
+        if not session.degraded:
+            backend = self.backend_for(tdg)
+            delay = rp.backoff_s
+            last: Optional[BaseException] = None
+            for attempt in range(rp.max_attempts):
+                if session.n_consec_dispatch_failures >= rp.degrade_after:
+                    break  # ladder exhausted: degrade instead of retrying
+                if attempt > 0:
+                    self.n_retries += 1
+                    if delay > 0.0:
+                        time.sleep(delay)
+                    delay = min(delay * 2.0, rp.backoff_cap_s)
+                try:
+                    handles = self._attempt(
+                        backend, session.pending, session.name, inject=True
+                    )
+                    session.n_consec_dispatch_failures = 0
+                    return handles
+                except Exception as exc:
+                    self.n_dispatch_faults += 1
+                    session.n_consec_dispatch_failures += 1
+                    last = exc
+            if session.n_consec_dispatch_failures < rp.degrade_after:
+                self._fail(session, DispatchFailed(
+                    f"session {session.name!r}: {rp.max_attempts} dispatch "
+                    f"attempts failed (last: {last!r})"
+                ))
+                return None
+            # graceful degradation: pin this one session to the scalar
+            # backend; the service keeps serving everyone else on the device
+            session.degraded = True
+            self.n_degraded += 1
+        # degraded path — the known-good backend; the injector never vetoes
+        # it (degradation models recovery, not a second failure domain)
+        try:
+            return self._attempt(
+                self.fallback_for(tdg), session.pending,
+                session.name + "~degraded", inject=False,
+            )
+        except Exception as exc:
+            self.n_dispatch_faults += 1
+            self._fail(session, DispatchFailed(
+                f"session {session.name!r}: degraded-mode dispatch failed "
+                f"({exc!r})"
+            ))
+            return None
+
+    # ---- the tick --------------------------------------------------------
     def tick(self) -> List[Session]:
         """One scheduler round: pack all live sessions' pending candidates
         per backend group, dispatch once per group, resume every member with
@@ -93,29 +272,112 @@ class ContinuousBatchScheduler:
 
         The shared-dispatch wall is attributed to sessions proportionally to
         their candidate counts (the same accounting the lockstep Campaign
-        loop reported as ``sim_wall_s``)."""
+        loop reported as ``sim_wall_s``). Faults — injected or real — are
+        quarantined per session; see the module docstring for the ladder."""
         completed: List[Session] = []
         if not self._live:
             return completed
         self.n_ticks += 1
+        t_tick = time.perf_counter()
+        fi = self.faults
+        if fi is not None:
+            fi.begin_tick(self.n_ticks)
+
+        # deadline SLOs first: a session past its budget fails before it can
+        # consume another dispatch
+        for s in list(self._live):
+            if s.past_deadline():
+                self.n_deadline_exceeded += 1
+                self._fail(s, DeadlineExceeded(
+                    f"session {s.name!r} exceeded deadline_s="
+                    f"{s.request.deadline_s}"
+                ))
+
+        # injected coroutine crashes (the chaos harness's process-death
+        # stand-in) — thrown into the generator so the real unwind runs
+        if fi is not None:
+            for s in list(self._live):
+                if fi.draw_crash(s.name):
+                    escaped = s.crash(InjectedSessionCrash(
+                        f"injected crash: session {s.name!r}"
+                    ))
+                    if escaped is not None:
+                        self._recover(s, escaped, completed)
+                    elif s.done:  # pragma: no cover — graceful wind-down
+                        completed.append(s)
+                        self._live.remove(s)
+
         groups: Dict[int, List[Session]] = {}
         for s in self._live:
             groups.setdefault(id(s.request.tdg), []).append(s)
         for members in groups.values():
-            backend = self.backend_for(members[0].request.tdg)
-            cands: List[Candidate] = [c for s in members for c in s.pending]
-            t0 = time.perf_counter()
-            handles = backend.evaluate_candidates(cands)
-            dispatch_s = time.perf_counter() - t0
-            offset = 0
+            # degraded sessions price on the scalar fallback individually;
+            # everyone else shares one device dispatch
+            shared = [s for s in members if not s.degraded]
+            priced: Dict[str, Optional[List[SimHandle]]] = {}
+            if shared:
+                backend = self.backend_for(shared[0].request.tdg)
+                cands: List[Candidate] = [c for s in shared for c in s.pending]
+                target = "shared:" + getattr(
+                    shared[0].request.tdg, "name", str(id(shared[0].request.tdg))
+                )
+                t0 = time.perf_counter()
+                try:
+                    handles: Optional[List[SimHandle]] = self._attempt(
+                        backend, cands, target, inject=True
+                    )
+                except Exception:
+                    handles = None
+                    self.n_dispatch_faults += 1
+                    self.n_bisects += 1
+                dispatch_s = time.perf_counter() - t0
+                if handles is not None:
+                    offset = 0
+                    for s in shared:
+                        k = len(s.pending)
+                        priced[s.name] = handles[offset:offset + k]
+                        offset += k
+                        s.sim_wall_s += dispatch_s * k / max(len(cands), 1)
+                        s.n_consec_dispatch_failures = 0
+                else:
+                    # bisect-and-redispatch: the poison (injected or a real
+                    # mid-batch failure) is quarantined to whichever session
+                    # owns it; survivors' redispatched rows are bit-identical
+                    # to the shared rows (per-row independence)
+                    for s in shared:
+                        t1 = time.perf_counter()
+                        priced[s.name] = self._price_session(s)
+                        s.sim_wall_s += time.perf_counter() - t1
             for s in members:
-                k = len(s.pending)
-                sub = handles[offset:offset + k]
-                offset += k
-                s.sim_wall_s += dispatch_s * k / max(len(cands), 1)
-                if s.resume(sub):
+                # degraded before this tick (mid-bisect degraders are
+                # already in ``priced`` via their fallback redispatch)
+                if s.degraded and s.state == RUNNING and s.name not in priced:
+                    t1 = time.perf_counter()
+                    priced[s.name] = self._price_session(s)
+                    s.sim_wall_s += time.perf_counter() - t1
+
+            for s in members:
+                if s.state != RUNNING:
+                    continue  # failed while pricing this very group
+                handles = priced.get(s.name)
+                if handles is None:
+                    continue
+                if fi is not None:
+                    handles = fi.poison_rows(s.name, handles)
+                try:
+                    finished = s.resume(handles)
+                except Exception as exc:
+                    # satellite fix: a coroutine death no longer aborts the
+                    # tick — quarantine (or crash-restart) that one session
+                    self._recover(s, exc, completed)
+                    continue
+                if finished:
                     completed.append(s)
                     self._live.remove(s)
+
+        st = self.monitor.record(self.n_ticks, time.perf_counter() - t_tick)
+        if st.is_straggler:
+            self.n_straggler_ticks += 1
         return completed
 
     def run_until_idle(self, max_ticks: Optional[int] = None) -> List[Session]:

@@ -31,6 +31,7 @@ from ..core.design import Design
 from ..core.explorer import Explorer, ExplorerConfig
 from ..core.database import HardwareDatabase
 from ..core.tdg import TaskGraph
+from .faults import FaultInjector, RetryPolicy, SessionFailed
 from .scheduler import BackendSpec, ContinuousBatchScheduler
 from .session import BestEvent, Session, SessionRequest
 from .store import DesignStore
@@ -38,7 +39,11 @@ from .store import DesignStore
 
 @dataclasses.dataclass
 class ServiceStats:
-    """Fleet-level serve accounting, snapshotted by :meth:`DseService.stats`."""
+    """Fleet-level serve accounting, snapshotted by :meth:`DseService.stats`.
+
+    The fault-tolerance block (``n_failed`` … ``n_straggler_ticks``)
+    reconciles against a :class:`~repro.serve.faults.FaultInjector`'s
+    schedule in the chaos tests and is all-zero on a healthy service."""
 
     n_sessions: int
     n_done: int
@@ -51,6 +56,17 @@ class ServiceStats:
     cache_bypasses: int
     cache_evictions: int
     session_latency_s: List[float]  # completed sessions, admission → done
+    # ---- fault tolerance -------------------------------------------------
+    n_failed: int = 0  # sessions quarantined to FAILED
+    n_degraded: int = 0  # sessions pinned to the PythonBackend fallback
+    n_degraded_evals: int = 0  # evaluations priced on fallback backends
+    n_restarts: int = 0  # coroutine crash-restarts performed
+    n_retries: int = 0  # backed-off per-session dispatch re-attempts
+    n_dispatch_faults: int = 0  # dispatch attempts that raised
+    n_bisects: int = 0  # shared dispatches split after a fault
+    n_deadline_exceeded: int = 0  # sessions failed by their deadline_s SLO
+    n_nonfinite_rejected: int = 0  # NaN/Inf candidate rows rejected, never accepted
+    n_straggler_ticks: int = 0  # ticks the StepTimeMonitor EMA flagged
 
     @property
     def cache_hit_rate(self) -> float:
@@ -71,8 +87,11 @@ class ServiceStats:
 
 
 class SessionHandle:
-    """User-facing view of one submitted session: poll ``done``, read the
-    streamed ``events``, and collect the final ``result`` after completion."""
+    """User-facing view of one submitted session: poll ``done`` (or
+    ``failed``), read the streamed ``events``, and collect the final
+    ``result`` after completion. A FAILED session's ``result`` raises
+    :class:`~repro.serve.faults.SessionFailed` with the quarantined error
+    (also exposed directly as ``error``)."""
 
     def __init__(self, session: Session) -> None:
         self._session = session
@@ -86,6 +105,24 @@ class SessionHandle:
         return self._session.done
 
     @property
+    def failed(self) -> bool:
+        return self._session.failed
+
+    @property
+    def state(self) -> str:
+        return self._session.state
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        """The error that failed the session (None unless FAILED)."""
+        return self._session.error
+
+    @property
+    def degraded(self) -> bool:
+        """True once the session was pinned to the PythonBackend fallback."""
+        return self._session.degraded
+
+    @property
     def events(self) -> List[BestEvent]:
         return self._session.events
 
@@ -95,6 +132,10 @@ class SessionHandle:
 
     @property
     def result(self):
+        if self._session.failed:
+            raise SessionFailed(
+                f"session {self.name!r} failed: {self._session.error!r}"
+            ) from self._session.error
         if self._session.result is None:
             raise RuntimeError(
                 f"session {self.name!r} has not completed (state="
@@ -118,10 +159,14 @@ class DseService:
         backend: BackendSpec = "jax",
         store: Optional[DesignStore] = None,
         cache: bool = True,
+        faults: Optional[FaultInjector] = None,
+        retry: Optional[RetryPolicy] = None,
     ) -> None:
         self.db = db
         self.store = store if store is not None else (DesignStore() if cache else None)
-        self.scheduler = ContinuousBatchScheduler(db, backend, store=self.store)
+        self.scheduler = ContinuousBatchScheduler(
+            db, backend, store=self.store, faults=faults, retry=retry
+        )
         self._sessions: Dict[str, Session] = {}  # admission order preserved
         self._wall_s = 0.0
 
@@ -134,12 +179,20 @@ class DseService:
         config: Optional[ExplorerConfig] = None,
         initial: Optional[Design] = None,
         on_event=None,  # Optional[Callable[[BestEvent], None]]
+        deadline_s: Optional[float] = None,
+        max_restarts: int = 0,
     ) -> SessionHandle:
         """Admit one exploration session; it joins the next scheduler tick
         (mid-flight joins are the normal case, not an exception).
-        ``on_event`` streams the session's BestEvents as they commit."""
+        ``on_event`` streams the session's BestEvents as they commit;
+        ``deadline_s`` is a per-session completion SLO enforced every tick;
+        ``max_restarts`` budgets crash-restarts from the last committed
+        accept."""
         return self.submit_request(
-            SessionRequest(name, tdg, budget, config or ExplorerConfig(), initial),
+            SessionRequest(
+                name, tdg, budget, config or ExplorerConfig(), initial,
+                deadline_s=deadline_s, max_restarts=max_restarts,
+            ),
             on_event=on_event,
         )
 
@@ -190,20 +243,25 @@ class DseService:
             n = counts.get(s.request.tdg.name, 0)
             labels[key] = s.request.tdg.name if n == 0 else f"{s.request.tdg.name}#{n}"
             counts[s.request.tdg.name] = n + 1
-        return {
+        out = {
             labels.get(k, str(k)): b.stats()
             for k, b in self.scheduler.backends().items()
         }
+        for k, b in self.scheduler.fallback_backends().items():
+            out[labels.get(k, str(k)) + "~degraded"] = b.stats()
+        return out
 
     def stats(self) -> ServiceStats:
-        bstats = list(self.scheduler.backend_stats().values())
+        sched = self.scheduler
+        bstats = list(sched.backend_stats().values())
+        fstats = [b.stats() for b in sched.fallback_backends().values()]
         sstats = self.store.stats if self.store is not None else None
         return ServiceStats(
             n_sessions=len(self._sessions),
             n_done=sum(1 for s in self._sessions.values() if s.done),
-            n_ticks=self.scheduler.n_ticks,
+            n_ticks=sched.n_ticks,
             wall_s=self._wall_s,
-            n_evals=sum(b.n_sims for b in bstats),
+            n_evals=sum(b.n_sims for b in bstats) + sum(b.n_sims for b in fstats),
             n_fallback=sum(b.n_fallback for b in bstats),
             cache_hits=sstats.hits if sstats else 0,
             cache_misses=sstats.misses if sstats else 0,
@@ -212,10 +270,30 @@ class DseService:
             session_latency_s=[
                 s.latency_s for s in self._sessions.values() if s.done
             ],
+            n_failed=sched.n_failed,
+            n_degraded=sched.n_degraded,
+            n_degraded_evals=sum(b.n_sims for b in fstats),
+            n_restarts=sched.n_restarts,
+            n_retries=sched.n_retries,
+            n_dispatch_faults=sched.n_dispatch_faults,
+            n_bisects=sched.n_bisects,
+            n_deadline_exceeded=sched.n_deadline_exceeded,
+            n_nonfinite_rejected=sum(
+                s.n_nonfinite_rejected for s in self._sessions.values()
+            ),
+            n_straggler_ticks=sched.n_straggler_ticks,
         )
 
     def results(self) -> Dict[str, object]:
         """Completed sessions' ExplorationResults, in admission order."""
         return {
             name: s.result for name, s in self._sessions.items() if s.done
+        }
+
+    def failures(self) -> Dict[str, BaseException]:
+        """FAILED sessions' quarantined errors, in admission order."""
+        return {
+            name: s.error
+            for name, s in self._sessions.items()
+            if s.failed and s.error is not None
         }

@@ -28,18 +28,27 @@ from ..core.tdg import TaskGraph
 PENDING = "pending"
 RUNNING = "running"
 DONE = "done"
+FAILED = "failed"
 
 
 @dataclasses.dataclass
 class SessionRequest:
     """One exploration request, shaped like ``campaign.RunSpec`` — the serve
-    layer's admission unit."""
+    layer's admission unit.
+
+    ``deadline_s`` is a per-session admission→completion wall-clock SLO,
+    enforced at the top of every scheduler tick (a session past it fails
+    with ``DeadlineExceeded``). ``max_restarts`` bounds crash recovery: a
+    coroutine that dies with restarts left is rebuilt from the explorer's
+    last committed accept (rng + policy checkpoint) instead of failing."""
 
     name: str
     tdg: TaskGraph
     budget: Budget
     config: ExplorerConfig = dataclasses.field(default_factory=ExplorerConfig)
     initial: Optional[Design] = None
+    deadline_s: Optional[float] = None
+    max_restarts: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,13 +82,20 @@ class Session:
         self.state = PENDING
         self.pending: List[Candidate] = []
         self.result: Optional[ExplorationResult] = None
+        self.error: Optional[BaseException] = None  # set iff FAILED
         self.events: List[BestEvent] = []
         self.on_event: Optional[Callable[[BestEvent], None]] = None
         self.sim_wall_s = 0.0  # attributed share of shared-dispatch wall
         self.n_ticks = 0
         self.admitted_at: Optional[float] = None
         self.done_at: Optional[float] = None
+        self.degraded = False  # pinned to the PythonBackend fallback
+        self.n_consec_dispatch_failures = 0  # drives the degradation ladder
+        self.n_restarts = 0
+        self._nonfinite_base = 0  # rejections from pre-restart explorers
         explorer.on_improve = self._improved
+        if request.max_restarts > 0:
+            explorer.track_restart = True
 
     @property
     def name(self) -> str:
@@ -88,6 +104,28 @@ class Session:
     @property
     def done(self) -> bool:
         return self.state == DONE
+
+    @property
+    def failed(self) -> bool:
+        return self.state == FAILED
+
+    @property
+    def restarts_left(self) -> int:
+        return max(0, self.request.max_restarts - self.n_restarts)
+
+    @property
+    def n_nonfinite_rejected(self) -> int:
+        """Non-finite candidate rows this session's search rejected (summed
+        across crash-restarted explorer instances)."""
+        return self._nonfinite_base + getattr(self.explorer, "n_nonfinite", 0)
+
+    def past_deadline(self) -> bool:
+        d = self.request.deadline_s
+        return (
+            d is not None
+            and self.admitted_at is not None
+            and time.perf_counter() - self.admitted_at > d
+        )
 
     @property
     def latency_s(self) -> float:
@@ -146,3 +184,54 @@ class Session:
         self.pending = []
         self.state = DONE
         self.done_at = time.perf_counter()
+
+    # ---- fault handling --------------------------------------------------
+    def fail(self, exc: BaseException) -> None:
+        """Quarantine the session: record the error, transition to FAILED,
+        and close the coroutine so speculative state cannot leak. Idempotent
+        for already-terminal sessions (the first error wins)."""
+        if self.state in (DONE, FAILED):
+            return
+        self.error = exc
+        self.pending = []
+        self.state = FAILED
+        self.done_at = time.perf_counter()
+        gen = getattr(self, "_gen", None)
+        if gen is not None:
+            try:
+                gen.close()
+            except Exception:  # a broken coroutine must not take the tick down
+                pass
+
+    def crash(self, exc: BaseException) -> Optional[BaseException]:
+        """Throw ``exc`` into the session coroutine (the injected-crash
+        path). Returns the exception that escaped — usually ``exc`` itself —
+        or None if the coroutine absorbed it / ran to completion."""
+        assert self.state == RUNNING, self.state
+        self.pending = []
+        try:
+            self.pending = self._gen.throw(exc)
+            return None  # absorbed; pending is the next batch
+        except StopIteration as stop:  # pragma: no cover — graceful wind-down
+            self._finish(stop.value)
+            return None
+        except BaseException as escaped:
+            return escaped
+
+    def resurrect(self, explorer: Explorer, initial: Optional[Design]) -> None:
+        """Crash-restart: swap in a fresh explorer (rng/policy already
+        restored to the last committed accept by the scheduler) and re-prime
+        the coroutine from ``initial`` — the last accepted design. Events,
+        latency accounting, and tick counts carry over; only the in-flight
+        (uncommitted) step is lost."""
+        assert self.state == RUNNING, self.state
+        self._nonfinite_base += getattr(self.explorer, "n_nonfinite", 0)
+        self.explorer = explorer
+        explorer.on_improve = self._improved
+        explorer.track_restart = True
+        self.n_restarts += 1
+        self._gen = explorer.run_steps(initial)
+        try:
+            self.pending = next(self._gen)
+        except StopIteration as stop:  # pragma: no cover — budget exhausted
+            self._finish(stop.value)

@@ -22,7 +22,11 @@ duck-typed facts:
 Entries materialize lazily on first hit — the producing batch has almost
 always been consumed by then (any handle read forces it), so materialization
 is a few row copies, after which the batch reference is dropped and the
-entry is compact. Eviction is LRU under a configurable ``capacity`` bound.
+entry is compact. Eviction is LRU under a configurable ``capacity`` bound,
+with one carve-out: a pending entry whose producing dispatch is still in
+flight is pinned (evicting it would lose the row or force the dispatch
+early), so the store may transiently overshoot ``capacity`` until those
+batches are consumed.
 
 Hit/miss/bypass accounting lives twice on purpose: per backend in
 ``BackendStats`` (``n_cache_hits``/``n_cache_misses``/``n_cache_bypass``)
@@ -176,7 +180,9 @@ class DesignStore:
             return None
         self._entries.move_to_end(key)
         self.stats.hits += 1
-        return entry.materialize()
+        row = entry.materialize()
+        self._evict()  # entries pinned at insert time may be evictable now
+        return row
 
     def insert(self, key: bytes, batch, j: int) -> None:
         """Register row ``j`` of a just-submitted dispatch under ``key``
@@ -185,9 +191,28 @@ class DesignStore:
         self.stats.misses += 1
         self._entries[key] = _Entry(batch, j)
         self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+        self._evict()
+
+    def _evict(self) -> None:
+        """LRU eviction down to ``capacity`` — but a pending entry whose
+        producing batch is still in flight is PINNED: evicting it here would
+        either silently lose the row (the hazard this fixes) or force the
+        just-submitted non-blocking dispatch early (destroying the pipeline
+        the backend exists for). Pinned entries let the store overshoot
+        capacity transiently; the overshoot drains on the next ``insert`` or
+        materializing ``lookup`` after the batch is consumed, since a
+        consumed batch's entries evict normally."""
+        excess = len(self._entries) - self.capacity
+        if excess <= 0:
+            return
+        for key, entry in list(self._entries.items()):  # LRU → MRU
+            if entry.row is None and not getattr(entry.batch, "consumed", True):
+                continue  # pinned: source dispatch still in flight
+            del self._entries[key]
             self.stats.evictions += 1
+            excess -= 1
+            if excess <= 0:
+                return
 
     def note_alias_hit(self) -> None:
         """Count a same-dispatch alias: a duplicate candidate inside one

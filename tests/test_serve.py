@@ -80,7 +80,10 @@ def test_within_batch_alias_dedupes(db, g, bud):
 
 
 def test_store_eviction_respects_capacity(db, g, bud):
-    """LRU eviction under a configurable capacity bound."""
+    """LRU eviction under a configurable capacity bound — deferred past the
+    producing dispatch: entries whose batch is still in flight are pinned
+    (see test_store_eviction_pins_pending_entries), so eviction lands on the
+    first insert/lookup after the batch is consumed."""
     with pytest.raises(ValueError):
         DesignStore(capacity=0)
     designs = random_single_noc_designs(g, 8, seed=3)
@@ -88,15 +91,46 @@ def test_store_eviction_respects_capacity(db, g, bud):
     jb = JaxBatchedBackend(g, db)
     jb.attach_store(store)
     _force(jb.evaluate_candidates([Candidate.of_design(d, bud) for d in designs]))
-    assert len(store) == 4
-    assert store.stats.evictions == 4 and store.stats.misses == 8
-    # the 4 survivors are the most recently inserted; the first 4 re-dispatch
+    # all 8 entries were registered while their dispatch was in flight —
+    # pinned, so the store transiently overshoots capacity with 0 evictions
+    assert len(store) == 8 and store.stats.evictions == 0
+    assert store.stats.misses == 8
+    # the batch is consumed now; the first lookups both hit the 4 survivors
+    # (most recently inserted) and drain the overshoot down to capacity
     again = jb.evaluate_candidates(
         [Candidate.of_design(d, bud) for d in designs[4:]]
     )
     assert store.stats.hits == 4
     assert jb.stats().n_cache_hits == 4
+    assert len(store) == 4 and store.stats.evictions == 4
     _force(again)
+
+
+def test_store_eviction_pins_pending_entries(db, g, bud):
+    """Regression for the eviction hazard: an LRU entry whose (batch, j)
+    source is still PENDING used to be evictable before materialization —
+    losing the row (or, if materialized eagerly, forcing the just-submitted
+    non-blocking dispatch). Pinned pending entries must survive capacity
+    pressure and still serve bit-identical hits once their batch lands."""
+    designs = random_single_noc_designs(g, 4, seed=5)
+    store = DesignStore(capacity=2)
+    jb = JaxBatchedBackend(g, db)
+    jb.attach_store(store)
+    first = jb.evaluate_candidates([Candidate.of_design(d, bud) for d in designs])
+    # nothing forced yet: every entry is pending on the in-flight batch, so
+    # nothing may be evicted — the overshoot is the fix working
+    assert len(store) == 4 and store.stats.evictions == 0
+    _force(first)  # batch consumed; entries are now evictable
+    # every registered row must still be servable, bit-identically
+    again = jb.evaluate_candidates(
+        [Candidate.of_design(d, bud) for d in designs[2:]]
+    )
+    assert store.stats.hits == 2  # the 2 MRU entries hit...
+    assert len(store) == 2  # ...and the overshoot drained to capacity
+    assert store.stats.evictions == 2
+    for a, b in zip(first[2:], again):
+        assert b.fitness == a.fitness
+        assert b.scalars() == a.scalars()
 
 
 def test_key_excludes_block_names(db, g, bud):
@@ -187,6 +221,44 @@ def test_duplicate_session_name_rejected(db, g, bud):
     with pytest.raises(ValueError):
         svc.submit("same", g, bud, ExplorerConfig(seed=1, max_iterations=5, backend="jax"))
     svc.run()
+
+
+# ---- session-level fault isolation ---------------------------------------
+def test_coroutine_death_is_quarantined(db, g, bud):
+    """Satellite fix: an exception escaping one session's coroutine used to
+    propagate out of step() and abort the whole tick. It must instead fail
+    exactly that session — error recorded on the handle, FAILED state,
+    result raising SessionFailed — while every co-batched session runs to
+    completion through the same ticks."""
+    from repro.serve import SessionFailed
+
+    svc = DseService(db, backend="jax")
+    doomed = svc.submit(
+        "doomed", g, bud, ExplorerConfig(seed=3, max_iterations=15, backend="jax")
+    )
+    healthy = svc.submit(
+        "healthy", g, bud, ExplorerConfig(seed=4, max_iterations=15, backend="jax")
+    )
+    svc.step()  # let both sessions get a couple of committed ticks in
+    svc.step()
+
+    boom = RuntimeError("policy blew up mid-iteration")
+    sess = svc._sessions["doomed"]
+
+    def explode(*a, **k):
+        raise boom
+
+    sess.explorer.policy.select_focus = explode
+    stats = svc.run()  # must not raise
+
+    assert doomed.failed and doomed.error is boom
+    assert doomed.state == "failed"
+    with pytest.raises(SessionFailed):
+        doomed.result
+    assert healthy.done and not healthy.failed
+    assert healthy.result.iterations > 0
+    assert stats.n_failed == 1 and stats.n_done == 1
+    assert svc.failures() == {"doomed": boom}
 
 
 # ---- Campaign as a scheduler client --------------------------------------

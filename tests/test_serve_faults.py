@@ -1,0 +1,270 @@
+"""Chaos sweep for the serve fault-tolerance layer: seeded fault injection
+across {dispatch-error, NaN-row, straggler, coroutine-crash}, asserting zero
+service crashes, deterministic replay, unaffected-session bit-identity, the
+retry/degradation/restart ladders, deadline SLOs, and counter reconciliation
+between the injector's schedule and ServiceStats.
+
+Everything here is tier-1 (small B, ~12-iteration searches): the isolation
+guarantees are exactly the kind of property that silently rots without a
+fast gate.
+"""
+import math
+
+import pytest
+
+from repro.core import (
+    ExplorerConfig,
+    HardwareDatabase,
+    calibrated_budget,
+    edge_detection,
+)
+from repro.serve import (
+    DeadlineExceeded,
+    DseService,
+    FaultInjector,
+    InjectedSessionCrash,
+    RetryPolicy,
+    SessionFailed,
+)
+
+N = 4  # sessions per chaos run
+ITERS = 12
+
+# no real sleeping inside tier-1 retries
+FAST_RETRY = RetryPolicy(backoff_s=0.0)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return HardwareDatabase()
+
+
+@pytest.fixture(scope="module")
+def g(db):
+    return edge_detection()
+
+
+@pytest.fixture(scope="module")
+def bud(db):
+    return calibrated_budget(db)
+
+
+def _cfg(i, backend="jax"):
+    return ExplorerConfig(seed=i, backend=backend, max_iterations=ITERS)
+
+
+def _run(db, g, bud, faults=None, n=N, backend="jax", retry=FAST_RETRY, **submit_kw):
+    svc = DseService(db, backend=backend, faults=faults, retry=retry)
+    handles = [
+        svc.submit(f"s{i}", g, bud, _cfg(i, backend), **submit_kw)
+        for i in range(n)
+    ]
+    stats = svc.run()  # the headline guarantee: this must never raise
+    return svc, handles, stats
+
+
+def _distances(svc):
+    return {n: r.best_distance.city_block() for n, r in svc.results().items()}
+
+
+@pytest.fixture(scope="module")
+def baseline(db, g, bud):
+    """Fault-free reference results for the bit-identity assertions."""
+    svc, handles, stats = _run(db, g, bud, faults=None, n=6)
+    assert stats.n_done == 6 and stats.n_failed == 0
+    assert stats.n_dispatch_faults == 0 and stats.n_nonfinite_rejected == 0
+    return _distances(svc)
+
+
+# ---- the sweep: every fault kind, zero service crashes --------------------
+@pytest.mark.parametrize(
+    "kind,rates",
+    [
+        ("dispatch", dict(dispatch_fault_rate=0.3)),
+        ("nan_row", dict(nan_row_rate=0.15)),
+        ("straggler", dict(straggler_rate=0.3, straggler_delay_s=0.001)),
+        ("crash", dict(crash_rate=0.05)),
+        ("combined", dict(dispatch_fault_rate=0.1, nan_row_rate=0.05,
+                          straggler_rate=0.05, straggler_delay_s=0.001,
+                          crash_rate=0.02)),
+    ],
+)
+def test_chaos_sweep_no_service_crash(db, g, bud, kind, rates):
+    """With faults injected at seeded rates, no exception escapes
+    DseService.run(), every session reaches a terminal state, and the
+    ServiceStats counters reconcile with the injector's schedule."""
+    fi = FaultInjector(seed=7, **rates)
+    svc, handles, stats = _run(db, g, bud, faults=fi, max_restarts=2)
+    counts = fi.counts()
+
+    assert svc.n_live == 0  # nothing stuck
+    assert stats.n_done + stats.n_failed == N
+    for h in handles:
+        assert h.done or h.failed
+        if h.failed:
+            assert h.error is not None
+            with pytest.raises(SessionFailed):
+                h.result
+
+    # counter reconciliation against the injection schedule: injected
+    # dispatch vetoes are the only dispatch-failure source in this sweep
+    assert stats.n_dispatch_faults == counts["dispatch"]
+    assert stats.n_nonfinite_rejected <= counts["nan_row"]
+    assert stats.n_restarts + sum(
+        1 for h in handles
+        if h.failed and isinstance(h.error, InjectedSessionCrash)
+    ) <= counts["crash"]
+    # every completed search ended on a finite committed design
+    for h in handles:
+        if h.done:
+            assert math.isfinite(h.result.best_distance.city_block())
+
+
+def test_deterministic_replay(db, g, bud):
+    """Same injector seed → same fault schedule → same per-session results:
+    every injection decision is drawn at scheduler-deterministic points,
+    never gated on wall clock."""
+    rates = dict(dispatch_fault_rate=0.1, nan_row_rate=0.05,
+                 straggler_rate=0.05, straggler_delay_s=0.001, crash_rate=0.02)
+
+    def go():
+        fi = FaultInjector(seed=7, **rates)
+        svc, handles, stats = _run(db, g, bud, faults=fi, max_restarts=2)
+        seqs = {
+            name: [(h["move"], h["accepted"]) for h in r.history]
+            for name, r in svc.results().items()
+        }
+        return fi.schedule, _distances(svc), seqs, stats
+
+    sched_a, dist_a, seq_a, st_a = go()
+    sched_b, dist_b, seq_b, st_b = go()
+    assert sched_a == sched_b  # identical injection schedule (tick/kind/target)
+    assert dist_a == dist_b  # bit-identical outcomes
+    assert seq_a == seq_b  # identical accepted-move sequences
+    assert (st_a.n_dispatch_faults, st_a.n_restarts, st_a.n_failed) == (
+        st_b.n_dispatch_faults, st_b.n_restarts, st_b.n_failed
+    )
+
+
+def test_unaffected_sessions_bit_identical(db, g, bud, baseline):
+    """Session-level isolation: sessions the injector never poisoned or
+    crashed (and that never degraded or failed) walk the exact accepted-move
+    sequence of a fault-free run — co-batched faults cost their owner, not
+    the batch."""
+    fi = FaultInjector(seed=1, nan_row_rate=0.03, crash_rate=0.01)
+    svc, handles, stats = _run(db, g, bud, faults=fi, n=6, max_restarts=1)
+    affected = fi.affected_sessions() | set(svc.failures())
+    affected |= {name for name, s in svc._sessions.items() if s.degraded}
+    unaffected = [name for name in baseline if name not in affected]
+    # the seed is pinned so the assertion actually covers something
+    assert len(unaffected) >= 2
+    got = _distances(svc)
+    for name in unaffected:
+        assert got[name] == baseline[name]  # bit-identical, not approx
+
+
+# ---- retry / degradation ladder -------------------------------------------
+def test_transient_dispatch_faults_are_invisible(db, g, bud, baseline):
+    """A transient dispatch fault is retried (after bisecting the shared
+    batch); because the injector vetoes BEFORE submission and per-row
+    results are independent of batch composition, the retried rows — and
+    therefore every session's result — are bit-identical to fault-free."""
+    fi = FaultInjector(seed=0, dispatch_fault_rate=1.0, max_faults=3)
+    svc, handles, stats = _run(db, g, bud, faults=fi)
+    assert stats.n_done == N and stats.n_failed == 0
+    assert stats.n_dispatch_faults == 3 == fi.counts()["dispatch"]
+    assert stats.n_bisects == 1  # the poisoned shared dispatch was split
+    assert stats.n_retries >= 1  # and at least one member backed off
+    assert stats.n_degraded == 0
+    got = _distances(svc)
+    for name, d in got.items():
+        assert d == baseline[name]
+
+
+def test_degradation_ladder(db, g, bud):
+    """After degrade_after consecutive failed primary dispatches a session
+    falls back — per-session — to the PythonBackend: with a 100% injected
+    dispatch-fault rate every session degrades, yet all complete and the
+    service never stops serving."""
+    fi = FaultInjector(seed=0, dispatch_fault_rate=1.0)
+    svc, handles, stats = _run(db, g, bud, faults=fi)
+    assert stats.n_done == N and stats.n_failed == 0
+    assert stats.n_degraded == N
+    assert all(h.degraded and h.done for h in handles)
+    # the injected-fault tally: 1 failed shared dispatch + degrade_after
+    # per-session attempts each, all before the fallback takes over (which
+    # the injector never vetoes — degraded pricing is the recovery path)
+    assert stats.n_dispatch_faults == 1 + N * FAST_RETRY.degrade_after
+    assert stats.n_dispatch_faults == fi.counts()["dispatch"]
+    assert stats.n_degraded_evals > 0  # fallback did the pricing...
+    bstats = svc.backend_stats()
+    assert bstats["ed~degraded"].n_sims == stats.n_degraded_evals
+    assert bstats["ed"].n_sims == 0  # ...and the device priced nothing
+
+
+# ---- crash restart ---------------------------------------------------------
+def test_crash_restart_resumes_from_committed_state(db, g, bud, baseline):
+    """A crashed coroutine with restart budget is rebuilt from the
+    explorer's last committed accept (rng + policy.checkpoint()/restore());
+    the replayed rng stream makes the restarted search bit-identical to the
+    uncrashed one."""
+    fi = FaultInjector(seed=0, crash_rate=1.0, max_faults=1)
+    svc, handles, stats = _run(db, g, bud, faults=fi, n=2, max_restarts=1)
+    assert stats.n_done == 2 and stats.n_failed == 0
+    assert stats.n_restarts == 1 == fi.counts()["crash"]
+    assert _distances(svc)["s0"] == baseline["s0"]
+
+
+def test_crash_without_restart_budget_fails_session(db, g, bud):
+    fi = FaultInjector(seed=0, crash_rate=1.0, max_faults=1)
+    svc, handles, stats = _run(db, g, bud, faults=fi, n=2)  # max_restarts=0
+    assert stats.n_failed == 1 and stats.n_restarts == 0
+    assert handles[0].failed
+    assert isinstance(handles[0].error, InjectedSessionCrash)
+    assert handles[1].done  # the co-batched session is untouched
+
+
+# ---- deadlines -------------------------------------------------------------
+def test_deadline_exceeded_surfaces_on_handle(db, g, bud):
+    svc = DseService(db, backend="jax")
+    doomed = svc.submit("doomed", g, bud, _cfg(0), deadline_s=0.0)
+    ok = svc.submit("ok", g, bud, _cfg(1))
+    stats = svc.run()
+    assert stats.n_deadline_exceeded == 1 and stats.n_failed == 1
+    assert doomed.failed and isinstance(doomed.error, DeadlineExceeded)
+    with pytest.raises(SessionFailed) as ei:
+        doomed.result
+    assert isinstance(ei.value.__cause__, DeadlineExceeded)
+    assert ok.done and stats.n_done == 1
+
+
+# ---- non-finite guard ------------------------------------------------------
+def test_nan_rows_rejected_never_accepted(db, g, bud):
+    """Poisoned fitness/scalar rows are clamped out of the ranking and can
+    never be accepted: every session completes on a finite best design and
+    the rejection counter reconciles with the injection schedule."""
+    fi = FaultInjector(seed=3, nan_row_rate=0.3)
+    svc, handles, stats = _run(db, g, bud, faults=fi)
+    assert stats.n_done == N and stats.n_failed == 0
+    injected = fi.counts()["nan_row"]
+    assert injected > 0
+    assert 0 < stats.n_nonfinite_rejected <= injected
+    for h in handles:
+        assert math.isfinite(h.result.best_distance.city_block())
+        for e in h.events:  # streamed improvements are committed accepts
+            assert math.isfinite(e.distance) and math.isfinite(e.fitness)
+
+
+# ---- stragglers ------------------------------------------------------------
+def test_straggler_ticks_flagged_by_monitor(db, g, bud):
+    """Injected dispatch latency makes the tick a genuine outlier; the
+    wired-in StepTimeMonitor EMA flags it (warmup ticks excluded) and the
+    count surfaces in ServiceStats."""
+    fi = FaultInjector(seed=1, straggler_rate=0.25, straggler_delay_s=0.4)
+    svc, handles, stats = _run(db, g, bud, faults=fi, n=3, backend="python")
+    assert stats.n_done == 3 and stats.n_failed == 0
+    straggler_ticks = {f.tick for f in fi.schedule if f.kind == "straggler"}
+    assert straggler_ticks  # the pinned seed schedules stragglers...
+    flagged = {s.step for s in svc.scheduler.monitor.flagged}
+    assert flagged & straggler_ticks  # ...and the monitor caught them
+    assert stats.n_straggler_ticks == len(flagged) >= 1
