@@ -17,10 +17,12 @@ Measures the DSE hot path the perf work targets, and writes it to
      fitness column asserted ≤ 1e-5 against the XLA reference path;
   3. end-to-end explorer iteration rate — fixed-seed exploration runs with
      each backend, in iterations/second, best-of-``reps`` to cut scheduler
-     noise (jit warm-up excluded via a priming run). The JAX explorer runs
-     its default adaptive dispatch pipeline; a ``jax_nopipe`` column pins
-     ``pipeline=False``, and the pipeline-depth / speculation counters ride
-     along in the payload.
+     noise (jit warm-up excluded via a priming run);
+  4. the device-resident explorer (``repro.core.device_explore``): fused
+     (R, K) chain blocks vs the host-driven loop (the SAME compiled step
+     dispatched one iteration at a time), in chain-iterations/second, plus
+     the R×K sweep (R ∈ {1, 16, 256}, K ∈ {8, 64}) against the host
+     explorer's e2e rate in the full run.
 
 A policy-convergence comparison (paper §5.2 / Fig. 9b) rides along: every
 policy of the comparison set (naive SA → telemetry-driven bottleneck /
@@ -40,14 +42,13 @@ tiny iteration counts, and it *asserts* (a) JAX beats Python on
 neighbour-eval throughput, (b) both backends agree on the winning
 candidate's latency, (b') multi-NoC chain batches dispatch at ≥ 0.5x the
 single-NoC throughput with ``n_fallback == 0`` (the array-native topology
-regime), (c) kernel-vs-ref fitness parity ≤ 1e-5, (d) the
-pipeline stall guard: with speculation forced on, a second dispatch must
-have been submitted while the first was un-consumed (``n_inflight_max ≥
-2`` — host encode overlapping device scoring), the accepted-move sequence
-must equal the unpipelined run's, and ``n_compiles ≤ 4`` must still hold,
-(d') zero-value speculation retires itself: an adaptive run that never
-lands a speculative hit either latches the pipeline off
-(``spec_auto_disabled``) or wastes no rows, (e) the policy guard:
+regime), (c) kernel-vs-ref fitness parity ≤ 1e-5, (d) the device-loop
+guard: the fused (R=16, K) chain block must sustain ≥ 2x the host-driven
+loop's chain-iteration rate with ``n_compiles ≤ 4`` and ``n_fallback ==
+0``, and at R=1 the fused block replays the host-driven loop's
+(move, accepted) sequence bit-for-bit, (d') the speculative host pipeline
+is retired: its counters must be ABSENT from ``ExplorationResult`` (the
+tombstone), (e) the policy guard:
 ``FarsiPolicy`` reaches budget in no more iterations than ``NaiveSA`` on
 the audio workload, the shared policy backend staying within the same
 jit-cache footprint, (f) the serve guard: 8 co-batched sessions
@@ -70,6 +71,7 @@ from typing import List
 from repro.core import (
     Campaign,
     Candidate,
+    DeviceChainRunner,
     Explorer,
     ExplorerConfig,
     HardwareDatabase,
@@ -264,65 +266,118 @@ def run(smoke: bool = False) -> List[Row]:
                  backend=jx).run()
         e2e_reps = 1 if smoke else 3
         it_stats = {}
-        for name, backend, pipe in (
-            ("python", py, None), ("jax", jx, None), ("jax_nopipe", jx, False),
-        ):
+        last = None
+        for name, backend in (("python", py), ("jax", jx)):
             best = None
             for _ in range(e2e_reps):
                 res = Explorer(
                     g, db, bud,
-                    ExplorerConfig(max_iterations=iters, seed=3, pipeline=pipe),
+                    ExplorerConfig(max_iterations=iters, seed=3),
                     backend=backend,
                 ).run()
                 if best is None or res.wall_s < best.wall_s:
                     best = res
+            last = best
             it_stats[name] = {
                 "iterations": best.iterations,
                 "wall_s": best.wall_s,
                 "sim_wall_s": best.sim_wall_s,
                 "iters_per_s": best.iterations / max(best.wall_s, 1e-9),
                 "converged": best.converged,
-                "pipelined": best.pipelined,
-                "n_spec_hits": best.n_spec_hits,
-                "n_sims_wasted": best.n_sims_wasted,
-                "spec_auto_disabled": best.spec_auto_disabled,
             }
         if smoke:
-            # zero-value speculation must retire itself: an adaptive run that
-            # never lands a speculative hit either latches the pipeline off
-            # within SPEC_WINDOW dispatched spec batches or wastes nothing
-            ja = it_stats["jax"]
-            assert (
-                ja["n_spec_hits"] > 0 or ja["spec_auto_disabled"]
-                or ja["n_sims_wasted"] == 0
-            ), f"zero-value speculation kept running: {ja}"
-
-        # ---- pipeline stall guard (smoke: hard assertions) ---------------
-        # forced speculation must actually deepen the dispatch pipeline
-        # (encode of batch i+1 submitted while batch i is un-consumed) and
-        # must not change the search or the jit-cache footprint
-        jp = JaxBatchedBackend(g, db)
-        guard_iters = min(iters, 40)
-        res_on = Explorer(
-            g, db, bud,
-            ExplorerConfig(max_iterations=guard_iters, seed=5, pipeline=True),
-            backend=jp,
-        ).run()
-        res_off = Explorer(
-            g, db, bud,
-            ExplorerConfig(max_iterations=guard_iters, seed=5, pipeline=False),
-            backend=jp,
-        ).run()
-        seq = lambda r: [(h["iteration"], h["move"], h["accepted"]) for h in r.history]
-        pipe_depth = jp.stats().n_inflight_max
-        if smoke:
-            assert pipe_depth >= 2, (
-                f"pipeline stall: dispatch never overlapped (depth={pipe_depth})"
-            )
-            assert seq(res_on) == seq(res_off), "pipelined search diverged"
-            assert jp.stats().n_compiles <= 4, jp.stats()
+            # tombstone: the speculative host pipeline is retired — its
+            # counters must not quietly reappear on ExplorationResult
+            for gone in ("n_spec_hits", "n_sims_wasted", "spec_auto_disabled",
+                         "pipelined"):
+                assert not hasattr(last, gone), (
+                    f"speculative-pipeline counter resurrected: {gone}"
+                )
             assert jx.stats().n_compiles <= 4, jx.stats()
-        breakdown["pipeline_depth"] = pipe_depth
+
+        # ---- device-resident explorer (smoke: hard assertions) -----------
+        # the fused (R, K) chain block vs the host-driven loop: the SAME
+        # compiled step dispatched K=1 per iteration with the carry pulled
+        # back to host — the classic host-loop regime. Parity first (at R=1
+        # the fused block must replay the host loop bit-for-bit), then
+        # throughput at an R=16 population.
+        runner = DeviceChainRunner(g, db)
+        dev_k = 32
+        par_f = runner.run_chains(base, bud, r=1, k=dev_k, seed=5)
+        par_h = runner.run_chains_host(base, bud, r=1, n_steps=dev_k, seed=5)
+        parity_ok = par_f.seq(0) == par_h.seq(0)
+        assert parity_ok, "fused device block diverged from the host loop"
+        dev_r = 16
+        runner.run_chains(base, bud, r=dev_r, k=dev_k, seed=5)  # compile
+        runner.run_chains(base, bud, r=dev_r, k=1, seed=5)  # warm k=1 block
+        t_dev = t_hloop = float("inf")
+        for _ in range(reps):
+            t_dev = min(
+                t_dev, runner.run_chains(base, bud, r=dev_r, k=dev_k, seed=5).wall_s
+            )
+        for _ in range(max(1, reps - 1)):
+            t_hloop = min(
+                t_hloop,
+                runner.run_chains_host(
+                    base, bud, r=dev_r, n_steps=dev_k, seed=5
+                ).wall_s,
+            )
+        dev_its = dev_r * dev_k / max(t_dev, 1e-9)
+        hloop_its = dev_r * dev_k / max(t_hloop, 1e-9)
+        fused_vs_host_loop = dev_its / max(hloop_its, 1e-9)
+        if smoke:
+            assert fused_vs_host_loop >= 2.0, (
+                f"device-loop regression: fused block at "
+                f"{fused_vs_host_loop:.2f}x of the host-driven loop (floor 2x)"
+            )
+            assert runner.n_compiles <= 4, runner.n_compiles
+            assert runner.n_fallback == 0, runner.n_fallback
+        device_explore = {
+            "r": dev_r,
+            "k": dev_k,
+            "device_iters_per_s": dev_its,
+            "host_loop_iters_per_s": hloop_its,
+            "fused_vs_host_loop": fused_vs_host_loop,
+            "vs_host_explorer_jax": (
+                dev_its / max(it_stats["jax"]["iters_per_s"], 1e-9)
+            ),
+            "vs_host_explorer_python": (
+                dev_its / max(it_stats["python"]["iters_per_s"], 1e-9)
+            ),
+            "parity_r1": parity_ok,
+            "n_compiles": runner.n_compiles,
+            "n_fallback": runner.n_fallback,
+        }
+        if not smoke:
+            # the R×K block sweep (R=256 is the slow, full-run-only point):
+            # chain-iterations/second per fused shape, against the host
+            # explorer's end-to-end rate
+            sweep = {}
+            for rr in (1, 16, 256):
+                for kk in (8, 64):
+                    runner.run_chains(base, bud, r=rr, k=kk, seed=5)  # compile
+                    t_blk = min(
+                        runner.run_chains(base, bud, r=rr, k=kk, seed=5).wall_s
+                        for _ in range(3)
+                    )
+                    blk_its = rr * kk / max(t_blk, 1e-9)
+                    sweep[f"r{rr}.k{kk}"] = {
+                        "iters_per_s": blk_its,
+                        "wall_s": t_blk,
+                        "vs_host_explorer_jax": blk_its
+                        / max(it_stats["jax"]["iters_per_s"], 1e-9),
+                    }
+            device_explore["sweep"] = sweep
+        rows.append(
+            (
+                f"simbackend.{g.name}.device_explore",
+                t_dev * 1e6,
+                f"fused={dev_its:.0f}it/s host_loop={hloop_its:.0f}it/s "
+                f"({fused_vs_host_loop:.1f}x) r={dev_r} k={dev_k} "
+                f"vs_explorer={device_explore['vs_host_explorer_jax']:.1f}x "
+                f"compiles={runner.n_compiles} fallback={runner.n_fallback}",
+            )
+        )
 
         # ---- policy-convergence comparison (§5.2 / Fig. 9b) --------------
         # iterations-to-budget per registered policy under a relaxed budget
@@ -374,6 +429,7 @@ def run(smoke: bool = False) -> List[Row]:
             "eval_throughput_speedup": evals_jx / max(evals_py, 1e-9),
             "jax_breakdown": breakdown,
             "policy_convergence": policy_conv,
+            "device_explore": device_explore,
             "explorer": it_stats,
             "explorer_iters_per_s_speedup": (
                 it_stats["jax"]["iters_per_s"] / max(it_stats["python"]["iters_per_s"], 1e-9)
@@ -393,8 +449,8 @@ def run(smoke: bool = False) -> List[Row]:
                 0.0,
                 "encode={encode_s_per_dispatch:.2e}s dispatch={dispatch_s_per_dispatch:.2e}s "
                 "decode={decode_s_per_dispatch:.2e}s compiles={n_compiles} "
-                "kernel={kernel_dispatch_wall_s:.2e}s ref={ref_dispatch_wall_s:.2e}s "
-                "depth={pipeline_depth}".format(**breakdown),
+                "kernel={kernel_dispatch_wall_s:.2e}s "
+                "ref={ref_dispatch_wall_s:.2e}s".format(**breakdown),
             )
         )
         rows.append(
@@ -402,9 +458,9 @@ def run(smoke: bool = False) -> List[Row]:
                 f"simbackend.{g.name}.explorer",
                 it_stats["jax"]["wall_s"] * 1e6,
                 f"jax={it_stats['jax']['iters_per_s']:.1f}it/s "
-                f"nopipe={it_stats['jax_nopipe']['iters_per_s']:.1f}it/s "
                 f"python={it_stats['python']['iters_per_s']:.1f}it/s "
-                f"speedup={payload['workloads'][g.name]['explorer_iters_per_s_speedup']:.1f}x",
+                f"speedup={payload['workloads'][g.name]['explorer_iters_per_s_speedup']:.1f}x "
+                f"device={device_explore['device_iters_per_s']:.0f}it/s",
             )
         )
 
@@ -581,8 +637,8 @@ def run(smoke: bool = False) -> List[Row]:
             "simbackend.smoke", 0.0,
             "speedup>=1, winner equivalence, kernel parity<=1e-5, "
             "multi-noc dispatch>=0.5x single-noc + n_fallback=0, "
-            "pipeline depth>=2 + identical search + compiles<=4, "
-            "zero-value speculation retires, "
+            "device loop>=2x host loop @R=16 + compiles<=4 + fallback=0, "
+            "R=1 device/host-loop parity, spec-pipeline tombstone, "
             "policy convergence farsi<=naive_sa, "
             "serve: 8-session aggregate>=0.7x single + cache hit-rate>0, "
             "chaos@5% dispatch faults: all sessions complete >=0.5x: OK",

@@ -19,6 +19,12 @@ from .codesign import CodesignLedger, FocusRecord
 from .database import HardwareDatabase, TPUDatabase
 from .design import Design
 from .design_space import random_single_noc_designs
+from .device_explore import (
+    ChainBlockResult,
+    ChainRequest,
+    DeviceChainRunner,
+    MoveTable,
+)
 from .event_sim import simulate_events
 from .explorer import AWARENESS_LEVELS, ExplorationResult, Explorer, ExplorerConfig
 from .gables import TaskRates, bottleneck_of, completion_time, phase_rates
@@ -27,6 +33,7 @@ from .policy import (
     POLICIES,
     BottleneckRelaxation,
     DevCostPolicy,
+    DeviceSA,
     FarsiPolicy,
     Focus,
     HeuristicPolicy,
@@ -55,8 +62,13 @@ __all__ = [
     "Campaign",
     "CampaignResult",
     "Candidate",
+    "ChainBlockResult",
+    "ChainRequest",
     "CodesignLedger",
     "Design",
+    "DeviceChainRunner",
+    "DeviceSA",
+    "MoveTable",
     "SimHandle",
     "JaxBatchedBackend",
     "PythonBackend",

@@ -69,8 +69,8 @@ class BackendStats:
     ``n_inflight_max`` is the deepest the dispatch pipeline ever got: the
     number of dispatches simultaneously un-consumed on device. ≥ 2 means a
     later batch was encoded+submitted while an earlier one was still being
-    scored — the host-encode/device-compute overlap the pipelined explorer
-    exists for (asserted by the bench smoke stall guard)."""
+    scored — the host-encode/device-compute overlap multi-session serving
+    relies on (many sessions' batches in flight at once)."""
 
     n_sims: int = 0  # designs evaluated (cache-served candidates included)
     n_dispatches: int = 0  # evaluate() calls
@@ -743,11 +743,14 @@ class JaxBatchedBackend:
     forces the kernel, ``0`` forbids it) and otherwise turns it on exactly
     when running on TPU.
 
-    Dispatch is a two-deep-capable pipeline: ``evaluate_candidates`` returns
-    after submission, host batch buffers are double-buffered per shape
-    bucket (on CPU, XLA may alias the numpy input rather than copy — the
-    *next* encode must not scribble over a buffer an in-flight dispatch is
-    still reading), and ``flush()`` drains whatever is outstanding."""
+    Dispatch is asynchronous and multi-dispatch-capable:
+    ``evaluate_candidates`` returns after submission, host batch buffers are
+    double-buffered per shape bucket (on CPU, XLA may alias the numpy input
+    rather than copy — the *next* encode must not scribble over a buffer an
+    in-flight dispatch is still reading), and ``flush()`` drains whatever is
+    outstanding. For the device-resident explorer, :meth:`run_chains`
+    prices a whole fused (R, K) chain block per dispatch
+    (`repro.core.device_explore`)."""
 
     name = "jax"
     async_dispatch = True  # dispatch returns before the device scores it
@@ -779,7 +782,7 @@ class JaxBatchedBackend:
             self.name = "jax_pallas"
         self._jit = None  # single kernel: shapes vary only via padded buckets
         # shape bucket -> two alternating host rows buffers (double-buffered
-        # so a pipelined encode never mutates what the device may still read)
+        # so a fresh encode never mutates what the device may still read)
         self._buffers: Dict[tuple, List[Optional[Dict[str, np.ndarray]]]] = {}
         self._bufsel: Dict[tuple, int] = {}
         # (bucket, buffer-slot) -> (base_ed, budget, dirty cells) enabling the
@@ -798,6 +801,9 @@ class JaxBatchedBackend:
         self._adopted: Dict[int, tuple] = {}
         self._shapes: set = set()
         self._stats = BackendStats()
+        # device-resident chain runner (device_explore) — built lazily so
+        # host-loop users never pay for it; shares the workload encoding
+        self._chains = None
         # static per-task tables for host-side SimResult reconstruction:
         # totals are design-independent; only the block subtype scales energy
         names = self._enc.names
@@ -840,7 +846,7 @@ class JaxBatchedBackend:
 
     def flush(self) -> None:
         """Drain the dispatch pipeline: block until every outstanding batch
-        has been scored (e.g. speculative batches the explorer abandoned)."""
+        has been scored (e.g. batches a finished session never consumed)."""
         import jax
 
         for batch in self._inflight:
@@ -848,6 +854,41 @@ class JaxBatchedBackend:
                 jax.block_until_ready(batch.out["scal"])
                 batch.consumed = True
         self._inflight.clear()
+
+    def chain_runner(self):
+        """The lazily-built :class:`~repro.core.device_explore.
+        DeviceChainRunner` this backend prices chain blocks with. Shares the
+        workload encoding and kernel selection; owns its own jit cache and
+        compile/fallback counters (the bench smoke guard asserts on them)."""
+        if self._chains is None:
+            from .device_explore import DeviceChainRunner
+
+            self._chains = DeviceChainRunner(
+                self.tdg, self.db, self._enc,
+                use_kernel=self._use_kernel, interpret=self._interpret,
+            )
+        return self._chains
+
+    def run_chains(self, req):
+        """Price one fused (R, K) exploration block
+        (:class:`~repro.core.device_explore.ChainRequest` in,
+        :class:`~repro.core.device_explore.ChainBlockResult` out) — the
+        device-resident counterpart of ``evaluate_candidates``: one dispatch
+        runs K accept/reject iterations for R chains. Counted in the backend
+        stats as R·K simulated designs in one dispatch."""
+        runner = self.chain_runner()
+        t0 = time.perf_counter()
+        res = runner.run_chains(
+            req.design, req.budget, r=req.r, k=req.k, seed=req.seed,
+            it0=req.it0, menu=req.menu, alpha=req.alpha,
+            temperature0=req.temperature0, temp_decay=req.temp_decay,
+            taboo_ttl=req.taboo_ttl, carry=req.carry,
+        )
+        self._stats.n_sims += req.r * req.k
+        self._stats.n_batched += req.r * req.k
+        self._stats.n_dispatches += 1
+        self._stats.wall_s += time.perf_counter() - t0
+        return res
 
     def adopt_encoding(self, handle: SimHandle) -> None:
         """Promote ``handle``'s row encoding to be its base design's cached
@@ -879,14 +920,15 @@ class JaxBatchedBackend:
 
     def _track_inflight(self, batch: _JaxBatch) -> None:
         # in-flight = dispatched, not yet consumed by the host. The device
-        # may already have finished — the pipeline claim is about SUBMISSION
+        # may already have finished — the overlap claim is about SUBMISSION
         # overlapping an un-consumed predecessor, which is what hides host
         # encode behind device scoring, so readiness does not retire a batch
-        # from the depth metric while the list stays short. Mis-speculated
-        # batches are never consumed; to bound the list WITHOUT voiding the
-        # flush() drain guarantee, overflow first sheds batches whose
-        # compute already finished (nothing left to drain) and only then
-        # applies backpressure (blocks) on the oldest stragglers.
+        # from the depth metric while the list stays short. Abandoned
+        # batches (a failed session's) are never consumed; to bound the
+        # list WITHOUT voiding the flush() drain guarantee, overflow first
+        # sheds batches whose compute already finished (nothing left to
+        # drain) and only then applies backpressure (blocks) on the oldest
+        # stragglers.
         alive = [b for b in self._inflight if not b.consumed]
         if len(alive) > 7:
             import jax
@@ -1100,8 +1142,8 @@ class JaxBatchedBackend:
         key = (b_pad, slots, n_noc)
         # double-buffered per bucket: the previous dispatch of this shape may
         # still be reading its (possibly zero-copy-aliased) host buffer, so a
-        # pipelined encode flips to the other one. Two suffice for the
-        # explorer's two-deep pipeline; a deeper pipeline would flush first.
+        # fresh encode flips to the other one. Two in-flight batches per
+        # bucket suffice; anything deeper would flush first.
         pair = self._buffers.get(key)
         if pair is None:
             pair = self._buffers[key] = [None, None]
@@ -1113,8 +1155,8 @@ class JaxBatchedBackend:
                 b_pad, len(self._enc.names), slots, slots,
                 len(self._enc.wl_names), n_noc,
             )
-        # reuse guard: two buffers cover the explorer's two-deep pipeline,
-        # but the protocol lets callers keep MORE dispatches un-consumed. If
+        # reuse guard: two buffers cover two un-consumed dispatches per
+        # bucket, but the protocol lets callers keep MORE un-consumed. If
         # the dispatch that last encoded into this slot might still be
         # reading it (CPU XLA may alias the numpy buffer zero-copy), wait
         # for its compute to finish before scribbling over its inputs.

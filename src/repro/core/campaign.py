@@ -21,14 +21,11 @@ workload-specific); per-run ``n_sims`` stays with each explorer. Passing a
 addressed on ``hash(encoding, workload, budget)`` and surfaces
 ``cache_*`` counters in the aggregate.
 
-The draining is itself pipelined: ``evaluate_candidates`` is non-blocking,
-and pipelined explorer coroutines answer a ``send`` with their next —
-possibly speculative — batch without forcing the one just dispatched, so
-round *k+1*'s host-side encode overlaps the device scoring of round *k*.
-Mis-speculated batches surface in ``ExplorationResult.n_sims_wasted`` (the
-shared backend's ``n_sims`` counts them; per-run ``n_sims`` does not), and
-``run()`` flushes every backend before reporting so no abandoned dispatch
-outlives the campaign.
+Runs whose config opts into device chain blocks (``chain_r > 0``) ride the
+same engine: their sessions yield :class:`~repro.core.device_explore.ChainRequest`
+blocks that the scheduler prices as one fused device dispatch each, instead
+of joining the shared candidate pack. ``run()`` flushes every backend before
+reporting so no abandoned dispatch outlives the campaign.
 """
 from __future__ import annotations
 
@@ -257,7 +254,7 @@ class Campaign:
             sessions.append(session)
             sched.admit(session)
         sched.run_until_idle()
-        # drain: abandoned speculative dispatches must not outlive the run
+        # drain: un-consumed dispatches must not outlive the run
         sched.flush()
 
         runs = {s.name: s.result for s in sessions}  # spec order preserved
@@ -339,7 +336,5 @@ class Campaign:
             "best_distance_mean": statistics.mean(dists),
             "best_distance_max": max(dists),
             "n_sims_total": sum(r.n_sims for r in runs.values()),
-            "n_sims_wasted_total": sum(r.n_sims_wasted for r in runs.values()),
-            "n_spec_hits_total": sum(r.n_spec_hits for r in runs.values()),
             "sim_wall_s_total": sum(r.sim_wall_s for r in runs.values()),
         }

@@ -1,0 +1,530 @@
+"""Device-resident exploration: fused accept loop + vmapped chain populations.
+
+The host-driven accept loop caps the explorer at ~1.2k it/s while the
+batched evaluator sustains ~19k evals/s (BENCH_simbackend.json): every SA
+iteration pays a dispatch, a device→host fitness transfer, and a Python
+accept/taboo update before the next candidate can even be proposed. This
+module moves the whole explore step onto the device:
+
+  * :class:`MoveTable` — ``propose_moves`` in packed array form. Every
+    shape-preserving candidate move (task → PE slot, task → MEM slot) is
+    enumerated up front as three flat int32 columns (``kind``/``task``/
+    ``dest``); the loop *samples* an index from this table on device
+    instead of materializing `MoveDelta` objects on host. Menus: the
+    ``naive_sa`` menu samples uniformly over the valid (non-no-op,
+    non-taboo) rows; the ``telemetry`` menu weights rows by the bottleneck
+    seconds of the task's *current* slot (the per-slot telemetry columns
+    the simulator already emits), so moves that relieve hot blocks are
+    proposed more often — FARSI's bottleneck-directed neighbour selection,
+    without a host round trip.
+  * A ``lax.scan`` accept loop: K iterations of propose → mutate encoding
+    → re-simulate → SA accept/reject run entirely on device. The carry is
+    the chain state (task→slot maps, current fitness, PRNG key, per-move
+    taboo TTLs, per-slot bottleneck telemetry of the incumbent design).
+  * Chain populations: the R chains ARE the batch axis of the simulator —
+    each scan step prices an (R,)-rows dict through the usual batched
+    path (Pallas kernel or XLA reference; ``kernels.phase_sim.chain``).
+    Per-chain PRNG keys are ``fold_in(base_key, chain_index)``, so chain
+    i's stream — and therefore its accepted-move sequence — is identical
+    at R=16 and R=256 (population size never perturbs a chain).
+
+One dispatch prices an (R, K) exploration block. The host calls
+:meth:`DeviceChainRunner.run_chains` once per block, reconciles the
+winning chain's final mapping onto the live design
+(:func:`~repro.core.moves.apply_mapping`), and only the winner pays the
+usual single decode. :meth:`DeviceChainRunner.run_chains_host` is the
+same compiled step driven one iteration per dispatch — the classic
+host-loop regime — which makes it both the parity oracle (bit-identical
+accepted-move sequences, same threefry draws, same f32 accept math) and
+the speedup baseline the bench reports against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.phase_sim.chain import resimulate_chains
+from .budgets import Budget
+from .database import HardwareDatabase
+from .design import Design
+from .moves import MoveDelta, apply_mapping, mapping_delta
+from .phase_sim_jax import (
+    BIG,
+    EncodedDesign,
+    EncodedWorkload,
+    alloc_rows,
+    fill_budget,
+    fill_row,
+)
+from .tdg import TaskGraph
+
+__all__ = [
+    "MENUS",
+    "MoveTable",
+    "ChainRequest",
+    "ChainBlockResult",
+    "DeviceChainRunner",
+    "copy_carry",
+    "reconcile_mapping",
+]
+
+MENUS = ("naive_sa", "telemetry")
+
+
+def reconcile_mapping(
+    design: Design,
+    res: "ChainBlockResult",
+    g: TaskGraph,
+    db: HardwareDatabase,
+    enc: EncodedWorkload,
+    ed: Optional[EncodedDesign] = None,
+    delta: Optional[MoveDelta] = None,
+) -> Dict[str, Dict[str, str]]:
+    """Apply the winning chain's final mapping onto ``design`` in place
+    (slot indices → block names via the encoding's slot dicts). Returns the
+    changed assignments — empty dicts mean the block improved nothing over
+    the incumbent mapping."""
+    if ed is None:
+        ed = EncodedDesign.of(design, g, db, enc)
+    inv_pe = {s: n for n, s in ed.pe_slot.items()}
+    inv_mem = {s: n for n, s in ed.mem_slot.items()}
+    w = res.winner
+    ch_pe: Dict[str, str] = {}
+    ch_mem: Dict[str, str] = {}
+    for i, name in enumerate(enc.names):
+        s = int(res.task_pe[w, i])
+        if s != int(ed.task_pe[i]):
+            ch_pe[name] = inv_pe[s]
+        s = int(res.task_mem[w, i])
+        if s != int(ed.task_mem[i]):
+            ch_mem[name] = inv_mem[s]
+    if ch_pe or ch_mem:
+        apply_mapping(design, ch_pe, ch_mem, delta)
+    return {"task_pe": ch_pe, "task_mem": ch_mem}
+
+
+def copy_carry(carry: Optional[tuple]) -> Optional[tuple]:
+    """Deep-copy a chain-block carry (tuple of host arrays) so policy
+    checkpoints round-trip bit-exactly even if the live carry advances."""
+    if carry is None:
+        return None
+    return tuple(np.array(x, copy=True) for x in carry)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoveTable:
+    """``propose_moves`` as packed arrays: row m is the candidate move
+    "re-map task ``task[m]`` onto slot ``dest[m]``" (``kind[m]`` = 0 → PE
+    slot, 1 → MEM slot). Shape-preserving by construction — no block is
+    added, removed, or re-knobbed — so every row stays inside one encoding
+    shape and the whole table is samplable inside a jitted loop. Rows whose
+    destination equals the task's *current* slot are masked dynamically
+    (the current slot lives in the loop carry, not the table)."""
+
+    kind: np.ndarray  # (M,) int32: 0 = task→PE-slot, 1 = task→MEM-slot
+    task: np.ndarray  # (M,) int32 task index (EncodedWorkload.names order)
+    dest: np.ndarray  # (M,) int32 destination slot (class per ``kind``)
+
+    @property
+    def n_moves(self) -> int:
+        return int(self.kind.shape[0])
+
+    @staticmethod
+    def of(ed: EncodedDesign, enc: EncodedWorkload) -> "MoveTable":
+        """Enumerate all T·(S_pe + S_mem) single-task migrates of ``ed``."""
+        t = len(enc.names)
+        s_pe = int(ed.pe_peak.shape[0])
+        s_mem = int(ed.mem_bw.shape[0])
+        kind = np.concatenate(
+            [np.zeros(t * s_pe, np.int32), np.ones(t * s_mem, np.int32)]
+        )
+        task = np.concatenate(
+            [
+                np.repeat(np.arange(t, dtype=np.int32), s_pe),
+                np.repeat(np.arange(t, dtype=np.int32), s_mem),
+            ]
+        )
+        dest = np.concatenate(
+            [
+                np.tile(np.arange(s_pe, dtype=np.int32), t),
+                np.tile(np.arange(s_mem, dtype=np.int32), t),
+            ]
+        )
+        return MoveTable(kind=kind, task=task, dest=dest)
+
+    def delta_of(
+        self, m: int, enc: EncodedWorkload, ed: EncodedDesign
+    ) -> MoveDelta:
+        """Unpack row ``m`` into an ordinary :class:`MoveDelta` (absolute
+        task→block-name mapping) — the bridge back to the host move system."""
+        tname = enc.names[int(self.task[m])]
+        d = int(self.dest[m])
+        if int(self.kind[m]) == 0:
+            inv = {s: n for n, s in ed.pe_slot.items()}
+            return mapping_delta({tname: inv[d]}, {})
+        inv = {s: n for n, s in ed.mem_slot.items()}
+        return mapping_delta({}, {tname: inv[d]})
+
+
+@dataclasses.dataclass
+class ChainRequest:
+    """One (R, K) exploration block the explorer asks its backend to price.
+
+    Yielded by ``Explorer.run_chain_steps`` in place of a candidate list;
+    the serve scheduler (or ``Explorer.run_chains``) answers it with the
+    :class:`ChainBlockResult` of ``backend.run_chains``. ``carry`` resumes
+    the chain population from a previous block (or a ``device_sa`` policy
+    checkpoint); ``it0`` keeps the SA temperature schedule global across
+    blocks."""
+
+    design: Design
+    budget: Budget
+    r: int
+    k: int
+    seed: int = 0
+    it0: int = 0
+    menu: str = "naive_sa"
+    alpha: float = 0.05
+    temperature0: float = 0.05
+    temp_decay: float = 0.997
+    taboo_ttl: int = 5
+    carry: Optional[tuple] = None
+
+
+@dataclasses.dataclass
+class ChainBlockResult:
+    """Host-side view of one priced (R, K) block. ``carry`` is the full
+    device state pulled back as numpy (the checkpointable object); the
+    per-step traces cover every chain so parity/trajectory tests can replay
+    any of them."""
+
+    task_pe: np.ndarray  # (R, T) final task→PE-slot map per chain
+    task_mem: np.ndarray  # (R, T) final task→MEM-slot map per chain
+    fitness: np.ndarray  # (R,) final Eq.-7 fitness per chain
+    move_idx: np.ndarray  # (R, K) sampled MoveTable row per step
+    accepted: np.ndarray  # (R, K) bool accept/reject per step
+    fit_trace: np.ndarray  # (R, K) incumbent fitness after each step
+    carry: tuple  # numpy carry pytree (resume / checkpoint)
+    winner: int  # argmin-fitness chain index
+    wall_s: float  # dispatch wall-clock (including device sync)
+    n_moves: int  # MoveTable rows (M)
+
+    def seq(self, chain: int = 0) -> List[Tuple[int, int]]:
+        """(move_idx, accepted) sequence of one chain — the parity object."""
+        return [
+            (int(m), int(a))
+            for m, a in zip(self.move_idx[chain], self.accepted[chain])
+        ]
+
+
+class DeviceChainRunner:
+    """Owns the jitted (R, K) chain blocks for one workload.
+
+    The jit cache is keyed on everything that changes the traced program:
+    (R, K, slot/chain counts, menu, SA constants). ``n_compiles`` counts
+    distinct cache entries — the smoke guard asserts the whole bench run
+    stays within a handful. There is no fallback path: a design the flat
+    encoding cannot host (``UnsupportedDesignError``) fails loudly instead
+    of silently degrading to a host loop, so ``n_fallback`` is 0 by
+    construction and asserted in the bench."""
+
+    def __init__(
+        self,
+        g: TaskGraph,
+        db: HardwareDatabase,
+        enc: Optional[EncodedWorkload] = None,
+        *,
+        use_kernel: bool = False,
+        interpret: bool = False,
+    ):
+        self.g = g
+        self.db = db
+        self.enc = enc if enc is not None else EncodedWorkload.of(g)
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self._blocks: Dict[tuple, object] = {}
+        self.n_compiles = 0
+        self.n_fallback = 0
+        self.n_dispatches = 0
+        self.n_chain_steps = 0
+
+    # -- host-side staging -------------------------------------------------
+    def _row0(self, ed: EncodedDesign, budget: Budget, alpha: float):
+        t = len(self.enc.names)
+        rows = alloc_rows(
+            1, t, int(ed.pe_peak.shape[0]), int(ed.mem_bw.shape[0]),
+            len(self.enc.wl_names), int(ed.noc_bw.shape[0]),
+        )
+        fill_row(rows, 0, ed)
+        fill_budget(
+            rows, 0, self.enc,
+            budget.latency_s, budget.power_w, budget.area_mm2, alpha,
+        )
+        return {k: v[0] for k, v in rows.items()}
+
+    def _accel_table(self, design: Design, ed: EncodedDesign) -> np.ndarray:
+        """(T, S_pe) effective acceleration of task t if mapped to PE slot p
+        — ``pe_accel`` is a per-task column, so a device migrate re-gathers
+        it from this table instead of asking the hardware DB mid-loop."""
+        t = len(self.enc.names)
+        tab = np.ones((t, int(ed.pe_peak.shape[0])), np.float32)
+        tasks = self.g.tasks
+        for name, s in ed.pe_slot.items():
+            b = design.blocks[name]
+            if b.subtype == "acc" and b.hardened_for in self.enc.index:
+                k = self.enc.index[b.hardened_for]
+                tab[k, s] = self.db.a_peak(
+                    b.hardened_for, tasks[b.hardened_for].llp, b.unroll
+                )
+        return tab
+
+    def fresh_carry(self, ed: EncodedDesign, r: int, seed: int) -> tuple:
+        """Initial chain-population carry: every chain starts from the live
+        design with fitness BIG (the first finite candidate is accepted,
+        exactly like the host explorer pricing its seed), zero taboo, zero
+        telemetry, and key ``fold_in(PRNGKey(seed), chain_index)`` — the
+        per-chain stream is a function of (seed, chain) only, never of R."""
+        t = len(self.enc.names)
+        m = t * (int(ed.pe_peak.shape[0]) + int(ed.mem_bw.shape[0]))
+        base = jax.random.PRNGKey(seed)
+        keys = np.asarray(
+            jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(r))
+        )
+        return (
+            np.broadcast_to(ed.task_pe, (r, t)).copy(),
+            np.broadcast_to(ed.task_mem, (r, t)).copy(),
+            np.full((r,), BIG, np.float32),
+            keys,
+            np.zeros((r, m), np.int32),
+            np.zeros((r, int(ed.pe_peak.shape[0])), np.float32),
+            np.zeros((r, int(ed.mem_bw.shape[0])), np.float32),
+        )
+
+    # -- the fused block ---------------------------------------------------
+    def _block(
+        self, r: int, k: int, ed: EncodedDesign, menu: str,
+        t0: float, decay: float, ttl: int,
+    ):
+        key = (
+            r, k, int(ed.pe_peak.shape[0]), int(ed.mem_bw.shape[0]),
+            int(ed.noc_bw.shape[0]), menu, float(t0), float(decay), int(ttl),
+        )
+        fn = self._blocks.get(key)
+        if fn is None:
+            fn = self._build_block(r, k, menu, float(t0), float(decay), int(ttl))
+            self._blocks[key] = fn
+            self.n_compiles += 1
+        return fn
+
+    def _build_block(
+        self, r: int, k: int, menu: str, t0: float, decay: float, ttl: int
+    ):
+        enc = self.enc
+        use_kernel, interpret = self.use_kernel, self.interpret
+        t = len(enc.names)
+        tidx = jnp.arange(t)
+        ridx = jnp.arange(r)
+        t0f, decayf = jnp.float32(t0), jnp.float32(decay)
+
+        def block(carry, it0, row0, accel, kind, task, dest):
+            # static (non-mapping) row fields broadcast once per block; the
+            # carry supplies the three mapping columns every iteration
+            rows_static = {
+                n: jnp.broadcast_to(v, (r,) + jnp.shape(v))
+                for n, v in row0.items()
+                if n not in ("task_pe", "task_mem", "pe_accel")
+            }
+
+            def step(c, it):
+                task_pe, task_mem, fit, key, taboo, pe_b, mem_b = c
+                taboo = jnp.maximum(taboo - 1, 0)
+                keys = jax.vmap(lambda kk: jax.random.split(kk, 3))(key)
+                key, k_move, k_acc = keys[:, 0], keys[:, 1], keys[:, 2]
+                # sample one MoveTable row per chain (mask no-ops + taboo)
+                cur = jnp.where(
+                    kind[None, :] == 0, task_pe[:, task], task_mem[:, task]
+                )
+                valid = (dest[None, :] != cur) & (taboo == 0)
+                if menu == "telemetry":
+                    w = jnp.where(
+                        kind[None, :] == 0,
+                        jnp.take_along_axis(pe_b, task_pe[:, task], axis=1),
+                        jnp.take_along_axis(mem_b, task_mem[:, task], axis=1),
+                    ) + jnp.float32(1e-6)
+                    logw = jnp.log(w)
+                else:
+                    logw = jnp.zeros((r, kind.shape[0]), jnp.float32)
+                logits = jnp.where(valid, logw, jnp.float32(-1e30))
+                m = jax.vmap(jax.random.categorical)(k_move, logits)
+                # apply the move to the carried mapping columns
+                tsel = task[m]
+                is_pe = kind[m] == 0
+                new_pe = task_pe.at[ridx, tsel].set(
+                    jnp.where(is_pe, dest[m], task_pe[ridx, tsel])
+                )
+                new_mem = task_mem.at[ridx, tsel].set(
+                    jnp.where(~is_pe, dest[m], task_mem[ridx, tsel])
+                )
+                rows = dict(rows_static)
+                rows["task_pe"] = new_pe
+                rows["task_mem"] = new_mem
+                rows["pe_accel"] = accel[tidx[None, :], new_pe]
+                res = resimulate_chains(
+                    enc, rows, use_kernel=use_kernel, interpret=interpret
+                )
+                f_new = res["fitness"].astype(jnp.float32)
+                # SA accept, f32 mirror of PolicyBase.accept
+                temp = t0f * decayf ** it.astype(jnp.float32)
+                u = jax.vmap(
+                    lambda kk: jax.random.uniform(kk, dtype=jnp.float32)
+                )(k_acc)
+                ok = jnp.isfinite(f_new) & (
+                    (f_new < fit)
+                    | (
+                        (temp > 0)
+                        & (
+                            u
+                            < jnp.exp(
+                                -(f_new - fit)
+                                / jnp.maximum(temp, jnp.float32(1e-9))
+                            )
+                        )
+                    )
+                )
+                task_pe = jnp.where(ok[:, None], new_pe, task_pe)
+                task_mem = jnp.where(ok[:, None], new_mem, task_mem)
+                fit = jnp.where(ok, f_new, fit)
+                taboo = jnp.where(
+                    ok[:, None], taboo, taboo.at[ridx, m].set(jnp.int32(ttl))
+                )
+                pe_b = jnp.where(
+                    ok[:, None], res["pe_bneck_s"].astype(jnp.float32), pe_b
+                )
+                mem_b = jnp.where(
+                    ok[:, None], res["mem_bneck_s"].astype(jnp.float32), mem_b
+                )
+                c = (task_pe, task_mem, fit, key, taboo, pe_b, mem_b)
+                return c, (m.astype(jnp.int32), ok, fit)
+
+            its = it0 + jnp.arange(k, dtype=jnp.int32)
+            carry, (mv, acc, ft) = jax.lax.scan(step, carry, its)
+            return carry, (mv.T, acc.T, ft.T)
+
+        return jax.jit(block)
+
+    # -- entry points ------------------------------------------------------
+    def run_chains(
+        self,
+        design: Design,
+        budget: Budget,
+        *,
+        r: int,
+        k: int,
+        seed: int = 0,
+        it0: int = 0,
+        menu: str = "naive_sa",
+        alpha: float = 0.05,
+        temperature0: float = 0.05,
+        temp_decay: float = 0.997,
+        taboo_ttl: int = 5,
+        carry: Optional[tuple] = None,
+    ) -> ChainBlockResult:
+        """Price one fused (R, K) exploration block in a single dispatch."""
+        if menu not in MENUS:
+            raise ValueError(f"unknown device move menu: {menu!r}")
+        ed = EncodedDesign.of(design, self.g, self.db, self.enc)
+        table = MoveTable.of(ed, self.enc)
+        row0 = self._row0(ed, budget, alpha)
+        accel = self._accel_table(design, ed)
+        fn = self._block(r, k, ed, menu, temperature0, temp_decay, taboo_ttl)
+        if carry is None:
+            carry = self.fresh_carry(ed, r, seed)
+        t_start = time.perf_counter()
+        out_carry, (mv, acc, ft) = fn(
+            carry, jnp.int32(it0), row0, accel,
+            table.kind, table.task, table.dest,
+        )
+        out_carry = tuple(np.asarray(x) for x in out_carry)
+        mv, acc, ft = np.asarray(mv), np.asarray(acc), np.asarray(ft)
+        wall = time.perf_counter() - t_start
+        self.n_dispatches += 1
+        self.n_chain_steps += r * k
+        return ChainBlockResult(
+            task_pe=out_carry[0],
+            task_mem=out_carry[1],
+            fitness=out_carry[2],
+            move_idx=mv,
+            accepted=acc,
+            fit_trace=ft,
+            carry=out_carry,
+            winner=int(np.argmin(out_carry[2])),
+            wall_s=wall,
+            n_moves=table.n_moves,
+        )
+
+    def run_chains_host(
+        self,
+        design: Design,
+        budget: Budget,
+        *,
+        r: int = 1,
+        n_steps: int,
+        seed: int = 0,
+        it0: int = 0,
+        menu: str = "naive_sa",
+        alpha: float = 0.05,
+        temperature0: float = 0.05,
+        temp_decay: float = 0.997,
+        taboo_ttl: int = 5,
+        carry: Optional[tuple] = None,
+    ) -> ChainBlockResult:
+        """The host-driven reference accept loop: the SAME compiled chain
+        step, dispatched K=1 at a time with the carry pulled back to host
+        between iterations — one dispatch + one round trip per SA step,
+        the regime of the classic host explorer. Because it shares the
+        block body (same threefry draws, same f32 accept math), a fused
+        K-step block must replay it bit-for-bit; this is the parity oracle
+        and the speedup baseline."""
+        t_start = time.perf_counter()
+        mvs, accs, fts = [], [], []
+        res = None
+        for i in range(n_steps):
+            res = self.run_chains(
+                design, budget, r=r, k=1, seed=seed, it0=it0 + i, menu=menu,
+                alpha=alpha, temperature0=temperature0, temp_decay=temp_decay,
+                taboo_ttl=taboo_ttl, carry=carry,
+            )
+            carry = res.carry  # numpy — the per-iteration host round trip
+            mvs.append(res.move_idx)
+            accs.append(res.accepted)
+            fts.append(res.fit_trace)
+        wall = time.perf_counter() - t_start
+        return ChainBlockResult(
+            task_pe=res.task_pe,
+            task_mem=res.task_mem,
+            fitness=res.fitness,
+            move_idx=np.concatenate(mvs, axis=1),
+            accepted=np.concatenate(accs, axis=1),
+            fit_trace=np.concatenate(fts, axis=1),
+            carry=res.carry,
+            winner=res.winner,
+            wall_s=wall,
+            n_moves=res.n_moves,
+        )
+
+    def reconcile(
+        self,
+        design: Design,
+        res: ChainBlockResult,
+        ed: Optional[EncodedDesign] = None,
+        delta: Optional[MoveDelta] = None,
+    ) -> Dict[str, Dict[str, str]]:
+        """:func:`reconcile_mapping` against this runner's workload."""
+        return reconcile_mapping(
+            design, res, self.g, self.db, self.enc, ed=ed, delta=delta
+        )

@@ -15,7 +15,7 @@ the 5-tuple (Metric, Direction, Task, Block, Move):
 
 All of that reasoning lives in the pluggable **policy layer**
 (`repro.core.policy`): the Explorer owns the mechanics — neighbour
-materialization, the speculative dispatch pipeline, bookkeeping — and
+materialization, dispatch bookkeeping, the device chain-block driver — and
 delegates every selection and accept decision to the
 :class:`~repro.core.policy.HeuristicPolicy` named by
 ``ExplorerConfig.policy`` (default: derived from the historical
@@ -29,6 +29,12 @@ If no neighbour improves, the failed (task, block) target goes on the
 policy's short taboo list so the next iteration targets "the task/block
 with the next highest distance" (§3.4), and classic SA temperature
 occasionally accepts a worse design.
+
+For throughput-bound searches the host loop itself is the bottleneck (one
+dispatch + one round trip per iteration); :meth:`Explorer.run_chains`
+drives the device-resident formulation instead — fused (R, K) accept-loop
+blocks priced in one dispatch each (`repro.core.device_explore`), with the
+winning chain reconciled onto the live design between blocks.
 """
 from __future__ import annotations
 
@@ -44,6 +50,7 @@ from .budgets import Budget, Distance
 from .codesign import CodesignLedger, FocusRecord
 from .database import HardwareDatabase
 from .design import Design
+from .device_explore import ChainBlockResult, ChainRequest, reconcile_mapping
 from .moves import MoveDelta, MoveSpec, apply_move
 from .phase_sim import SimResult
 from .policy import AWARENESS_POLICY, Focus, HeuristicPolicy, make_policy
@@ -51,20 +58,11 @@ from .tdg import TaskGraph, workload_of
 
 AWARENESS_LEVELS = ("sa", "task", "task_block", "farsi")
 
-# adaptive-pipeline speculation window: if the first SPEC_WINDOW speculative
-# batches all miss (zero spec hits), auto-disable speculation for the rest
-# of the run — a speculative batch costs real encode + device time, and a
-# 0%-hit-rate pipeline is pure overhead (the BENCH_simbackend regression
-# this guards: pipelined audio ran *slower* than non-pipelined with
-# n_spec_hits == 0)
-SPEC_WINDOW = 8
-
 
 @dataclasses.dataclass
 class _Sel:
     """One dispatched iteration's selection context (the focus and the
-    candidates a resolution needs back after its batch was scored — possibly
-    one full iteration later, when the batch was dispatched speculatively)."""
+    candidates a resolution needs back after its batch was scored)."""
 
     it: int
     focus: Focus
@@ -89,17 +87,14 @@ class ExplorerConfig:
     codesign: bool = True  # False => fixate focus until the focused metric is met
     taboo_ttl: int = 5
     backend: str = "python"  # SimulatorBackend registry name (backend.BACKENDS)
-    # two-deep speculative dispatch pipeline: generate + encode batch i+1
-    # (assuming batch i is rejected) while the device scores batch i.
-    #   None  — auto: on async backends, speculate ADAPTIVELY (only while a
-    #           running estimate says rejection is the likely outcome — in
-    #           accept-heavy phases a speculative batch is almost always
-    #           thrown away, so speculating there is pure overhead);
-    #   True  — always speculate (the stall-guard / identity-test mode);
-    #   False — off.
-    # Every mode produces the same accepted-move sequence under a fixed
-    # seed — speculation rolls its rng/policy state back on a miss.
-    pipeline: Optional[bool] = None
+    # device-resident chain blocks (run_chains / serve chain-batched ticks):
+    # chain_r > 0 opts the search into the fused accept loop — R independent
+    # chains × K fused iterations per dispatch. chain_menu picks the device
+    # move menu ("" derives it from the policy's ``device_menu``; see
+    # device_explore.MENUS).
+    chain_r: int = 0
+    chain_k: int = 32
+    chain_menu: str = ""
 
 
 @dataclasses.dataclass
@@ -109,20 +104,15 @@ class ExplorationResult:
     best_distance: Distance
     converged: bool
     iterations: int
-    n_sims: int  # committed evaluations (mis-speculated batches excluded)
+    n_sims: int  # committed evaluations this search dispatched
     wall_s: float
     history: List[dict]
     ledger: CodesignLedger
     backend_name: str = "python"
     policy_name: str = "farsi"
     sim_wall_s: float = 0.0  # time inside backend.evaluate for this run
-    pipelined: bool = False  # ran with the speculative dispatch pipeline
-    n_spec_hits: int = 0  # speculative batches that became the next iteration
-    n_sims_wasted: int = 0  # speculated evaluations discarded on accept
-    # the adaptive pipeline observed zero spec hits over its first
-    # SPEC_WINDOW speculative batches and shut speculation off for the rest
-    # of the run (pipeline=None only; forced pipeline=True never disables)
-    spec_auto_disabled: bool = False
+    chained: bool = False  # ran as device-resident (R, K) chain blocks
+    chain_r: int = 0  # chain population size (chained runs only)
 
     def iterations_to_budget(self, cap: Optional[int] = None) -> float:
         """Iterations this run needed to reach budget — the policy-comparison
@@ -153,20 +143,8 @@ class Explorer:
             config.policy or AWARENESS_POLICY[config.awareness]
         )
         self.policy.bind(tdg, db, budget, config, self.rng)
-        self.n_sims = 0  # committed designs this run submitted (backend stats
-        # aggregate across sharers AND count mis-speculated batches; this
-        # stays per-exploration — and per-commit — under Campaign)
-        self.n_sims_wasted = 0  # speculated evaluations discarded on accept
-        self.n_spec_hits = 0
-        if config.pipeline is None:  # auto: needs an asynchronous dispatch
-            self._pipeline = (
-                "adaptive" if getattr(self.backend, "async_dispatch", False) else "off"
-            )
-        else:
-            self._pipeline = "always" if config.pipeline else "off"
-        self._p_rej = 0.0  # EW estimate of the rejection rate (adaptive gate)
-        self._spec_tries = 0  # speculative batches actually dispatched
-        self._spec_dead = False  # adaptive auto-disable latched (0-hit window)
+        self.n_sims = 0  # designs this run submitted (backend stats aggregate
+        # across sharers; this stays per-exploration under Campaign)
         self.n_nonfinite = 0  # candidate rows rejected for NaN/Inf fitness
         # crash-restart support (serve layer): when enabled, each committed
         # loop top snapshots (rng state, policy checkpoint, iteration) so a
@@ -175,8 +153,8 @@ class Explorer:
         self._restart_ck: Optional[tuple] = None
         # session-yield point (serve.Session): called whenever an accepted
         # move improves the best-so-far design, with a small event dict —
-        # accept-path state is never rolled back by speculation, so every
-        # event is a committed improvement
+        # always from committed accept-path state, so every event is a
+        # committed improvement
         self.on_improve: Optional[Callable[[dict], None]] = None
 
     # ---- neighbour generation --------------------------------------------
@@ -244,24 +222,15 @@ class Explorer:
         full ``SimResult`` decode is paid once, at exploration end, for the
         returned best design.
 
-        With ``pipeline`` on (auto-enabled on async backends) the coroutine
-        runs a TWO-DEEP SPECULATIVE PIPELINE: after receiving batch *i*'s
-        (lazy) handles it does NOT touch them — it first speculates that
-        batch *i* will be *rejected* (the steady-state outcome of a cooling
-        anneal), generates + yields batch *i+1* under that assumption, and
-        only then forces batch *i*'s one ``(B,)`` fitness pull. The driver
-        encodes and dispatches batch *i+1* while the device is still scoring
-        batch *i*, so host work hides behind device compute. On a miss (the
-        move was accepted) the speculated rng/policy state is rolled back
-        and batch *i+1* is regenerated from the true state — the
-        accepted-move sequence is therefore IDENTICAL to the unpipelined
-        coroutine under a fixed seed (asserted in tests); the only cost is
-        the discarded device batch, accounted in ``n_sims_wasted``.
+        This is the HOST accept loop: one yield (one dispatch, one round
+        trip) per SA iteration. Searches that only need the shape-preserving
+        move menu should prefer :meth:`run_chains`, which fuses K iterations
+        per dispatch on device and prices R chains at once.
 
         ``run()`` drives it against ``self.backend``; `Campaign` drives many
         explorers' generators in lockstep so one dispatch prices the pending
-        neighbours of *all* live explorations (speculative or not). The
-        ``StopIteration`` value is the :class:`ExplorationResult`."""
+        neighbours of *all* live explorations. The ``StopIteration`` value
+        is the :class:`ExplorationResult`."""
         t0 = time.perf_counter()
         cur = initial or Design.base(self.tdg)
         pol = self.policy
@@ -290,10 +259,9 @@ class Explorer:
             """The head of one serial iteration, from the CURRENT search
             state: policy taboo decay → focus selection → move proposal →
             neighbour generation; iterations yielding no neighbours are
-            taboo'd and skipped exactly as the serial loop's ``continue``
-            did. Returns None once the iteration budget is spent or the
-            search converged (convergence only moves on accept, so a
-            reject-speculated call sees the truth)."""
+            taboo'd and skipped. Returns None once the iteration budget is
+            spent or the search converged (convergence only moves on
+            accept)."""
             while it < max_it and not cur_dist.converged():
                 pol.tick()
                 focus = pol.select_focus(cur, cur_dist, cur_view)
@@ -315,8 +283,7 @@ class Explorer:
             `budgets.distance` on Python), so a rejected iteration never
             reads anything else. Only an accepted winner yields its
             telemetry view for the next selection. Commits the accept-path
-            state change; the reject-path taboo add is the caller's (it is
-            part of the speculated continuation)."""
+            state change; the reject-path taboo add is the caller's."""
             nonlocal cur_view, cur_dist, best_design, best_handle, best_dist, best_stale
             assert len(handles) == len(sel.neighbors)
             # stable argmin preserves the precedence order on ties; the
@@ -397,70 +364,22 @@ class Explorer:
             )
             return accept
 
-        mode = self._pipeline
         sel = select_from(0)
         if sel is not None:
             self.n_sims += len(sel.neighbors)
             handles = yield sel.neighbors
         while sel is not None:
             # loop-top state is always the committed truth: cur only mutates
-            # on accept, and both speculation continuations land here with
-            # rng/policy either rolled back (miss) or confirmed real (hit) —
-            # the one safe point to snapshot for crash-restart
+            # on accept — the one safe point to snapshot for crash-restart
             if self.track_restart:
                 self._restart_ck = (self.rng.getstate(), pol.checkpoint(), sel.it)
-            # the SA accept draw: consumed unconditionally and BEFORE the
-            # next iteration's selection draws, so the rng stream is the
-            # same whether that selection happens now (speculation) or
-            # after resolution (serial)
+            # the SA accept draw: consumed BEFORE the next iteration's
+            # selection draws, so the rng stream is a pure function of the
+            # accepted-move sequence
             u = self.rng.random()
-
-            # ---- speculate REJECT: select + dispatch batch i+1 while the
-            # device is still scoring batch i. The adaptive gate only
-            # speculates when rejection is the likely outcome — a wasted
-            # speculative batch costs real encode + device time, so in
-            # accept-heavy (early, improving) phases the serial path wins.
-            # the zero-value guard: an adaptive pipeline whose first
-            # SPEC_WINDOW speculative batches all missed latches _spec_dead
-            # and stops speculating — rejection-rate alone said "speculate"
-            # while the observed hit rate said the batches were pure waste
-            speculate = mode == "always" or (
-                mode == "adaptive" and not self._spec_dead and self._p_rej >= 0.5
-            )
-            spec = spec_handles = None
-            if speculate:
-                ck = (self.rng.getstate(), pol.checkpoint())
-                pol.mark_failed(sel.focus.task, sel.focus.block)
-                spec = select_from(sel.it + 1)
-                if spec is not None:
-                    self._spec_tries += 1
-                    spec_handles = yield spec.neighbors  # in flight behind batch i
-
             accepted = resolve(sel, handles, u)  # first host pull forces batch i
-            self._p_rej = 0.75 * self._p_rej + (0.0 if accepted else 0.25)
-            if speculate and not accepted:
-                # hit: batch i+1 was encoded while batch i was scored and is
-                # (likely) already scored itself — commit the speculation
-                if spec is None:
-                    break
-                self.n_spec_hits += 1
-                self.n_sims += len(spec.neighbors)
-                sel, handles = spec, spec_handles
-                continue
-            if speculate:
-                # miss: the accepted move invalidated the speculated state —
-                # roll back rng/policy state and regenerate from the truth
-                self.rng.setstate(ck[0])
-                pol.restore(ck[1])
-                if spec is not None:
-                    self.n_sims_wasted += len(spec.neighbors)
-            elif not accepted:
+            if not accepted:
                 pol.mark_failed(sel.focus.task, sel.focus.block)
-            if (
-                mode == "adaptive" and not self._spec_dead
-                and self.n_spec_hits == 0 and self._spec_tries >= SPEC_WINDOW
-            ):
-                self._spec_dead = True
             sel = select_from(sel.it + 1)
             if sel is None:
                 break
@@ -487,10 +406,6 @@ class Explorer:
             ledger=pol.ledger,
             backend_name=self.backend.name,
             policy_name=pol.name,
-            pipelined=self._pipeline != "off",
-            n_spec_hits=self.n_spec_hits,
-            n_sims_wasted=self.n_sims_wasted,
-            spec_auto_disabled=self._spec_dead,
         )
 
     def restart_state(self) -> Optional[dict]:
@@ -514,8 +429,7 @@ class Explorer:
     def run(self, initial: Optional[Design] = None) -> ExplorationResult:
         """Drive :meth:`run_steps` against ``self.backend`` — exactly one
         ``backend.evaluate_candidates`` call per search iteration (plus one
-        for the initial design, plus any mis-speculated batches when the
-        pipeline is on). Drains abandoned speculative dispatches on exit."""
+        for the initial design). Drains any in-flight dispatch on exit."""
         gen = self.run_steps(initial)
         sim_wall = 0.0
         try:
@@ -525,6 +439,141 @@ class Explorer:
                 handles = self.backend.evaluate_candidates(pending)
                 sim_wall += time.perf_counter() - t0
                 pending = gen.send(handles)
+        except StopIteration as stop:
+            flush = getattr(self.backend, "flush", None)
+            if flush is not None:
+                flush()
+            result: ExplorationResult = stop.value
+            result.sim_wall_s = sim_wall
+            return result
+
+    # ---- device-resident chain blocks -------------------------------------
+    def run_chain_steps(
+        self, initial: Optional[Design] = None
+    ) -> Generator[object, list, ExplorationResult]:
+        """Chain-batched coroutine form of the search: instead of yielding a
+        candidate list per SA iteration, yields one :class:`ChainRequest`
+        per fused (R, K) device block and is resumed with the matching
+        :class:`ChainBlockResult` (wrapped in a one-element list, so the
+        serve ``Session`` send protocol is unchanged). Between blocks the
+        winning chain's final mapping is reconciled onto the live design and
+        the device carry is stored on the policy (``device_sa`` checkpoints
+        it, so crash restart resumes mid-population). The FINAL yield is an
+        ordinary one-candidate batch: the winner pays the usual single
+        decode, and nothing else in the search is ever decoded."""
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        r = max(1, cfg.chain_r)
+        k = max(1, cfg.chain_k)
+        menu = cfg.chain_menu or getattr(self.policy, "device_menu", "naive_sa")
+        cur = initial or Design.base(self.tdg)
+        pol = self.policy
+        self._cur = cur
+        carry = getattr(pol, "device_carry", None)
+        history: List[dict] = []
+        it, max_it = 0, cfg.max_iterations
+        res: Optional[ChainBlockResult] = None
+        while it < max_it:
+            kk = min(k, max_it - it)
+            req = ChainRequest(
+                design=cur, budget=self.budget, r=r, k=kk, seed=cfg.seed,
+                it0=it, menu=menu, alpha=cfg.alpha_met,
+                temperature0=cfg.temperature0, temp_decay=cfg.temp_decay,
+                taboo_ttl=cfg.taboo_ttl, carry=carry,
+            )
+            (res,) = yield req
+            self.n_sims += r * kk
+            carry = res.carry
+            if hasattr(pol, "device_carry"):
+                pol.device_carry = carry
+            if self.track_restart:
+                self._restart_ck = (self.rng.getstate(), pol.checkpoint(), it + kk)
+            w = res.winner
+            for s in range(kk):
+                history.append(
+                    {
+                        "iteration": it + s,
+                        "n_sims": self.n_sims,
+                        # device path: the trace is the winner chain's Eq.-7
+                        # fitness (its city-block distance is only known
+                        # after the final decode)
+                        "fitness": float(res.fit_trace[w, s]),
+                        "move": "chain_migrate",
+                        "accepted": bool(res.accepted[w, s]),
+                        "wall_s": time.perf_counter() - t0,
+                    }
+                )
+            it += kk
+            changed = reconcile_mapping(
+                cur, res, self.tdg, self.db, self._chain_enc()
+            )
+            if self.on_improve is not None and (
+                changed["task_pe"] or changed["task_mem"]
+            ):
+                self.on_improve(
+                    {
+                        "iteration": it,
+                        "fitness": float(res.fitness[w]),
+                        "move": "chain_block",
+                        "chains": r,
+                        "changed": sum(map(len, changed.values())),
+                    }
+                )
+        # the ONE decode of the search: the reconciled winner
+        self.n_sims += 1
+        (h,) = yield [Candidate.of_design(cur, self.budget, cfg.alpha_met)]
+        best_dist = h.telemetry().dist(self.budget)
+        best_design = cur.clone(rename=False)
+        return ExplorationResult(
+            best_design=best_design,
+            best_result=h.result_for(best_design),
+            best_distance=best_dist,
+            converged=best_dist.converged(),
+            iterations=it,
+            n_sims=self.n_sims,
+            wall_s=time.perf_counter() - t0,
+            history=history,
+            ledger=pol.ledger,
+            backend_name=self.backend.name,
+            policy_name=pol.name,
+            chained=True,
+            chain_r=r,
+        )
+
+    def _chain_enc(self):
+        """The backend's cached workload encoding when it has one (so slot
+        dicts match its rows), else a lazily-built local one."""
+        enc = getattr(self.backend, "_enc", None)
+        if enc is None:
+            enc = getattr(self, "_own_enc", None)
+            if enc is None:
+                from .phase_sim_jax import EncodedWorkload
+
+                enc = self._own_enc = EncodedWorkload.of(self.tdg)
+        return enc
+
+    def run_chains(self, initial: Optional[Design] = None) -> ExplorationResult:
+        """Drive :meth:`run_chain_steps` against ``self.backend`` — one
+        ``backend.run_chains`` dispatch per (R, K) block (the backend must
+        support device chains, i.e. expose ``run_chains``), plus the final
+        winner decode through the ordinary candidate path."""
+        if not hasattr(self.backend, "run_chains"):
+            raise ValueError(
+                f"backend {self.backend.name!r} does not support device "
+                "chain blocks (no run_chains)"
+            )
+        gen = self.run_chain_steps(initial)
+        sim_wall = 0.0
+        try:
+            pending = next(gen)
+            while True:
+                t0 = time.perf_counter()
+                if isinstance(pending, ChainRequest):
+                    answer = [self.backend.run_chains(pending)]
+                else:
+                    answer = self.backend.evaluate_candidates(pending)
+                sim_wall += time.perf_counter() - t0
+                pending = gen.send(answer)
         except StopIteration as stop:
             flush = getattr(self.backend, "flush", None)
             if flush is not None:

@@ -398,3 +398,51 @@ def apply_spec(
         design, tdg, spec.move, spec.block, spec.task, spec.direction,
         spec.bottleneck, spec.objective, rng or random.Random(0), delta,
     )
+
+
+# ---------------------------------------------------------------------------
+# array-packable deltas (device-resident exploration)
+# ---------------------------------------------------------------------------
+def mapping_delta(
+    task_pe: Dict[str, str], task_mem: Dict[str, str]
+) -> MoveDelta:
+    """A :class:`MoveDelta` for a pure mapping change with *absolute*
+    destinations — the form a packed device move table stores. A relative
+    migrate (:func:`apply_migrate`) reasons about the current design to pick
+    a destination; the device loop instead enumerates every
+    (task, destination-slot) pair up front as packed int32 arrays
+    (``device_explore.MoveTable``) and samples among them on device, so an
+    accepted move comes back as concrete (task → block-name) assignments.
+    Shape-preserving by construction: no blocks added, removed, or touched,
+    so the delta always rides the vectorized encoding path."""
+    d = MoveDelta()
+    d.task_pe.update(task_pe)
+    d.task_mem.update(task_mem)
+    return d
+
+
+def apply_mapping(
+    design: Design,
+    task_pe: Dict[str, str],
+    task_mem: Dict[str, str],
+    delta: Optional[MoveDelta] = None,
+) -> bool:
+    """Apply absolute task→block assignments onto ``design`` in place — the
+    host-side reconcile primitive for device-accepted packed moves (the
+    winning chain's final mapping is a batch of these). Returns False
+    without mutating anything if any named task or block is unknown."""
+    for t, p in task_pe.items():
+        if t not in design.task_pe or p not in design.blocks:
+            return False
+    for t, m in task_mem.items():
+        if t not in design.task_mem or m not in design.blocks:
+            return False
+    for t, p in task_pe.items():
+        design.task_pe[t] = p
+        if delta is not None:
+            delta.task_pe[t] = p
+    for t, m in task_mem.items():
+        design.task_mem[t] = m
+        if delta is not None:
+            delta.task_mem[t] = m
+    return True

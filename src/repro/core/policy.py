@@ -6,9 +6,8 @@ simulated annealing augmented with architectural reasoning converges up to
 32% (§5.3). This module makes that reasoning an explicit, swappable layer:
 a :class:`HeuristicPolicy` owns the per-iteration 5-tuple selection
 (metric → task → block → moves), the SA accept rule, the taboo list, and
-the co-design ledger — the `Explorer` is reduced to the speculative
-dispatch pipeline that drives whichever policy `ExplorerConfig.policy`
-names.
+the co-design ledger — the `Explorer` is reduced to the dispatch loop that
+drives whichever policy `ExplorerConfig.policy` names.
 
 Policies select from a :class:`~repro.core.backend.SimTelemetry` view —
 device-side bottleneck telemetry columns (per-block binding-bottleneck
@@ -40,11 +39,18 @@ Registered policies (``POLICIES`` / ``make_policy``):
                     NoCs double-weighted): the §5.3 NoC-simplification
                     policy, compared against ``farsi`` via the complexity
                     metrics ``Campaign.aggregate`` reports
+  ``device_sa``   — ``naive_sa`` on the host path, and the DEVICE-ELIGIBLE
+                    policy for the fused chain blocks
+                    (`repro.core.device_explore`): its checkpoint/restore
+                    additionally round-trips the chain-population carry
+                    bit-exactly, so a crash-restarted session resumes
+                    mid-population
 
 A policy is stateful (taboo list, sticky focus, ledger) and must support
-``checkpoint()``/``restore()`` so the explorer's speculative pipeline can
-roll a mis-speculated selection back; the rng is the *explorer's* — shared
-so the accept-draw/selection interleaving is identical pipelined or not.
+``checkpoint()``/``restore()`` so the serve layer can rebuild a crashed
+session from its last committed state; the rng is the *explorer's* —
+shared so the accept-draw/selection interleaving is reproducible from a
+seed alone.
 """
 from __future__ import annotations
 
@@ -59,6 +65,7 @@ from .budgets import Budget, Distance
 from .codesign import CodesignLedger, FocusRecord
 from .database import HardwareDatabase
 from .design import Design
+from .device_explore import copy_carry
 from .moves import MOVE_KINDS, MOVE_PRECEDENCE
 from .tdg import TaskGraph, workload_of
 
@@ -103,7 +110,8 @@ class HeuristicPolicy(Protocol):
 
     def accept(self, it: int, d_before: float, d_after: float, u: float) -> bool:
         """The SA accept rule on the device fitness column (``u`` is the
-        pre-drawn uniform so speculation keeps the rng stream aligned)."""
+        pre-drawn uniform, one per resolved iteration — the same draw
+        discipline the device accept loop mirrors in f32)."""
         ...
 
     def record(self, rec: FocusRecord) -> None:
@@ -125,7 +133,7 @@ class HeuristicPolicy(Protocol):
         ...
 
     def checkpoint(self) -> object:
-        """Snapshot mutable policy state for speculative rollback."""
+        """Snapshot mutable policy state (crash restart / session resume)."""
         ...
 
     def restore(self, ck: object) -> None:
@@ -323,6 +331,35 @@ class NaiveSA(PolicyBase):
         return moves
 
 
+class DeviceSA(NaiveSA):
+    """`naive_sa` + device-eligibility: the policy the fused chain blocks
+    (`repro.core.device_explore`) run under. On the host path it behaves
+    exactly like ``naive_sa`` (same draws, same accept rule); when the
+    explorer runs chain-batched (``ExplorerConfig.chain_r > 0``) the device
+    carry — per-chain task maps, fitness, PRNG keys, taboo TTLs, telemetry
+    columns — is stored here between blocks, and ``checkpoint``/``restore``
+    round-trip it bit-exactly so a crash-restarted session resumes
+    mid-population instead of re-annealing from scratch.
+
+    ``device_menu`` names the on-device move menu the policy corresponds
+    to: ``naive_sa`` samples the packed move table uniformly — the menu the
+    R=1/K=1 parity contract is stated against."""
+
+    name = "device_sa"
+    device_menu = "naive_sa"
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.device_carry: Optional[tuple] = None
+
+    def checkpoint(self) -> object:
+        return (dict(self._taboo), self._sticky, copy_carry(self.device_carry))
+
+    def restore(self, ck: object) -> None:
+        self._taboo, self._sticky = dict(ck[0]), ck[1]
+        self.device_carry = copy_carry(ck[2]) if len(ck) > 2 else None
+
+
 class TaskAware(NaiveSA):
     """+ bottleneck-driven task selection (awareness level ``task``)."""
 
@@ -487,6 +524,7 @@ class DevCostPolicy(FarsiPolicy):
 
 POLICIES = {
     "naive_sa": NaiveSA,
+    "device_sa": DeviceSA,
     "task": TaskAware,
     "task_block": TaskBlockAware,
     "bottleneck": BottleneckRelaxation,

@@ -7,7 +7,8 @@ drop-in counterpart of ``repro.core.phase_sim_jax.simulate_batch`` (same
 rows-dict in, same output dict out); ``ref.phase_sim_ref`` is the pure-jnp
 oracle the kernel is tested against (tests/test_phase_sim_kernel.py).
 """
+from .chain import resimulate_chains
 from .ops import phase_sim
 from .ref import phase_sim_ref
 
-__all__ = ["phase_sim", "phase_sim_ref"]
+__all__ = ["phase_sim", "phase_sim_ref", "resimulate_chains"]

@@ -1,0 +1,41 @@
+"""In-loop re-simulation for the device-resident explorer.
+
+The fused accept loop (``repro.core.device_explore``) mutates R chain
+encodings per iteration and needs their ``fitness`` plus the per-slot
+bottleneck telemetry columns (``pe_bneck_s``/``mem_bneck_s``) back *inside*
+the same ``lax.scan`` step — no host round trip. The chains ARE the batch
+axis: every scan iteration prices an (R,)-rows dict, which is exactly the
+contract of the batched simulator, so the device loop routes through the
+fused Pallas kernel (``ops.phase_sim``) when the backend runs with the
+kernel enabled and through the XLA reference (``simulate_batch``)
+otherwise. Both return the same output dict, which keeps the scan body
+layout-agnostic: the carry never stores kernel-specific packing.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from ...core.phase_sim_jax import EncodedWorkload, simulate_batch
+from .ops import phase_sim
+
+__all__ = ["resimulate_chains"]
+
+
+def resimulate_chains(
+    enc: EncodedWorkload,
+    rows: Dict[str, jnp.ndarray],
+    *,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> Dict[str, jnp.ndarray]:
+    """Price the R mutated chain encodings of one accept-loop iteration.
+
+    ``rows`` is a batched rows dict with the chain axis leading (R designs,
+    one per chain). Traced inside the chain scan body, so it must stay a
+    pure function of its array inputs — it is, both branches are.
+    """
+    if use_kernel:
+        return phase_sim(enc, rows, interpret=interpret)
+    return simulate_batch(enc, rows)

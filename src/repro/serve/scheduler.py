@@ -57,6 +57,7 @@ from ..core.backend import (
     make_backend,
 )
 from ..core.database import HardwareDatabase
+from ..core.device_explore import ChainRequest
 from ..core.explorer import Explorer
 from ..core.tdg import TaskGraph
 from ..runtime.health import StepTimeMonitor
@@ -307,8 +308,50 @@ class ContinuousBatchScheduler:
                         completed.append(s)
                         self._live.remove(s)
 
+        # chain-batched sessions (config.chain_r > 0) carry a ChainRequest
+        # instead of a candidate list: each is one fused (R, K) device block
+        # already — there is nothing to pack, so they dispatch individually
+        # and rejoin the ordinary pack only for their final winner decode
+        for s in list(self._live):
+            if not isinstance(s.pending, ChainRequest):
+                continue
+            backend = self.backend_for(s.request.tdg)
+            if not hasattr(backend, "run_chains"):
+                self._fail(s, DispatchFailed(
+                    f"session {s.name!r}: backend {backend.name!r} does not "
+                    "support device chain blocks"
+                ))
+                continue
+            t0 = time.perf_counter()
+            try:
+                if fi is not None and fi.draw_dispatch_fault(s.name):
+                    raise InjectedDispatchError(
+                        f"injected dispatch fault: {s.name}"
+                    )
+                block = backend.run_chains(s.pending)
+            except Exception as exc:
+                # no degrade ladder here: the scalar fallback cannot price a
+                # fused device block, so a failing chain dispatch quarantines
+                # its session (the ordinary sessions' ladder is untouched)
+                self.n_dispatch_faults += 1
+                self._fail(s, DispatchFailed(
+                    f"session {s.name!r}: chain-block dispatch failed ({exc!r})"
+                ))
+                continue
+            s.sim_wall_s += time.perf_counter() - t0
+            try:
+                finished = s.resume([block])
+            except Exception as exc:
+                self._recover(s, exc, completed)
+                continue
+            if finished:  # pragma: no cover — final yield is a decode batch
+                completed.append(s)
+                self._live.remove(s)
+
         groups: Dict[int, List[Session]] = {}
         for s in self._live:
+            if isinstance(s.pending, ChainRequest):
+                continue  # failed resume above left no pack-able batch
             groups.setdefault(id(s.request.tdg), []).append(s)
         for members in groups.values():
             # degraded sessions price on the scalar fallback individually;
@@ -389,8 +432,9 @@ class ContinuousBatchScheduler:
         return done
 
     def flush(self) -> None:
-        """Drain every shared backend's in-flight dispatches (abandoned
-        speculative batches must not outlive the serve loop)."""
+        """Drain every shared backend's in-flight dispatches (batches a
+        failed or finished session never consumed must not outlive the
+        serve loop)."""
         for backend in self._backends.values():
             flush = getattr(backend, "flush", None)
             if flush is not None:

@@ -1,12 +1,15 @@
 """One multi-tenant exploration session around the Explorer coroutine.
 
-A :class:`Session` owns one :meth:`~repro.core.explorer.Explorer.run_steps`
-generator and the bookkeeping the scheduler needs to co-batch it with
-strangers: the pending candidate batch, lifecycle state, streamed
-best-design events, and per-session latency/throughput accounting. The
-session never talks to a backend — the scheduler prices its pending batch
-(packed with every other live session's) and hands the matching
-``SimHandle`` slice back through :meth:`resume`.
+A :class:`Session` owns one Explorer coroutine —
+:meth:`~repro.core.explorer.Explorer.run_steps` (host accept loop), or
+:meth:`~repro.core.explorer.Explorer.run_chain_steps` when the request's
+config opts into chain-batched ticks (``chain_r > 0``) — and the
+bookkeeping the scheduler needs to co-batch it with strangers: the pending
+batch, lifecycle state, streamed best-design events, and per-session
+latency/throughput accounting. The session never talks to a backend — the
+scheduler prices its pending batch (packed with every other live
+session's, or dispatched as one fused device block for a chain session)
+and hands the result back through :meth:`resume`.
 
 Streaming contract: every committed best-so-far improvement fires a
 :class:`BestEvent` (wired to ``Explorer.on_improve`` — scalar columns only,
@@ -137,21 +140,31 @@ class Session:
         return end - self.admitted_at
 
     def _improved(self, ev: dict) -> None:
+        # chain-block events carry fitness only (the winner's PPA scalars
+        # stay on device until the final decode) — missing columns default
         event = BestEvent(
             session=self.request.name,
             iteration=ev["iteration"],
-            distance=ev["distance"],
+            distance=ev.get("distance", float("nan")),
             fitness=ev["fitness"],
             move=ev["move"],
-            converged=ev["converged"],
-            latency_s=ev["latency_s"],
-            power_w=ev["power_w"],
-            area_mm2=ev["area_mm2"],
+            converged=ev.get("converged", False),
+            latency_s=ev.get("latency_s", float("nan")),
+            power_w=ev.get("power_w", float("nan")),
+            area_mm2=ev.get("area_mm2", float("nan")),
             wall_s=time.perf_counter() - (self.admitted_at or time.perf_counter()),
         )
         self.events.append(event)
         if self.on_event is not None:
             self.on_event(event)
+
+    def _make_gen(self, explorer: Explorer, initial: Optional[Design]):
+        """The session's coroutine: the chain-batched generator when the
+        request opted into device chain blocks (``chain_r > 0``), the host
+        accept loop otherwise."""
+        if self.request.config.chain_r > 0:
+            return explorer.run_chain_steps(initial)
+        return explorer.run_steps(initial)
 
     # ---- scheduler interface --------------------------------------------
     def start(self) -> None:
@@ -159,7 +172,7 @@ class Session:
         ``pending`` holds its first candidate batch (the initial design)."""
         assert self.state == PENDING, f"session {self.name!r} already started"
         self.admitted_at = time.perf_counter()
-        self._gen = self.explorer.run_steps(self.request.initial)
+        self._gen = self._make_gen(self.explorer, self.request.initial)
         try:
             self.pending = next(self._gen)
             self.state = RUNNING
@@ -188,8 +201,8 @@ class Session:
     # ---- fault handling --------------------------------------------------
     def fail(self, exc: BaseException) -> None:
         """Quarantine the session: record the error, transition to FAILED,
-        and close the coroutine so speculative state cannot leak. Idempotent
-        for already-terminal sessions (the first error wins)."""
+        and close the coroutine so half-finished search state cannot leak.
+        Idempotent for already-terminal sessions (the first error wins)."""
         if self.state in (DONE, FAILED):
             return
         self.error = exc
@@ -230,7 +243,7 @@ class Session:
         explorer.on_improve = self._improved
         explorer.track_restart = True
         self.n_restarts += 1
-        self._gen = explorer.run_steps(initial)
+        self._gen = self._make_gen(explorer, initial)
         try:
             self.pending = next(self._gen)
         except StopIteration as stop:  # pragma: no cover — budget exhausted

@@ -173,63 +173,55 @@ def test_explorer_backend_config_selection():
         make_backend("nope", g, db)
 
 
-# ---- speculative dispatch pipeline ---------------------------------------
-def test_pipelined_explorer_identical_move_sequence():
-    """Acceptance bar: the two-deep speculative pipeline must replay the
-    EXACT search — same (iteration, move, accepted) sequence, same committed
-    n_sims, same best distance — as the unpipelined coroutine under a fixed
-    seed, in every mode (off / adaptive-auto / always-speculate)."""
-    db = HardwareDatabase()
-    g = audio()
-    bud = calibrated_budget(db)
-    results = []
-    for pipe in (False, None, True):
-        jx = JaxBatchedBackend(g, db)
-        res = Explorer(
-            g, db, bud,
-            ExplorerConfig(max_iterations=60, seed=7, pipeline=pipe),
-            backend=jx,
-        ).run()
-        results.append(res)
-    seqs = [
-        [(h["iteration"], h["move"], h["accepted"]) for h in r.history]
-        for r in results
-    ]
-    assert seqs[0] == seqs[1] == seqs[2]
-    assert results[0].n_sims == results[1].n_sims == results[2].n_sims
-    assert not results[0].pipelined and results[1].pipelined and results[2].pipelined
-    assert results[0].n_sims_wasted == 0 and results[0].n_spec_hits == 0
-    d0 = results[0].best_distance.city_block()
-    for r in results[1:]:
-        assert abs(r.best_distance.city_block() - d0) <= 1e-12 * max(abs(d0), 1.0)
+# ---- device chain blocks -------------------------------------------------
+def test_backend_run_chains_accounting_and_flush():
+    """`JaxBatchedBackend.run_chains` prices one fused (R, K) block per
+    dispatch and accounts every chain step in the shared stats; handles
+    issued before an explicit flush() stay readable after it."""
+    from repro.core import ChainRequest
 
-
-def test_pipeline_overlaps_dispatches_and_flush_drains():
-    """With speculation forced on, a second batch must be submitted while the
-    first is still un-consumed (n_inflight_max ≥ 2 — the host-encode/device-
-    compute overlap the pipeline exists for), and flush() must drain
-    abandoned speculative dispatches."""
     db = HardwareDatabase()
     g = audio()
     bud = calibrated_budget(db)
     jx = JaxBatchedBackend(g, db)
-    res = Explorer(
-        g, db, bud,
-        ExplorerConfig(max_iterations=40, seed=5, pipeline=True),
-        backend=jx,
-    ).run()
+    d = random_single_noc_designs(g, 1, seed=5)[0]
+    block = jx.run_chains(ChainRequest(design=d, budget=bud, r=8, k=16, seed=5))
+    assert block.fitness.shape == (8,)
+    assert block.move_idx.shape == (8, 16)
     stats = jx.stats()
-    assert stats.n_inflight_max >= 2, stats
-    # run() flushed on exit: nothing left in flight
-    assert not jx._inflight
-    # speculation happened (hits or misses — seed-dependent mix)
-    assert res.n_spec_hits + res.n_sims_wasted > 0
+    assert stats.n_sims == 8 * 16 and stats.n_batched == 8 * 16
+    assert stats.n_dispatches == 1 and stats.n_fallback == 0
+    assert jx.chain_runner().n_fallback == 0
     # handles issued before an explicit flush stay readable after it
     designs = random_single_noc_designs(g, 3, seed=2)
     cands = [JaxCandidate.of_design(d) for d in designs]
     handles = jx.evaluate_candidates(cands)
     jx.flush()
     assert all(h.result().latency_s > 0 for h in handles)
+
+
+def test_explorer_run_chains_e2e():
+    """`Explorer.run_chains` drives the chain-batched coroutine end to end:
+    chained result, per-step history, committed n_sims = R·K per block plus
+    the winner's single decode."""
+    db = HardwareDatabase()
+    g = audio()
+    bud = calibrated_budget(db)
+    jx = JaxBatchedBackend(g, db)
+    ex = Explorer(
+        g, db, bud,
+        ExplorerConfig(policy="device_sa", max_iterations=32, seed=7,
+                       chain_r=8, chain_k=16),
+        backend=jx,
+    )
+    res = ex.run_chains()
+    assert res.chained and res.chain_r == 8
+    assert res.iterations == 32
+    assert len(res.history) == 32
+    assert all(h["move"] == "chain_migrate" for h in res.history)
+    assert res.n_sims == 8 * 32 + 1  # two blocks of 16 + final decode
+    assert res.best_result.latency_s > 0
+    assert jx.chain_runner().n_compiles == 1  # one (R, K) shape, one jit
 
 
 def test_adopt_encoding_invalidates_on_fallback_winner():
@@ -285,17 +277,15 @@ def test_campaign_smoke_two_seeds_two_workloads():
     assert set(res.backend_stats) == {"ed", "audio"}
     assert isinstance(res.backend_stats["ed"], BackendStats)
     for wl, prefix in (("ed", "ed."), ("audio", "audio.")):
-        # backend counts every dispatched candidate, including batches the
-        # pipelined explorers speculated and threw away; per-run n_sims is
-        # committed-only — together they account for the backend exactly
+        # every dispatched candidate belongs to exactly one run — the shared
+        # backend's count is the sum of the per-run committed n_sims
         per_run = sum(
-            r.n_sims + r.n_sims_wasted
-            for n, r in res.runs.items() if n.startswith(prefix)
+            r.n_sims for n, r in res.runs.items() if n.startswith(prefix)
         )
         assert res.backend_stats[wl].n_sims == per_run
         # cross-batched: far fewer dispatches than sims (≥2 runs per dispatch)
         assert res.backend_stats[wl].n_dispatches < per_run
-    assert res.aggregate["n_sims_total"] + res.aggregate["n_sims_wasted_total"] == sum(
+    assert res.aggregate["n_sims_total"] == sum(
         s.n_sims for s in res.backend_stats.values()
     )
     assert res.aggregate["sim_wall_s_total"] > 0.0

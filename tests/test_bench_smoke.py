@@ -3,13 +3,13 @@ tier-1 CI. The smoke mode prices one neighbour-candidate batch through both
 backends at tiny sizes and *asserts* (1) the JAX array-native path is at
 least as fast as the scalar Python path, (2) both agree on the winning
 candidate's latency, (3) the fused Pallas phase-sim kernel matches the XLA
-reference path ≤ 1e-5 on the fitness column, and (4) the pipeline stall
-guard: with speculation forced on, a second dispatch is submitted while the
-first is still un-consumed (``n_inflight_max ≥ 2`` — host encode
-overlapping device scoring), the pipelined search replays the unpipelined
-accepted-move sequence exactly, and the jit cache stays at ``n_compiles ≤
-4``. A regression in the incremental-encoding / lazy-decode / speculative-
-dispatch hot path fails fast instead of silently eroding the BENCH
+reference path ≤ 1e-5 on the fitness column, and (4) the device-loop
+guard: the fused (R=16, K) chain block sustains ≥ 2x the host-driven
+loop's chain-iteration rate with ``n_compiles ≤ 4`` and ``n_fallback ==
+0``, replaying the host loop bit-for-bit at R=1, while the retired
+speculative-pipeline counters stay absent from ``ExplorationResult`` (the
+tombstone). A regression in the incremental-encoding / lazy-decode /
+fused-chain hot path fails fast instead of silently eroding the BENCH
 numbers."""
 import os
 import subprocess

@@ -1,7 +1,7 @@
 """Serve layer: content-addressed DesignStore semantics (bit-identical hits,
 LRU eviction), continuous-batching determinism (mid-flight joins), DseService
-multi-session runs, Campaign-through-scheduler equivalence, and the
-speculation auto-disable latch."""
+multi-session runs, Campaign-through-scheduler equivalence, and chain-batched
+session ticks."""
 import numpy as np
 import pytest
 
@@ -17,7 +17,6 @@ from repro.core import (
     random_single_noc_designs,
 )
 from repro.core.backend import Candidate
-from repro.core.explorer import SPEC_WINDOW
 from repro.serve import DesignStore, DseService
 
 
@@ -287,21 +286,30 @@ def test_campaign_equivalent_with_and_without_store(db, g, bud):
     assert plain.converged_runs() == cached.converged_runs()
 
 
-# ---- speculation auto-disable --------------------------------------------
-def test_spec_auto_disable_bounds_waste(db, g, bud):
-    """Adaptive speculation latches OFF after SPEC_WINDOW dispatched
-    speculative batches with zero hits, so a zero-value pipeline wastes a
-    bounded number of rows; forced pipeline=True never latches."""
-    cfg = ExplorerConfig(seed=0, max_iterations=120, backend="jax",
-                         policy="naive_sa", pipeline=None)
-    r = Explorer(g, db, bud, cfg).run()
-    assert isinstance(r.spec_auto_disabled, bool)
-    if r.spec_auto_disabled:
-        assert r.n_spec_hits == 0
-    if r.n_spec_hits == 0:
-        assert r.n_sims_wasted <= SPEC_WINDOW * cfg.neighbors_per_iter
-
-    forced = ExplorerConfig(seed=0, max_iterations=40, backend="jax",
-                            pipeline=True)
-    rf = Explorer(g, db, bud, forced).run()
-    assert rf.spec_auto_disabled is False
+# ---- chain-batched sessions ----------------------------------------------
+def test_chain_batched_session_coexists_with_host_sessions(db, g, bud):
+    """A session whose config opts into device chain blocks (``chain_r > 0``)
+    rides the same service as ordinary host-loop sessions: its ChainRequests
+    are dispatched as fused blocks (never joining the shared candidate pack),
+    both sessions complete, and the chain session's result carries the
+    chain-population metadata."""
+    svc = DseService(db, backend="jax")
+    chain = svc.submit(
+        "chain", g, bud,
+        ExplorerConfig(policy="device_sa", seed=3, max_iterations=32,
+                       chain_r=8, chain_k=16, backend="jax"),
+    )
+    host = svc.submit(
+        "host", g, bud,
+        ExplorerConfig(seed=4, max_iterations=15, backend="jax"),
+    )
+    stats = svc.run()
+    assert stats.n_done == 2 and stats.n_failed == 0
+    assert chain.done and host.done
+    res = chain.result
+    assert res.chained and res.chain_r == 8
+    assert res.iterations == 32
+    assert not host.result.chained
+    # streamed improvements from chain blocks carry fitness (scalar PPA
+    # columns stay on device until the final decode)
+    assert all(np.isfinite(e.fitness) for e in chain.events)
