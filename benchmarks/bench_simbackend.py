@@ -62,11 +62,14 @@ never down.
 from __future__ import annotations
 
 import dataclasses
+import filecmp
 import json
 import os
 import random
 import time
 from typing import List
+
+import numpy as np
 
 from repro.core import (
     Campaign,
@@ -379,6 +382,92 @@ def run(smoke: bool = False) -> List[Row]:
             )
         )
 
+        # ---- mixed mapping+allocation chains (device_explore.alloc) ------
+        # the widened move table: PE/MEM fork/join/frequency-swap + NoC
+        # attach over capacity-padded slot inventories, sampled in the same
+        # lax.scan block as the migrates. R∈{1,16}: parity first (the fused
+        # mixed-move block must replay the host-driven loop bit-for-bit at
+        # R=1 — same threefry draws, same f32 accept math, allocation
+        # columns included), then fused-vs-host-loop throughput at R=16.
+        # Fresh runner: the alloc jit cache is its own budget (≤ 6 entries).
+        arunner = DeviceChainRunner(g, db)
+        apar_f = arunner.run_chains(
+            base, bud, r=1, k=dev_k, seed=5, menu="farsi", alloc=True
+        )
+        apar_h = arunner.run_chains_host(
+            base, bud, r=1, n_steps=dev_k, seed=5, menu="farsi", alloc=True
+        )
+        alloc_parity = (
+            apar_f.seq(0) == apar_h.seq(0)
+            and all(
+                np.array_equal(x, y)
+                for x, y in zip(apar_f.carry, apar_h.carry)
+            )
+        )
+        assert alloc_parity, (
+            "fused mixed-move block diverged from the host loop"
+        )
+        arunner.run_chains(
+            base, bud, r=dev_r, k=dev_k, seed=5, menu="farsi", alloc=True
+        )  # compile
+        arunner.run_chains(
+            base, bud, r=dev_r, k=1, seed=5, menu="farsi", alloc=True
+        )  # warm k=1 block
+        t_adev = t_ahloop = float("inf")
+        for _ in range(reps):
+            t_adev = min(
+                t_adev,
+                arunner.run_chains(
+                    base, bud, r=dev_r, k=dev_k, seed=5, menu="farsi",
+                    alloc=True,
+                ).wall_s,
+            )
+        for _ in range(max(1, reps - 1)):
+            t_ahloop = min(
+                t_ahloop,
+                arunner.run_chains_host(
+                    base, bud, r=dev_r, n_steps=dev_k, seed=5, menu="farsi",
+                    alloc=True,
+                ).wall_s,
+            )
+        adev_its = dev_r * dev_k / max(t_adev, 1e-9)
+        ahloop_its = dev_r * dev_k / max(t_ahloop, 1e-9)
+        alloc_vs_host_loop = adev_its / max(ahloop_its, 1e-9)
+        if smoke:
+            assert alloc_vs_host_loop >= 2.0, (
+                f"mixed-move device-loop regression: fused block at "
+                f"{alloc_vs_host_loop:.2f}x of the host-driven loop "
+                f"(floor 2x)"
+            )
+            assert arunner.n_compiles <= 6, arunner.n_compiles
+            assert arunner.n_fallback == 0, arunner.n_fallback
+        device_explore["alloc"] = {
+            "r": dev_r,
+            "k": dev_k,
+            "menu": "farsi",
+            "n_moves": apar_f.n_moves,
+            "device_iters_per_s": adev_its,
+            "host_loop_iters_per_s": ahloop_its,
+            "fused_vs_host_loop": alloc_vs_host_loop,
+            "vs_host_explorer_jax": (
+                adev_its / max(it_stats["jax"]["iters_per_s"], 1e-9)
+            ),
+            "parity_r1": alloc_parity,
+            "n_compiles": arunner.n_compiles,
+            "n_fallback": arunner.n_fallback,
+        }
+        rows.append(
+            (
+                f"simbackend.{g.name}.device_explore.alloc",
+                t_adev * 1e6,
+                f"fused={adev_its:.0f}it/s host_loop={ahloop_its:.0f}it/s "
+                f"({alloc_vs_host_loop:.1f}x) r={dev_r} k={dev_k} "
+                f"menu=farsi moves={apar_f.n_moves} "
+                f"vs_explorer={device_explore['alloc']['vs_host_explorer_jax']:.1f}x "
+                f"compiles={arunner.n_compiles} fallback={arunner.n_fallback}",
+            )
+        )
+
         # ---- policy-convergence comparison (§5.2 / Fig. 9b) --------------
         # iterations-to-budget per registered policy under a relaxed budget
         # the searches can actually reach within the iteration cap — the
@@ -633,12 +722,27 @@ def run(smoke: bool = False) -> List[Row]:
             json.dump(payload, f, indent=2)
         rows.append(("simbackend.json", 0.0, f"wrote {JSON_PATH}"))
     else:
+        # stale-mirror guard: the repo-root copy of the trajectory JSON must
+        # be byte-identical to the benchmarks/ source (a full run that died
+        # mid-mirror would leave them diverged; run.py now renames the
+        # mirror into place atomically, and this asserts the invariant)
+        root_mirror = os.path.join(
+            os.path.dirname(os.path.dirname(JSON_PATH)),
+            os.path.basename(JSON_PATH),
+        )
+        if os.path.exists(JSON_PATH) and os.path.exists(root_mirror):
+            assert filecmp.cmp(JSON_PATH, root_mirror, shallow=False), (
+                f"stale root mirror: {root_mirror} != {JSON_PATH} — rerun "
+                "the full bench so the tracker reads current numbers"
+            )
         rows.append((
             "simbackend.smoke", 0.0,
             "speedup>=1, winner equivalence, kernel parity<=1e-5, "
             "multi-noc dispatch>=0.5x single-noc + n_fallback=0, "
             "device loop>=2x host loop @R=16 + compiles<=4 + fallback=0, "
-            "R=1 device/host-loop parity, spec-pipeline tombstone, "
+            "R=1 device/host-loop parity, mixed-move alloc block: R=1 "
+            "parity + >=2x host loop @R=16 + compiles<=6 + fallback=0, "
+            "bench-json mirror==source, spec-pipeline tombstone, "
             "policy convergence farsi<=naive_sa, "
             "serve: 8-session aggregate>=0.7x single + cache hit-rate>0, "
             "chaos@5% dispatch faults: all sessions complete >=0.5x: OK",

@@ -21,9 +21,11 @@ from .design import Design
 from .design_space import random_single_noc_designs
 from .device_explore import (
     ChainBlockResult,
+    ChainCarry,
     ChainRequest,
     DeviceChainRunner,
     MoveTable,
+    reconcile_alloc,
 )
 from .event_sim import simulate_events
 from .explorer import AWARENESS_LEVELS, ExplorationResult, Explorer, ExplorerConfig
@@ -63,6 +65,7 @@ __all__ = [
     "CampaignResult",
     "Candidate",
     "ChainBlockResult",
+    "ChainCarry",
     "ChainRequest",
     "CodesignLedger",
     "Design",

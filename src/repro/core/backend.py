@@ -882,7 +882,8 @@ class JaxBatchedBackend:
             req.design, req.budget, r=req.r, k=req.k, seed=req.seed,
             it0=req.it0, menu=req.menu, alpha=req.alpha,
             temperature0=req.temperature0, temp_decay=req.temp_decay,
-            taboo_ttl=req.taboo_ttl, carry=req.carry,
+            taboo_ttl=req.taboo_ttl, carry=req.carry, alloc=req.alloc,
+            cap_pe=req.cap_pe, cap_mem=req.cap_mem,
         )
         self._stats.n_sims += req.r * req.k
         self._stats.n_batched += req.r * req.k

@@ -50,7 +50,12 @@ from .budgets import Budget, Distance
 from .codesign import CodesignLedger, FocusRecord
 from .database import HardwareDatabase
 from .design import Design
-from .device_explore import ChainBlockResult, ChainRequest, reconcile_mapping
+from .device_explore import (
+    ChainBlockResult,
+    ChainRequest,
+    reconcile_alloc,
+    reconcile_mapping,
+)
 from .moves import MoveDelta, MoveSpec, apply_move
 from .phase_sim import SimResult
 from .policy import AWARENESS_POLICY, Focus, HeuristicPolicy, make_policy
@@ -95,6 +100,14 @@ class ExplorerConfig:
     chain_r: int = 0
     chain_k: int = 32
     chain_menu: str = ""
+    # chain_alloc widens the device move table from mapping-only migrates to
+    # the mixed mapping+allocation menu (PE/MEM fork/join/frequency-swap +
+    # NoC attach over capacity-padded slot inventories). The whole run then
+    # explores platform shape on device; the winning chain's platform is
+    # reconciled onto the live design ONCE, after the last block
+    # (device_explore.reconcile_alloc), so the seed encoding — which the
+    # carry's fork provenance indexes — stays valid across blocks.
+    chain_alloc: bool = False
 
 
 @dataclasses.dataclass
@@ -479,7 +492,7 @@ class Explorer:
                 design=cur, budget=self.budget, r=r, k=kk, seed=cfg.seed,
                 it0=it, menu=menu, alpha=cfg.alpha_met,
                 temperature0=cfg.temperature0, temp_decay=cfg.temp_decay,
-                taboo_ttl=cfg.taboo_ttl, carry=carry,
+                taboo_ttl=cfg.taboo_ttl, carry=carry, alloc=cfg.chain_alloc,
             )
             (res,) = yield req
             self.n_sims += r * kk
@@ -498,15 +511,22 @@ class Explorer:
                         # fitness (its city-block distance is only known
                         # after the final decode)
                         "fitness": float(res.fit_trace[w, s]),
-                        "move": "chain_migrate",
+                        "move": "chain_mixed" if cfg.chain_alloc
+                        else "chain_migrate",
                         "accepted": bool(res.accepted[w, s]),
                         "wall_s": time.perf_counter() - t0,
                     }
                 )
             it += kk
-            changed = reconcile_mapping(
-                cur, res, self.tdg, self.db, self._chain_enc()
-            )
+            if cfg.chain_alloc:
+                # allocation state lives in the carry; the design must stay
+                # the seed the provenance columns index, so nothing is
+                # reconciled until the run ends (below)
+                changed = {"task_pe": {}, "task_mem": {}}
+            else:
+                changed = reconcile_mapping(
+                    cur, res, self.tdg, self.db, self._chain_enc()
+                )
             if self.on_improve is not None and (
                 changed["task_pe"] or changed["task_mem"]
             ):
@@ -519,6 +539,11 @@ class Explorer:
                         "changed": sum(map(len, changed.values())),
                     }
                 )
+        if cfg.chain_alloc and res is not None:
+            # one shape change per search: replay the winning chain's
+            # platform (clones, removals, retunes, re-homes, mapping)
+            # through the moves.py allocation bridge
+            reconcile_alloc(cur, res, self.tdg, self.db, self._chain_enc())
         # the ONE decode of the search: the reconciled winner
         self.n_sims += 1
         (h,) = yield [Candidate.of_design(cur, self.budget, cfg.alpha_met)]

@@ -446,3 +446,52 @@ def apply_mapping(
         if delta is not None:
             delta.task_mem[t] = m
     return True
+
+
+# ---------------------------------------------------------------------------
+# Allocation bridge: host-side reconcile primitives for device-accepted
+# allocation moves. A device chain block mutates padded slot inventories
+# (active masks + per-slot coefficient columns, ``device_explore.ChainCarry``)
+# instead of the Design's dict shape; when the explorer adopts a winning
+# chain, ``device_explore.reconcile_alloc`` replays that platform onto the
+# live Design through these four primitives — clone-and-attach for forked
+# slots, removal for joined slots, a frequency retune for stepped rungs, and
+# a NoC re-home for attach moves. Each is shape-changing on the HOST design
+# (that is the point: the shape change happens once per adopted block, not
+# once per SA iteration).
+
+
+def fork_block(
+    design: Design, origin: str, *, freq_mhz: int, noc: str
+) -> str:
+    """Clone ``origin`` (same subtype/width/unroll/hardening — the device
+    fork copies the source slot's coefficient columns, so the host clone
+    must inherit the same knobs), retune it to ``freq_mhz``, attach it to
+    ``noc``, and return the new block's (fresh, uid-suffixed) name."""
+    b = design.blocks[origin].clone()
+    b.freq_mhz = freq_mhz
+    design.add_block(b, attach_to=noc)
+    return b.name
+
+
+def join_block(design: Design, name: str) -> None:
+    """Remove a block the device loop joined away (or whose slot the winner
+    re-populated with a clone). The caller must have re-mapped every task
+    off it first — device join validity guarantees the slot was empty."""
+    assert name not in design.task_pe.values(), f"{name} still hosts tasks"
+    assert name not in design.task_mem.values(), f"{name} still hosts buffers"
+    design.remove_block(name)
+
+
+def retune_block(design: Design, name: str, freq_mhz: int) -> None:
+    """Set a block's frequency knob to the ladder value the device swap
+    moves walked it to (``FREQ_LADDER_MHZ[rung]``)."""
+    assert freq_mhz in design.blocks[name].ladder("freq_mhz"), freq_mhz
+    design.blocks[name].freq_mhz = freq_mhz
+
+
+def attach_block(design: Design, name: str, noc: str) -> None:
+    """Re-home a PE/MEM block to another NoC chain position (the device
+    NoC-attach move)."""
+    assert noc in design.noc_chain, noc
+    design.attached_noc[name] = noc

@@ -164,6 +164,13 @@ class EncodedDesign:
     mem_leak: np.ndarray  # (S_mem,) leakage W
     mem_area_fixed: np.ndarray  # (S_mem,) mm² (DRAM PHY; 0 for SRAM)
     mem_area_per_mb: np.ndarray  # (S_mem,) mm²/MB (SRAM; 0 for DRAM)
+    # per-class active-slot masks (1.0 = slot exists in the design). Host
+    # encodes are always all-ones — padding stays a *buffer* concept — but
+    # the device-resident explorer prices allocation moves by toggling these
+    # in place over capacity-padded inventories: an inactive slot keeps its
+    # pad-neutral rates yet contributes nothing to the leak/area rollup.
+    pe_active: np.ndarray  # (S_pe,) f32 mask
+    mem_active: np.ndarray  # (S_mem,) f32 mask
     # per-NoC arrays in CHAIN order (index = chain position, so the hop
     # distance between two NoCs is |i − j| and a task's route is the index
     # interval between its PE's and its MEM's attachment)
@@ -171,6 +178,7 @@ class EncodedDesign:
     noc_links: np.ndarray  # (N,) int32 channels
     noc_leak: np.ndarray  # (N,) leakage W
     noc_area: np.ndarray  # (N,) mm²
+    noc_active: np.ndarray  # (N,) f32 mask (see pe_active)
     pe_noc: np.ndarray  # (S_pe,) int32 chain index each PE attaches to
     mem_noc: np.ndarray  # (S_mem,) int32 chain index each MEM attaches to
     noc_pj: np.float32  # dynamic pJ/byte·hop (db constant, rides the row so
@@ -227,10 +235,13 @@ class EncodedDesign:
             mem_leak=f32col(mem_cols, 2),
             mem_area_fixed=f32col(mem_cols, 3),
             mem_area_per_mb=f32col(mem_cols, 4),
+            pe_active=np.ones(len(pe_cols), np.float32),
+            mem_active=np.ones(len(mem_cols), np.float32),
             noc_bw=np.asarray([b.peak_bandwidth(db) for b in nocs], np.float32),
             noc_links=np.asarray([b.n_links for b in nocs], np.int32),
             noc_leak=np.asarray([db.leakage_w(b) for b in nocs], np.float32),
             noc_area=np.asarray([db.block_area_mm2(b) for b in nocs], np.float32),
+            noc_active=np.ones(len(nocs), np.float32),
             pe_noc=np.asarray(pe_noc, np.int32),
             mem_noc=np.asarray(mem_noc, np.int32),
             noc_pj=np.float32(db.energy.noc_pj_per_byte_hop),
@@ -265,13 +276,14 @@ def _insert1(arr: np.ndarray, s: int, v) -> np.ndarray:
     return out
 
 
-_NOC_ARRAY_FIELDS = ("noc_bw", "noc_links", "noc_leak", "noc_area")
+_NOC_ARRAY_FIELDS = ("noc_bw", "noc_links", "noc_leak", "noc_area", "noc_active")
 
 
 def _noc_cols(b: Block, db: HardwareDatabase) -> tuple:
     return (
         np.float32(b.peak_bandwidth(db)), np.int32(b.n_links),
         np.float32(db.leakage_w(b)), np.float32(db.block_area_mm2(b)),
+        np.float32(1.0),
     )
 
 
@@ -314,14 +326,17 @@ def apply_delta(
     for name in delta.removed:
         if name in ed.pe_slot:
             s = ed.pe_slot[name]
-            for f in ("pe_peak", "pe_pj", "pe_leak", "pe_area"):
+            for f in ("pe_peak", "pe_pj", "pe_leak", "pe_area", "pe_active"):
                 setattr(ed, f, _delete1(getattr(ed, f), s))
             ed.pe_slot = {n: i - (i > s) for n, i in ed.pe_slot.items() if n != name}
             ed.task_pe = ed.task_pe - (ed.task_pe > s)
             ed.pe_noc = _delete1(ed.pe_noc, s)
         elif name in ed.mem_slot:
             s = ed.mem_slot[name]
-            for f in ("mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb"):
+            for f in (
+                "mem_bw", "mem_pj", "mem_leak", "mem_area_fixed",
+                "mem_area_per_mb", "mem_active",
+            ):
                 setattr(ed, f, _delete1(getattr(ed, f), s))
             ed.mem_slot = {n: i - (i > s) for n, i in ed.mem_slot.items() if n != name}
             ed.task_mem = ed.task_mem - (ed.task_mem > s)
@@ -356,6 +371,7 @@ def apply_delta(
             cols = _pe_coeffs(b, db)
             for f, v in zip(("pe_peak", "pe_pj", "pe_leak", "pe_area"), cols):
                 setattr(ed, f, _append1(getattr(ed, f), np.float32(v)))
+            ed.pe_active = _append1(ed.pe_active, np.float32(1.0))
             ed.pe_noc = _append1(ed.pe_noc, ed.noc_slot[delta.attached[b.name]])
             touched_pe_slots.append(ed.pe_slot[b.name])
         elif b.kind == BlockKind.MEM:
@@ -366,6 +382,7 @@ def apply_delta(
                 ("mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb"), cols
             ):
                 setattr(ed, f, _append1(getattr(ed, f), np.float32(v)))
+            ed.mem_active = _append1(ed.mem_active, np.float32(1.0))
             ed.mem_noc = _append1(ed.mem_noc, ed.noc_slot[delta.attached[b.name]])
 
     # 3) knob edits (swap): refresh the touched slot's rate + coefficients
@@ -434,10 +451,10 @@ def apply_delta(
 # per-design row keys, in the order buffers are allocated/filled
 ROW_KEYS = (
     "task_pe", "task_mem", "pe_accel",
-    "pe_peak", "pe_pj", "pe_leak", "pe_area", "pe_noc",
+    "pe_peak", "pe_pj", "pe_leak", "pe_area", "pe_noc", "pe_active",
     "mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb",
-    "mem_noc",
-    "noc_bw", "noc_links", "noc_leak", "noc_area", "noc_pj",
+    "mem_noc", "mem_active",
+    "noc_bw", "noc_links", "noc_leak", "noc_area", "noc_active", "noc_pj",
     "wl_budget", "power_budget", "area_budget", "alpha",
 )
 
@@ -460,16 +477,19 @@ def alloc_rows(
         "pe_leak": np.zeros((b, n_pe), np.float32),
         "pe_area": np.zeros((b, n_pe), np.float32),
         "pe_noc": np.zeros((b, n_pe), np.int32),
+        "pe_active": np.zeros((b, n_pe), np.float32),
         "mem_bw": np.ones((b, n_mem), np.float32),
         "mem_pj": np.zeros((b, n_mem), np.float32),
         "mem_leak": np.zeros((b, n_mem), np.float32),
         "mem_area_fixed": np.zeros((b, n_mem), np.float32),
         "mem_area_per_mb": np.zeros((b, n_mem), np.float32),
         "mem_noc": np.zeros((b, n_mem), np.int32),
+        "mem_active": np.zeros((b, n_mem), np.float32),
         "noc_bw": np.ones((b, n_noc), np.float32),
         "noc_links": np.ones((b, n_noc), np.int32),
         "noc_leak": np.zeros((b, n_noc), np.float32),
         "noc_area": np.zeros((b, n_noc), np.float32),
+        "noc_active": np.zeros((b, n_noc), np.float32),
         "noc_pj": np.zeros((b,), np.float32),
         "wl_budget": np.full((b, n_wl), BIG, np.float32),
         "power_budget": np.full((b,), BIG, np.float32),
@@ -480,10 +500,10 @@ def alloc_rows(
 
 
 _TASK_FIELDS = ("task_pe", "task_mem", "pe_accel")
-_PE_FIELDS = ("pe_peak", "pe_pj", "pe_leak", "pe_area", "pe_noc")
+_PE_FIELDS = ("pe_peak", "pe_pj", "pe_leak", "pe_area", "pe_noc", "pe_active")
 _MEM_FIELDS = (
     "mem_bw", "mem_pj", "mem_leak", "mem_area_fixed", "mem_area_per_mb",
-    "mem_noc",
+    "mem_noc", "mem_active",
 )
 ENCODED_FIELDS = _TASK_FIELDS + _PE_FIELDS + _MEM_FIELDS + _NOC_ARRAY_FIELDS
 
@@ -736,20 +756,27 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
         + (row["mem_pj"][task_mem] + row["noc_pj"] * hops)
         * (enc.read_bytes + enc.write_bytes)
     )
+    # active-slot masked rollups: inactive slots (device-side joins over the
+    # capacity-padded inventory — host rows are all-active with 0.0 pads, so
+    # the mask multiply is bit-exact there) price as absent hardware
     leak_w = (
-        jnp.sum(row["pe_leak"]) + jnp.sum(row["mem_leak"])
-        + jnp.sum(row["noc_leak"])
+        jnp.sum(row["pe_leak"] * row["pe_active"])
+        + jnp.sum(row["mem_leak"] * row["mem_active"])
+        + jnp.sum(row["noc_leak"] * row["noc_active"])
     )
     energy = dyn_pj * 1e-12 + leak_w * now
     power = jnp.where(now > 0, energy / jnp.maximum(now, 1e-30), 0.0)
     cap = enc.write_bytes @ onehot_mem
     area = (
-        jnp.sum(row["pe_area"])
+        jnp.sum(row["pe_area"] * row["pe_active"])
         + jnp.sum(
-            row["mem_area_fixed"]
-            + row["mem_area_per_mb"] * jnp.maximum(cap, 1.0) / 1e6
+            (
+                row["mem_area_fixed"]
+                + row["mem_area_per_mb"] * jnp.maximum(cap, 1.0) / 1e6
+            )
+            * row["mem_active"]
         )
-        + jnp.sum(row["noc_area"])
+        + jnp.sum(row["noc_area"] * row["noc_active"])
     )
     dists = jnp.stack(
         [

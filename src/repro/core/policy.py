@@ -175,11 +175,18 @@ class PolicyBase:
 
     name = "base"
     needs_result = False
+    # the on-device move menu this policy corresponds to when the explorer
+    # runs chain-batched (device_explore.MENUS). Any policy can carry the
+    # chain-population state between blocks (``device_carry``), and every
+    # checkpoint round-trips it bit-exactly; subclasses with a device-
+    # eligible selection heuristic override the menu name.
+    device_menu = "naive_sa"
 
     def __init__(self) -> None:
         self.ledger = CodesignLedger()
         self._taboo: Dict[Tuple[str, str], int] = {}
         self._sticky: Optional[str] = None  # codesign-off focus fixation
+        self.device_carry: Optional[tuple] = None
 
     def bind(self, tdg, db, budget, cfg, rng) -> None:
         self.tdg = tdg
@@ -202,10 +209,11 @@ class PolicyBase:
         self.ledger.log(rec)
 
     def checkpoint(self) -> object:
-        return (dict(self._taboo), self._sticky)
+        return (dict(self._taboo), self._sticky, copy_carry(self.device_carry))
 
     def restore(self, ck: object) -> None:
         self._taboo, self._sticky = dict(ck[0]), ck[1]
+        self.device_carry = copy_carry(ck[2]) if len(ck) > 2 else None
 
     def move_penalty(self, design: Design, cand) -> float:
         """Development-cost scoring hook — 0.0 for every stock policy, so
@@ -343,21 +351,13 @@ class DeviceSA(NaiveSA):
 
     ``device_menu`` names the on-device move menu the policy corresponds
     to: ``naive_sa`` samples the packed move table uniformly — the menu the
-    R=1/K=1 parity contract is stated against."""
+    R=1/K=1 parity contract is stated against. (The carry storage and its
+    bit-exact checkpoint round-trip live on :class:`PolicyBase` now, so
+    every policy can drive chain blocks; this class survives as the
+    canonical registry name for the uniform-menu device search.)"""
 
     name = "device_sa"
     device_menu = "naive_sa"
-
-    def __init__(self) -> None:
-        super().__init__()
-        self.device_carry: Optional[tuple] = None
-
-    def checkpoint(self) -> object:
-        return (dict(self._taboo), self._sticky, copy_carry(self.device_carry))
-
-    def restore(self, ck: object) -> None:
-        self._taboo, self._sticky = dict(ck[0]), ck[1]
-        self.device_carry = copy_carry(ck[2]) if len(ck) > 2 else None
 
 
 class TaskAware(NaiveSA):
@@ -405,9 +405,15 @@ class FarsiPolicy(TaskBlockAware):
     rotation. Replays the recorded golden accepted-move sequences
     bit-for-bit under a fixed seed (tests/test_policy.py fixtures;
     regenerated via tests/gen_golden_policy_seqs.py only when search
-    behaviour changes deliberately)."""
+    behaviour changes deliberately).
+
+    Device-eligible: the ``farsi`` chain menu weights the packed move table
+    by bottleneck telemetry AND folds in the Algorithm-1 move-kind
+    precedence (join > migrate ≈ attach > fork > swap) — the on-device
+    counterpart of ``propose_moves``'s dev-cost-weighted ordering."""
 
     name = "farsi"
+    device_menu = "farsi"
 
     def propose_moves(self, design, focus) -> List[str]:
         allowed = self._algorithm1_moves(design, focus)
@@ -427,9 +433,15 @@ class BottleneckRelaxation(PolicyBase):
     top-bottleneck column picks the block, and the longest task hosted on it
     is targeted. Move order stays random — this isolates *where to aim* (the
     telemetry's contribution) from *what to do* (Algorithm 1, see
-    :class:`LocalityExploitation` / :class:`FarsiPolicy`)."""
+    :class:`LocalityExploitation` / :class:`FarsiPolicy`).
+
+    Device-eligible: the ``telemetry`` chain menu is this policy's
+    on-device counterpart — move rows are weighted by the bottleneck
+    seconds of their focus slot, straight from the carry's telemetry
+    columns."""
 
     name = "bottleneck"
+    device_menu = "telemetry"
 
     def select_focus(self, design, dist, view) -> Focus:
         metric = self._metric_farthest(dist)

@@ -10,6 +10,15 @@ fused Pallas kernel (``ops.phase_sim``) when the backend runs with the
 kernel enabled and through the XLA reference (``simulate_batch``)
 otherwise. Both return the same output dict, which keeps the scan body
 layout-agnostic: the carry never stores kernel-specific packing.
+
+Mixed mapping+allocation chains price through the SAME call: allocation
+moves are shape-preserving over capacity-padded slot inventories, so a
+fork/join/swap/NoC-attach step still hands this function an (R,)-rows dict
+— the per-slot coefficient columns are (R, cap) wide with
+``pe_active``/``mem_active`` masks pricing inactive slots as absent (zero
+leak/area contribution, pad-neutral rates). Nothing here distinguishes a
+mapping-only step from a mixed one; the move semantics live entirely in
+the carry mutations upstream.
 """
 from __future__ import annotations
 

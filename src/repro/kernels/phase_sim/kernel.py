@@ -74,16 +74,19 @@ def _phase_sim_kernel(
     pe_leak_ref,   # (1, S) f32
     pe_area_ref,   # (1, S) f32
     pe_noc_ref,    # (1, S) i32  chain index each PE slot attaches to
+    pe_active_ref,  # (1, S) f32 active-slot mask (0 ⇒ priced as absent)
     mem_bw_ref,    # (1, S) f32
     mem_pj_ref,    # (1, S) f32
     mem_leak_ref,  # (1, S) f32
     mem_af_ref,    # (1, S) f32  fixed area
     mem_amb_ref,   # (1, S) f32  area per MB
     mem_noc_ref,   # (1, S) i32  chain index each MEM slot attaches to
+    mem_active_ref,  # (1, S) f32 active-slot mask
     noc_bw_ref,    # (1, N) f32  per-NoC per-link bandwidth (chain order)
     noc_links_ref,  # (1, N) i32 per-NoC channel count
     noc_leak_ref,  # (1, N) f32
     noc_area_ref,  # (1, N) f32
+    noc_active_ref,  # (1, N) f32 active-slot mask
     nocs_ref,      # (1, N_NOCS) f32 packed scalars (NOCS_COLS order)
     wlbud_ref,     # (1, NW) f32 per-workload latency budget
     # --- outputs ----------------------------------------------------------
@@ -286,17 +289,23 @@ def _phase_sim_kernel(
         + (dot(ohm_ref[...], mem_pj_ref[0]) + nocs_ref[0, 0] * hops)
         * (rd_b + wr_b)
     )
+    # active-slot masked rollups (inactive slots price as absent hardware;
+    # host rows are all-active so the ×1.0 multiply is bit-exact)
     leak_w = (
-        jnp.sum(pe_leak_ref[0]) + jnp.sum(mem_leak_ref[0])
-        + jnp.sum(noc_leak_ref[0])
+        jnp.sum(pe_leak_ref[0] * pe_active_ref[0])
+        + jnp.sum(mem_leak_ref[0] * mem_active_ref[0])
+        + jnp.sum(noc_leak_ref[0] * noc_active_ref[0])
     )
     energy = dyn_pj * 1e-12 + leak_w * now
     power = jnp.where(now > 0, energy / jnp.maximum(now, 1e-30), 0.0)
     cap = dot(wr_b, ohm_ref[...])  # per-MEM-slot resident bytes
     area = (
-        jnp.sum(pe_area_ref[0])
-        + jnp.sum(mem_af_ref[0] + mem_amb_ref[0] * jnp.maximum(cap, 1.0) / 1e6)
-        + jnp.sum(noc_area_ref[0])
+        jnp.sum(pe_area_ref[0] * pe_active_ref[0])
+        + jnp.sum(
+            (mem_af_ref[0] + mem_amb_ref[0] * jnp.maximum(cap, 1.0) / 1e6)
+            * mem_active_ref[0]
+        )
+        + jnp.sum(noc_area_ref[0] * noc_active_ref[0])
     )
     wlbud = wlbud_ref[0]
     alpha = nocs_ref[0, 3]
@@ -334,9 +343,9 @@ def phase_sim_batch(
     task_pe: jax.Array,   # (B, T) i32
     task_mem: jax.Array,  # (B, T) i32
     accel: jax.Array,     # (B, T)
-    pe_coeffs: Dict[str, jax.Array],   # 4 × (B, S) f32 + (B, S) i32 pe_noc
-    mem_coeffs: Dict[str, jax.Array],  # 5 × (B, S) f32 + (B, S) i32 mem_noc
-    noc_arrays: Dict[str, jax.Array],  # 4 × (B, N) per-NoC chain columns
+    pe_coeffs: Dict[str, jax.Array],   # 5 × (B, S) f32 + (B, S) i32 pe_noc
+    mem_coeffs: Dict[str, jax.Array],  # 6 × (B, S) f32 + (B, S) i32 mem_noc
+    noc_arrays: Dict[str, jax.Array],  # 5 × (B, N) per-NoC chain columns
     nocs: jax.Array,      # (B, N_NOCS) packed scalars
     wlbud: jax.Array,     # (B, NW)
     *,
@@ -365,9 +374,10 @@ def phase_sim_batch(
             shared((t, t)), shared((t, n_wl)),
             perb(t), perb(t), perb(t),
             perb(s_pe), perb(s_pe), perb(s_pe), perb(s_pe), perb(s_pe),
+            perb(s_pe),
             perb(s_mem), perb(s_mem), perb(s_mem), perb(s_mem), perb(s_mem),
-            perb(s_mem),
-            perb(n_noc), perb(n_noc), perb(n_noc), perb(n_noc),
+            perb(s_mem), perb(s_mem),
+            perb(n_noc), perb(n_noc), perb(n_noc), perb(n_noc), perb(n_noc),
             perb(N_NOCS), perb(n_wl),
         ],
         out_specs=[perb(t), perb(t), perb(n_wl), perb(N_SCAL),
@@ -393,11 +403,13 @@ def phase_sim_batch(
         task_pe, task_mem, accel,
         pe_coeffs["pe_peak"], pe_coeffs["pe_pj"],
         pe_coeffs["pe_leak"], pe_coeffs["pe_area"], pe_coeffs["pe_noc"],
+        pe_coeffs["pe_active"],
         mem_coeffs["mem_bw"], mem_coeffs["mem_pj"], mem_coeffs["mem_leak"],
         mem_coeffs["mem_area_fixed"], mem_coeffs["mem_area_per_mb"],
-        mem_coeffs["mem_noc"],
+        mem_coeffs["mem_noc"], mem_coeffs["mem_active"],
         noc_arrays["noc_bw"], noc_arrays["noc_links"],
         noc_arrays["noc_leak"], noc_arrays["noc_area"],
+        noc_arrays["noc_active"],
         nocs, wlbud,
     )
     return finish, bneck, wllat, scal, pe_bneck, mem_bneck, noc_bneck

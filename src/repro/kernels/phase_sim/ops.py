@@ -78,17 +78,20 @@ def phase_sim(
     accel = _pad_axis(jnp.asarray(rows["pe_accel"], f32), t, 1.0)
 
     pe_coeffs = {k: jnp.asarray(rows[k], f32)
-                 for k in ("pe_peak", "pe_pj", "pe_leak", "pe_area")}
+                 for k in ("pe_peak", "pe_pj", "pe_leak", "pe_area",
+                           "pe_active")}
     pe_coeffs["pe_noc"] = jnp.asarray(rows["pe_noc"], jnp.int32)
     mem_coeffs = {k: jnp.asarray(rows[k], f32)
                   for k in ("mem_bw", "mem_pj", "mem_leak",
-                            "mem_area_fixed", "mem_area_per_mb")}
+                            "mem_area_fixed", "mem_area_per_mb",
+                            "mem_active")}
     mem_coeffs["mem_noc"] = jnp.asarray(rows["mem_noc"], jnp.int32)
     noc_arrays = {
         "noc_bw": jnp.asarray(rows["noc_bw"], f32),
         "noc_links": jnp.asarray(rows["noc_links"], jnp.int32),
         "noc_leak": jnp.asarray(rows["noc_leak"], f32),
         "noc_area": jnp.asarray(rows["noc_area"], f32),
+        "noc_active": jnp.asarray(rows["noc_active"], f32),
     }
     nocs = jnp.stack(
         [

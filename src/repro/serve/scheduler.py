@@ -34,6 +34,12 @@ never the tick, never the service:
   ``PythonBackend`` fallback (the service keeps serving); a session whose
   fallback also fails is quarantined to ``FAILED`` with the error recorded
   on it;
+* chain-batched (``device_sa``) sessions ride the same ladder: their fused
+  (R, K) block re-dispatch is deterministic so retries price an identical
+  block, and the degraded regime is the host-driven loop (K dispatches of
+  the same compiled step at K=1 — bit-identical results by the parity
+  contract, at host-loop cost) rather than the scalar fallback, which
+  cannot price a device block;
 * an exception escaping a session *coroutine* fails (or, with restarts
   budgeted, rebuilds from the explorer's last committed accept via the
   policy checkpoint machinery) that one session;
@@ -265,6 +271,96 @@ class ContinuousBatchScheduler:
             ))
             return None
 
+    def _price_chain_session(self, session: Session):
+        """The retry/degrade ladder for a chain-batched session (its pending
+        object is a fused (R, K) :class:`ChainRequest`, not a candidate
+        list). Same shape as :meth:`_price_session` — retry with capped
+        exponential backoff, degrade after ``degrade_after`` consecutive
+        failures, FAIL only when the degraded path fails too — with one
+        difference: the scalar fallback cannot price a fused device block,
+        so the degraded regime is the *host-driven loop* instead — the same
+        compiled chain step dispatched K=1 at a time with the carry pulled
+        back between iterations. By the R=1-parity contract that replays
+        the fused block bit-for-bit, so degradation changes dispatch
+        granularity (and cost), never the search. The injector is consulted
+        before every primary attempt (a vetoed attempt raises without
+        submitting, and a ``ChainRequest`` re-dispatch is deterministic, so
+        the retry prices an identical block); the degraded loop is never
+        vetoed — degradation models recovery, not a second failure domain.
+        Returns None iff the session was failed."""
+        rp = self.retry
+        fi = self.faults
+        req: ChainRequest = session.pending
+        backend = self.backend_for(session.request.tdg)
+        if not hasattr(backend, "run_chains"):
+            self._fail(session, DispatchFailed(
+                f"session {session.name!r}: backend {backend.name!r} does "
+                "not support device chain blocks"
+            ))
+            return None
+        if not session.degraded:
+            delay = rp.backoff_s
+            last: Optional[BaseException] = None
+            for attempt in range(rp.max_attempts):
+                if session.n_consec_dispatch_failures >= rp.degrade_after:
+                    break  # ladder exhausted: degrade instead of retrying
+                if attempt > 0:
+                    self.n_retries += 1
+                    if delay > 0.0:
+                        time.sleep(delay)
+                    delay = min(delay * 2.0, rp.backoff_cap_s)
+                try:
+                    if fi is not None and fi.draw_dispatch_fault(session.name):
+                        raise InjectedDispatchError(
+                            f"injected dispatch fault: {session.name}"
+                        )
+                    block = backend.run_chains(req)
+                    session.n_consec_dispatch_failures = 0
+                    return block
+                except Exception as exc:
+                    self.n_dispatch_faults += 1
+                    session.n_consec_dispatch_failures += 1
+                    last = exc
+            if session.n_consec_dispatch_failures < rp.degrade_after:
+                self._fail(session, DispatchFailed(
+                    f"session {session.name!r}: {rp.max_attempts} chain-"
+                    f"block dispatch attempts failed (last: {last!r})"
+                ))
+                return None
+            session.degraded = True
+            self.n_degraded += 1
+        # degraded regime: the host-loop schedule — K dispatches of the same
+        # compiled step at k=1, carry round-tripped through host numpy
+        # between iterations (the parity oracle's exact access pattern)
+        try:
+            import numpy as _np
+
+            carry = req.carry
+            block = None
+            mvs, accs, fts = [], [], []
+            for i in range(req.k):
+                block = backend.run_chains(dataclasses.replace(
+                    req, k=1, it0=req.it0 + i, carry=carry,
+                ))
+                carry = block.carry
+                mvs.append(block.move_idx)
+                accs.append(block.accepted)
+                fts.append(block.fit_trace)
+            block = dataclasses.replace(
+                block,
+                move_idx=_np.concatenate(mvs, axis=1),
+                accepted=_np.concatenate(accs, axis=1),
+                fit_trace=_np.concatenate(fts, axis=1),
+            )
+            return block
+        except Exception as exc:
+            self.n_dispatch_faults += 1
+            self._fail(session, DispatchFailed(
+                f"session {session.name!r}: degraded host-loop chain "
+                f"dispatch failed ({exc!r})"
+            ))
+            return None
+
     # ---- the tick --------------------------------------------------------
     def tick(self) -> List[Session]:
         """One scheduler round: pack all live sessions' pending candidates
@@ -311,32 +407,16 @@ class ContinuousBatchScheduler:
         # chain-batched sessions (config.chain_r > 0) carry a ChainRequest
         # instead of a candidate list: each is one fused (R, K) device block
         # already — there is nothing to pack, so they dispatch individually
-        # and rejoin the ordinary pack only for their final winner decode
+        # through the SAME retry/degrade ladder as ordinary sessions
+        # (_price_chain_session: backoff-capped retries, then the host-loop
+        # regime as the degraded backend) and rejoin the ordinary pack only
+        # for their final winner decode
         for s in list(self._live):
             if not isinstance(s.pending, ChainRequest):
                 continue
-            backend = self.backend_for(s.request.tdg)
-            if not hasattr(backend, "run_chains"):
-                self._fail(s, DispatchFailed(
-                    f"session {s.name!r}: backend {backend.name!r} does not "
-                    "support device chain blocks"
-                ))
-                continue
             t0 = time.perf_counter()
-            try:
-                if fi is not None and fi.draw_dispatch_fault(s.name):
-                    raise InjectedDispatchError(
-                        f"injected dispatch fault: {s.name}"
-                    )
-                block = backend.run_chains(s.pending)
-            except Exception as exc:
-                # no degrade ladder here: the scalar fallback cannot price a
-                # fused device block, so a failing chain dispatch quarantines
-                # its session (the ordinary sessions' ladder is untouched)
-                self.n_dispatch_faults += 1
-                self._fail(s, DispatchFailed(
-                    f"session {s.name!r}: chain-block dispatch failed ({exc!r})"
-                ))
+            block = self._price_chain_session(s)
+            if block is None:  # failed through the whole ladder
                 continue
             s.sim_wall_s += time.perf_counter() - t0
             try:

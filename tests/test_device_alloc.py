@@ -1,0 +1,243 @@
+"""Device-resident allocation moves: MoveTable edge cases (single-slot
+classes, all-taboo menus, capacity-saturated fork masks) and the PR
+acceptance pins for the mixed mapping+allocation block — bit-exact R=1
+parity against the host-driven loop, chain-i identity across population
+sizes, and the ``reconcile_alloc`` device→host round trip."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeviceChainRunner,
+    Explorer,
+    ExplorerConfig,
+    HardwareDatabase,
+    MoveTable,
+    audio,
+    calibrated_budget,
+    distance,
+    random_single_noc_designs,
+    simulate,
+)
+from repro.core.design import Design
+from repro.core.device_explore import (
+    MV_FORK_MEM,
+    MV_FORK_PE,
+    MV_JOIN_PE,
+    MV_MIG_MEM,
+    MV_MIG_PE,
+    MV_SWAP_PE,
+)
+from repro.core.phase_sim_jax import BIG, EncodedDesign
+
+
+def _fixture(seed=7):
+    db = HardwareDatabase()
+    g = audio()
+    bud = calibrated_budget(db)
+    d = random_single_noc_designs(g, 1, seed=seed)[0]
+    return g, db, bud, d
+
+
+def _kinds_of(runner, design, *, alloc, cap_pe=None, cap_mem=None):
+    """The packed table's kind column, for mapping move_idx → MV_* codes."""
+    ed = EncodedDesign.of(design, runner.g, runner.db, runner.enc)
+    tab = MoveTable.of(
+        ed, runner.enc, alloc=alloc, cap_pe=cap_pe, cap_mem=cap_mem
+    )
+    return tab.kind
+
+
+# ---------------------------------------------------------------------------
+# MoveTable edge cases
+# ---------------------------------------------------------------------------
+def test_single_slot_classes_self_mask_every_move():
+    """``Design.base`` has one PE and one MEM: mapping-only, every migrate
+    row's destination is the task's current slot, so the whole menu is
+    self-masked — ``any_valid`` is false on every chain every step, the
+    block force-rejects throughout (no accepts, fitness pinned at the
+    fresh-carry BIG, task maps and taboo untouched)."""
+    db = HardwareDatabase()
+    g = audio()
+    bud = calibrated_budget(db)
+    d = Design.base(g)
+    runner = DeviceChainRunner(g, db)
+    res = runner.run_chains(d, bud, r=4, k=8, seed=3)
+    assert int(res.accepted.sum()) == 0
+    assert np.all(res.fit_trace == np.float32(BIG))
+    t = res.task_pe.shape[1]
+    assert np.array_equal(res.task_pe, np.zeros((4, t), res.task_pe.dtype))
+    assert np.array_equal(res.task_mem, np.zeros((4, t), res.task_mem.dtype))
+    # forced rejects must not burn taboo slots on the (unsampleable) menu
+    assert int(res.carry.taboo.max()) == 0
+    assert runner.n_fallback == 0
+
+
+def test_movetable_structure_and_delta_guard():
+    """Mapping-only tables are pure migrate crosses; ``alloc=True`` adds
+    fork crosses, join/swap rows, and (single-NoC design) NO attach rows.
+    ``delta_of`` only bridges migrate rows back to host MoveDeltas."""
+    g, db, bud, d = _fixture()
+    runner = DeviceChainRunner(g, db)
+    ed = EncodedDesign.of(d, runner.g, runner.db, runner.enc)
+    t = len(runner.enc.names)
+    s_pe = int(ed.pe_peak.shape[0])
+    s_mem = int(ed.mem_bw.shape[0])
+
+    plain = MoveTable.of(ed, runner.enc)
+    assert plain.n_moves == t * s_pe + t * s_mem
+    assert set(np.unique(plain.kind)) == {MV_MIG_PE, MV_MIG_MEM}
+
+    cap_pe, cap_mem = 8, 8
+    wide = MoveTable.of(ed, runner.enc, alloc=True,
+                        cap_pe=cap_pe, cap_mem=cap_mem)
+    kinds = set(int(k) for k in np.unique(wide.kind))
+    assert {MV_MIG_PE, MV_MIG_MEM, MV_FORK_PE, MV_FORK_MEM,
+            MV_JOIN_PE, MV_SWAP_PE} <= kinds
+    assert MV_FORK_MEM in kinds
+    # single NoC chain → attach rows are degenerate and omitted
+    assert all(int(k) <= 7 for k in kinds)
+    # migrate rows now cross the padded capacity, not just the real slots
+    assert np.sum(wide.kind == MV_MIG_PE) == t * cap_pe
+
+    fork_rows = np.flatnonzero(wide.kind == MV_FORK_PE)
+    with pytest.raises(ValueError):
+        wide.delta_of(int(fork_rows[0]), runner.enc, ed)
+    mig_rows = np.flatnonzero(wide.kind == MV_MIG_PE)
+    delta = wide.delta_of(int(mig_rows[0]), runner.enc, ed)
+    assert delta is not None
+
+
+def test_all_taboo_menu_force_rejects_until_decay():
+    """A carry whose taboo column is saturated masks the ENTIRE menu: the
+    block must force-reject (no accepts, no state drift, no taboo
+    re-stamping) until the counters decay to zero."""
+    g, db, bud, d = _fixture(seed=11)
+    runner = DeviceChainRunner(g, db)
+    warm = runner.run_chains(d, bud, r=4, k=4, seed=2, alloc=True)
+    # counters decrement BEFORE the validity check: 4 keeps every row
+    # masked for the whole 3-step block (4→3→2→1, never 0)
+    frozen = warm.carry._replace(
+        taboo=np.full_like(warm.carry.taboo, 4)
+    )
+    res = runner.run_chains(
+        d, bud, r=4, k=3, seed=2, it0=4, carry=frozen, alloc=True
+    )
+    assert int(res.accepted.sum()) == 0
+    assert np.array_equal(res.fit_trace,
+                          np.repeat(warm.fitness[:, None], 3, axis=1))
+    assert np.array_equal(res.carry.task_pe, warm.carry.task_pe)
+    assert np.array_equal(res.carry.task_mem, warm.carry.task_mem)
+    assert np.array_equal(res.carry.pe_active, warm.carry.pe_active)
+    # counters only decayed — never re-stamped to ttl by a forced reject
+    assert int(res.carry.taboo.max()) == 1
+    assert int(res.carry.taboo.min()) == 1
+    assert runner.n_fallback == 0
+
+
+def test_capacity_saturated_fork_mask():
+    """With explicit caps pinned to the real slot counts every slot starts
+    active, so no fork row is samplable at step 0 — the validity mask, not
+    luck, keeps forks out of the menu (and the explicit-cap path must not
+    desync the taboo width from the widened table)."""
+    g, db, bud, d = _fixture(seed=5)
+    runner = DeviceChainRunner(g, db)
+    ed = EncodedDesign.of(d, runner.g, runner.db, runner.enc)
+    s_pe = int(ed.pe_peak.shape[0])
+    s_mem = int(ed.mem_bw.shape[0])
+    res = runner.run_chains(
+        d, bud, r=32, k=1, seed=13, alloc=True, cap_pe=s_pe, cap_mem=s_mem
+    )
+    kinds = _kinds_of(runner, d, alloc=True, cap_pe=s_pe, cap_mem=s_mem)
+    sampled = kinds[res.move_idx[:, 0]]
+    assert not np.any((sampled == MV_FORK_PE) | (sampled == MV_FORK_MEM))
+    assert runner.n_fallback == 0
+
+
+# ---------------------------------------------------------------------------
+# mixed-move acceptance pins
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("menu", ["naive_sa", "telemetry", "farsi"])
+def test_mixed_block_parity_with_host_loop(menu):
+    """Tentpole acceptance bar: at R=1 the fused mixed mapping+allocation
+    block replays the host-driven loop bit-for-bit on every menu — moves,
+    accepts, fitness trace, and the full carry (active masks, allocation
+    columns, provenance included)."""
+    g, db, bud, d = _fixture(seed=7)
+    runner = DeviceChainRunner(g, db)
+    fused = runner.run_chains(d, bud, r=1, k=12, seed=7, menu=menu,
+                              alloc=True)
+    host = runner.run_chains_host(d, bud, r=1, n_steps=12, seed=7,
+                                  menu=menu, alloc=True)
+    assert fused.seq(0) == host.seq(0)
+    assert np.array_equal(fused.fit_trace, host.fit_trace)
+    for a, b in zip(fused.carry, host.carry):
+        assert np.array_equal(a, b)
+    assert runner.n_fallback == 0
+
+
+def test_mixed_block_samples_allocation_moves():
+    """The widened table must actually exercise allocation rows — a run
+    whose sampled kinds never leave the migrate class means the menu
+    collapsed back to PR-8 mapping-only."""
+    g, db, bud, d = _fixture(seed=7)
+    runner = DeviceChainRunner(g, db)
+    res = runner.run_chains(d, bud, r=16, k=24, seed=7, menu="farsi",
+                            alloc=True)
+    kinds = _kinds_of(runner, d, alloc=True)
+    sampled = kinds[res.move_idx]
+    assert np.any(sampled > MV_MIG_MEM), "no allocation move ever sampled"
+
+
+def test_mixed_chain_sequence_independent_of_population():
+    """fold_in(seed, chain) keying must survive the widened table: chain
+    i's mixed-move sequence is identical in an R=8 and an R=64 run."""
+    g, db, bud, d = _fixture(seed=11)
+    runner = DeviceChainRunner(g, db)
+    small = runner.run_chains(d, bud, r=8, k=8, seed=3, menu="telemetry",
+                              alloc=True)
+    big = runner.run_chains(d, bud, r=64, k=8, seed=3, menu="telemetry",
+                            alloc=True)
+    for chain in (0, 3, 7):
+        assert small.seq(chain) == big.seq(chain), chain
+    assert np.array_equal(small.fit_trace, big.fit_trace[:8])
+    assert np.array_equal(small.carry.pe_active, big.carry.pe_active[:8])
+    assert np.array_equal(small.carry.task_pe, big.carry.task_pe[:8])
+
+
+def test_reconcile_alloc_round_trips_to_host_fitness():
+    """Decoding the winning chain back into a Design (clones, retunes,
+    re-homes, removals) must land on the device fitness when re-priced by
+    the host simulator — f32-tolerance, not shape-tolerance."""
+    g, db, bud, d = _fixture(seed=7)
+    runner = DeviceChainRunner(g, db)
+    res = runner.run_chains(d, bud, r=8, k=32, seed=9, menu="farsi",
+                            alloc=True)
+    dev_fit = float(res.fitness[res.winner])
+    assert np.isfinite(dev_fit)
+    d2 = copy.deepcopy(d)
+    runner.reconcile_alloc(d2, res)
+    host_fit = distance(simulate(d2, g, db), bud).fitness(0.05)
+    assert host_fit == pytest.approx(dev_fit, rel=1e-4, abs=1e-4)
+
+
+def test_explorer_chain_alloc_end_to_end():
+    """``ExplorerConfig(chain_alloc=True)`` runs host-free mixed blocks:
+    history records ``chain_mixed`` moves, n_sims counts R·K device steps
+    plus the single final decode, and the reconciled winner's host-priced
+    fitness matches the device trace's final winner fitness."""
+    g, db, bud, d = _fixture()
+    res = Explorer(
+        g, db, bud,
+        ExplorerConfig(policy="device_sa", max_iterations=48, seed=4,
+                       backend="jax", chain_r=8, chain_k=16,
+                       chain_alloc=True),
+    ).run_chains()
+    moves = {h["move"] for h in res.history}
+    assert moves == {"chain_mixed"}
+    assert res.chained and res.chain_r == 8
+    assert res.n_sims == 8 * 48 + 1  # R·K device steps + one winner decode
+    dev_fit = res.history[-1]["fitness"]
+    host_fit = res.best_distance.fitness(0.05)
+    assert host_fit == pytest.approx(dev_fit, rel=1e-4, abs=1e-4)

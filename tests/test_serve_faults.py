@@ -202,6 +202,42 @@ def test_degradation_ladder(db, g, bud):
     assert bstats["ed"].n_sims == 0  # ...and the device priced nothing
 
 
+def test_chain_session_degrades_to_host_loop_bit_identically(db, g, bud):
+    """Chain-batched sessions ride the same ladder: with a 100% injected
+    dispatch-fault rate the fused-block session degrades to the host-loop
+    regime (K dispatches of the same compiled step at k=1) instead of the
+    scalar fallback — and by the R=1-parity contract the degraded search
+    walks the exact move/accept/fitness history of the fault-free run:
+    degradation changes dispatch granularity, never the search."""
+    def chain_cfg():
+        return ExplorerConfig(policy="device_sa", seed=3, max_iterations=16,
+                              chain_r=4, chain_k=8, chain_alloc=True,
+                              backend="jax")
+
+    ref_svc = DseService(db, backend="jax", retry=FAST_RETRY)
+    ref = ref_svc.submit("chain", g, bud, chain_cfg())
+    ref_stats = ref_svc.run()
+    assert ref_stats.n_done == 1 and ref_stats.n_degraded == 0
+    assert ref.result.chained
+
+    fi = FaultInjector(seed=0, dispatch_fault_rate=1.0)
+    svc = DseService(db, backend="jax", faults=fi, retry=FAST_RETRY)
+    h = svc.submit("chain", g, bud, chain_cfg())
+    stats = svc.run()
+    assert stats.n_done == 1 and stats.n_failed == 0
+    assert stats.n_degraded == 1 and h.degraded and h.done
+    # every primary fused-block attempt was vetoed; the host loop (never
+    # vetoed — it IS the recovery path) priced everything after that
+    assert stats.n_dispatch_faults == FAST_RETRY.degrade_after
+    res = h.result
+    assert res.chained and res.chain_r == 4
+    hist = [(e["iteration"], e["move"], e["accepted"], e["fitness"])
+            for e in res.history]
+    ref_hist = [(e["iteration"], e["move"], e["accepted"], e["fitness"])
+                for e in ref.result.history]
+    assert hist == ref_hist
+
+
 # ---- crash restart ---------------------------------------------------------
 def test_crash_restart_resumes_from_committed_state(db, g, bud, baseline):
     """A crashed coroutine with restart budget is rebuilt from the
