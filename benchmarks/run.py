@@ -77,7 +77,9 @@ def main() -> None:
     ap.add_argument(
         "--smoke",
         action="store_true",
-        help="perf-regression guard: tiny simbackend run that *asserts* the "
+        help="perf-regression guard: runs the repro.analysis layout "
+        "contracts first (non-zero exit on any cross-file desync), then a "
+        "tiny simbackend run that *asserts* the "
         "JAX neighbour-eval path beats the Python path, both agree on the "
         "winner, multi-NoC batches dispatch at ≥0.5x the single-NoC "
         "throughput with zero fallbacks, the Pallas kernel matches the ref "
@@ -92,6 +94,17 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         t0 = time.perf_counter()
+        # layout contracts first: a desynced scal schema or taboo width
+        # makes every perf number below meaningless, so fail before
+        # timing anything (repro.analysis also runs standalone in tier-1)
+        from repro.analysis.contracts import run_contracts
+
+        contract_findings = run_contracts()
+        if contract_findings:
+            for f in contract_findings:
+                print(f"contracts.ERROR,0.0,{f.render()}", flush=True)
+            raise SystemExit("layout contracts violated — see above")
+        print("contracts.ok,0.0,all layout contracts hold", flush=True)
         emit(bench_simbackend.run(smoke=True))  # raises on regression
         print(f"smoke.wall,{(time.perf_counter()-t0)*1e6:.0f},bench wall time", flush=True)
         return

@@ -49,6 +49,14 @@ from .database import HardwareDatabase
 from .design import Design
 from .moves import MoveDelta, MoveSpec, apply_spec
 from .phase_sim import SimResult, simulate
+from .scal_layout import (
+    KIND_START as _KIND_START,
+    KIND_STOP as _KIND_STOP,
+    N_SCAL as _N_FIXED_SCAL,
+    SCAL_PREFIX as _SCAL_COLS,
+    TOP_MEM_COL as _TOP_MEM_COL,
+    TOP_PE_COL as _TOP_PE_COL,
+)
 from .ppa import total_leakage_w
 from .tdg import TaskGraph, workload_of
 
@@ -540,23 +548,21 @@ def _bucket(n: int) -> int:
 
 
 # layout of the device-packed scalar column block: the jit wrapper stacks
-# every per-design scalar into ONE (B, 14 + 2·S + N) matrix, so a batch
+# every per-design scalar into ONE (B, N_SCAL + 2·S + N) matrix, so a batch
 # crosses the device boundary as 3 leaves (scal, finish_s, bneck_code) —
 # per-leaf transfer + pytree overhead was a measurable slice of the
-# explorer's serial iteration. Column order mirrors
-# kernels/phase_sim/kernel.SCAL_COLS (the Pallas kernel's own packed
-# block), so on the kernel path the ops-layer unpack and this repack fold
-# to a no-op under jit and a future column lands identically in both.
-# Fixed columns first: the 9 named below, then bneck_kind_s at 9:12 and the
-# top-bottleneck slot indices at 12:14; the per-block bottleneck-seconds
+# explorer's serial iteration. Column order IS ``core.scal_layout`` (the
+# single source of truth the Pallas kernel's packed block also derives
+# from), so on the kernel path the ops-layer unpack and this repack fold
+# to a no-op under jit and a future column lands identically in both —
+# `python -m repro.analysis` contract ``scal-cols`` guards the coupling.
+# Fixed columns first (the SCAL_PREFIX scalars, then bneck_kind_s, then
+# the top-bottleneck slot pair); the per-block bottleneck-seconds
 # telemetry (pe_bneck_s, mem_bneck_s — S padded slots each — then
 # noc_bneck_s over the N padded chain positions) rides in the
 # variable-width tail, split on host via the batch's recorded (S, N) dims.
-_SCAL_COLS = (
-    "latency_s", "energy_j", "power_w", "area_mm2", "fitness",
-    "alp_time_s", "traffic_bytes", "n_phases", "all_done",
-)
-_N_FIXED_SCAL = len(_SCAL_COLS) + 3 + 2  # + bneck_kind_s + top_bneck pair
+# (_SCAL_COLS / _N_FIXED_SCAL and the unpack indices are imported from
+# core.scal_layout at the top of this module.)
 
 
 class _JaxBatch:
@@ -593,9 +599,9 @@ class _JaxBatch:
             raw = jax.device_get(self.out)
             scal = raw["scal"]
             host = {name: scal[:, i] for i, name in enumerate(_SCAL_COLS)}
-            host["bneck_kind_s"] = scal[:, 9:12]
-            host["top_bneck_pe"] = scal[:, 12]
-            host["top_bneck_mem"] = scal[:, 13]
+            host["bneck_kind_s"] = scal[:, _KIND_START:_KIND_STOP]
+            host["top_bneck_pe"] = scal[:, _TOP_PE_COL]
+            host["top_bneck_mem"] = scal[:, _TOP_MEM_COL]
             s_busy, n_noc = self.dims
             f = _N_FIXED_SCAL
             host["pe_bneck_s"] = scal[:, f:f + s_busy]

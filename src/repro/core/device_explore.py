@@ -63,7 +63,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.phase_sim.chain import resimulate_chains
 from .blocks import FREQ_LADDER_MHZ
 from .budgets import Budget
 from .database import HardwareDatabase
@@ -647,6 +646,12 @@ class DeviceChainRunner:
         self, r: int, k: int, menu: str, t0: float, decay: float, ttl: int,
         cap_pe: int, cap_mem: int,
     ):
+        # deferred: core must stay importable before kernels.phase_sim
+        # finishes initializing (chain.py itself imports core.phase_sim_jax,
+        # so a module-level import here closes an import cycle whenever the
+        # kernels package is imported first)
+        from ..kernels.phase_sim.chain import resimulate_chains
+
         enc = self.enc
         use_kernel, interpret = self.use_kernel, self.interpret
         t = len(enc.names)

@@ -551,7 +551,7 @@ def fill_budget(
     rows["alpha"][j] = alpha
 
 
-def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:  # repro: traced
     """Phase simulation + device-side scoring of ONE candidate row.
 
     This is the single-candidate oracle shared by :func:`simulate_batch`
@@ -814,7 +814,7 @@ def simulate_one(enc: EncodedWorkload, row: Dict[str, jnp.ndarray]) -> Dict[str,
     }
 
 
-def simulate_batch(
+def simulate_batch(  # repro: traced
     enc: EncodedWorkload,
     rows: Dict[str, jnp.ndarray],
 ) -> Dict[str, jnp.ndarray]:

@@ -32,7 +32,7 @@ from .ops import phase_sim
 __all__ = ["resimulate_chains"]
 
 
-def resimulate_chains(
+def resimulate_chains(  # repro: traced
     enc: EncodedWorkload,
     rows: Dict[str, jnp.ndarray],
     *,

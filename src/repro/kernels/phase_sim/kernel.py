@@ -33,22 +33,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-BIG = 1e30
+# scal output column layout (see _phase_sim_kernel rollup): the shared
+# ``core.scal_layout`` tuple — backend._SCAL_COLS is its prefix, so the
+# backend's device-side repack of the ops-layer dict folds to a no-op.
+# The layout module is the single source of truth (dependency-free, safe
+# mid-package-init); the contract checker (`python -m repro.analysis`)
+# guards that both sides keep deriving from it and that the rollup write
+# below stays the same width.
+from ...core.scal_layout import N_SCAL, SCAL_COLS  # re-exported for ops.py
 
-# scal output column layout (see _phase_sim_kernel rollup). The first 9
-# columns + the kind triple + the top-bottleneck pair mirror
-# backend._SCAL_COLS — keep them in sync so the backend's device-side repack
-# of the ops-layer dict folds to a no-op. ``top_bneck_pe``/``top_bneck_mem``
-# are the argmax slots of the per-block bottleneck-seconds telemetry
-# (pe_bneck / mem_bneck outputs), i.e. the block index a bottleneck-
-# relaxation policy should target next, computed on device.
-SCAL_COLS = (
-    "latency_s", "energy_j", "power_w", "area_mm2", "fitness",
-    "alp_time_s", "traffic_bytes", "n_phases", "all_done",
-    "kind_pe_s", "kind_mem_s", "kind_noc_s",
-    "top_bneck_pe", "top_bneck_mem",
-)
-N_SCAL = len(SCAL_COLS)
+BIG = 1e30
 
 # nocs input column layout (packed per-candidate scalars; the per-NoC chain
 # arrays — bw/links/leak/area — ride as their own (1, N) tiles now that the

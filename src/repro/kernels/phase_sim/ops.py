@@ -49,7 +49,7 @@ def _pad_axis(a: jnp.ndarray, width: int, value) -> jnp.ndarray:
     return jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)], constant_values=value)
 
 
-def phase_sim(
+def phase_sim(  # repro: traced
     enc: EncodedWorkload,
     rows: Dict[str, jnp.ndarray],
     *,
@@ -70,7 +70,7 @@ def phase_sim(
         jnp.asarray(enc.parent_mask, f32)
     )
     wlhot = jnp.zeros((t, n_wl), f32).at[:t_real].set(
-        jnp.asarray(np.asarray(enc.wl_id)[:, None] == np.arange(n_wl)[None, :], np.float32)
+        jnp.asarray(np.asarray(enc.wl_id)[:, None] == np.arange(n_wl)[None, :], np.float32)  # repro: noqa[host-sync]: enc.wl_id is host-static workload metadata, folded at trace time
     )
 
     task_pe = _pad_axis(jnp.asarray(rows["task_pe"], jnp.int32), t, 0)

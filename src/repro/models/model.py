@@ -60,8 +60,8 @@ class RunFlags:
 def _attn_init(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
     d, h, k_, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     keys = jax.random.split(key, 4)
-    s_in = 1.0 / math.sqrt(d)
-    s_out = 1.0 / math.sqrt(h * dh)
+    s_in = 1.0 / math.sqrt(d)  # repro: noqa[f64-promote]: cfg dims are static Python ints
+    s_out = 1.0 / math.sqrt(h * dh)  # repro: noqa[f64-promote]: cfg dims are static Python ints
     p = {
         "wq": (jax.random.normal(keys[0], (d, h * dh)) * s_in).astype(dtype),
         "wk": (jax.random.normal(keys[1], (d, k_ * dh)) * s_in).astype(dtype),
